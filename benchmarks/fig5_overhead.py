@@ -1,0 +1,91 @@
+"""Paper Fig. 5: relative overhead vs synchronization-free-region size.
+
+Sweeps the SFR (compute cycles between barriers) and reports cycle and
+energy overhead per variant, plus the minimum SFR that keeps overhead at or
+below 10% -- the paper's headline: SCU 42 cycles vs TAS 1622 / SW 1771
+(energy, 8 cores), a >41x reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.scu.energy import DEFAULT_ENERGY, Activity
+from repro.core.scu.programs import run_barrier_bench
+
+PAPER_MIN_SFR_ENERGY_8 = {"SCU": 42.0, "TAS": 1622.0, "SW": 1771.0}
+
+SFRS = [8, 16, 32, 42, 64, 100, 160, 250, 400, 640, 1000, 1600, 2500, 4000]
+
+
+def _overheads(variant: str, n: int, sfr: int, iters: int) -> Tuple[float, float]:
+    r = run_barrier_bench(variant, n, sfr=sfr, iters=iters)
+    cyc_overhead = (r.cycles_per_iter - sfr) / sfr
+    st, it = r.stats, r.iters
+    act = Activity(
+        comp=st.total_comp / it, wait=st.total_wait / it, gated=st.total_gated / it,
+        tcdm=st.total_tcdm / it, scu=st.total_scu / it, cycles=st.cycles / it,
+    )
+    e_total = DEFAULT_ENERGY.energy_pj(act)
+    e_ideal = sfr * DEFAULT_ENERGY.nop_power_per_cycle_pj(n)
+    return cyc_overhead, (e_total - e_ideal) / e_ideal
+
+
+def min_sfr_at(threshold: float, curve: List[Tuple[int, float]]) -> float:
+    """Smallest SFR with overhead <= threshold (log-linear interpolation)."""
+    prev = None
+    for sfr, ov in curve:
+        if ov <= threshold:
+            if prev is None:
+                return float(sfr)
+            sfr0, ov0 = prev
+            # linear interpolate in 1/sfr space (overhead ~ cost/sfr)
+            frac = (ov0 - threshold) / max(ov0 - ov, 1e-12)
+            return sfr0 + frac * (sfr - sfr0)
+        prev = (sfr, ov)
+    return float("inf")
+
+
+def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
+    curves = {}
+    for variant in ("SCU", "TAS", "SW"):
+        cyc_curve, en_curve = [], []
+        for sfr in SFRS:
+            c, e = _overheads(variant, n_cores, sfr, iters)
+            cyc_curve.append((sfr, c))
+            en_curve.append((sfr, e))
+        curves[variant] = {"cycles": cyc_curve, "energy": en_curve}
+
+    result = {}
+    for variant, cc in curves.items():
+        result[variant] = {
+            "min_sfr_cycles_10pct": min_sfr_at(0.10, cc["cycles"]),
+            "min_sfr_energy_10pct": min_sfr_at(0.10, cc["energy"]),
+            "paper_min_sfr_energy": PAPER_MIN_SFR_ENERGY_8[variant],
+            "curves": cc,
+        }
+
+    if verbose:
+        print(f"\n== Fig. 5: overhead vs SFR size ({n_cores} cores) ==")
+        hdr = "SFR:      " + "".join(f"{s:>8d}" for s in SFRS)
+        print(hdr)
+        for variant in ("SCU", "TAS", "SW"):
+            row = curves[variant]["energy"]
+            print(
+                f"{variant:4s} E-ovh " + "".join(f"{ov*100:7.1f}%" for _, ov in row)
+            )
+        print("\nminimum SFR @ 10% energy overhead (measured vs paper):")
+        for variant in ("SCU", "TAS", "SW"):
+            m = result[variant]["min_sfr_energy_10pct"]
+            p = result[variant]["paper_min_sfr_energy"]
+            print(f"  {variant:4s}: {m:8.1f} cycles   (paper {p:7.1f})")
+        ratio = (
+            result["SW"]["min_sfr_energy_10pct"]
+            / max(result["SCU"]["min_sfr_energy_10pct"], 1e-9)
+        )
+        print(f"  SW/SCU reduction: {ratio:.1f}x (paper: ~41x)")
+    return result
+
+
+if __name__ == "__main__":
+    run()

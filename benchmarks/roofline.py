@@ -1,0 +1,119 @@
+"""§Roofline: three-term analysis per (arch x shape x mesh) from the dry-run.
+
+Terms (per-device, TPU v5e constants):
+
+    compute    = dot_flops / 197 TFLOP/s(bf16)
+    memory     = bytes_accessed / 819 GB/s
+    collective = wire_bytes / 50 GB/s per-chip ICI
+
+All inputs come from the trip-count-aware HLO analysis recorded by
+``repro.launch.dryrun`` (per-device, post-SPMD).  MODEL_FLOPS uses
+6*N_active*D for training (3x forward for fwd+bwd) and 2*N_active*D for
+prefill/decode; the HLO/MODEL ratio exposes remat and padding waste.
+The "roofline fraction" is compute / max(terms): 1.0 = compute-bound at
+peak; the §Perf loop drives the dominant term down.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per chip ICI
+
+LEVERS = {
+    "compute": "raise arithmetic efficiency: cut remat recompute (HLO/MODEL "
+    "ratio), skip masked attention blocks, fuse via Pallas kernels",
+    "memory": "cut HBM round-trips: Pallas flash/SSD kernels keep score and "
+    "state tiles in VMEM; bf16 intermediates; larger fusion regions",
+    "collective": "re-shard: bigger per-shard work, hierarchical/overlapped "
+    "collectives (scu schedule), gradient compression, SP instead of TP "
+    "resharding",
+}
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    h = rec["hlo_analysis"]
+    chips = rec["chips"]
+    m = rec["model"]
+    compute = h["dot_flops_per_device"] / PEAK_FLOPS
+    memory = h["bytes_accessed_per_device"] / HBM_BW
+    collective = h["wire_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    tokens = m["global_batch"] * (m["seq_len"] if m["kind"] != "decode" else 1)
+    n_active = m["n_active_params"]
+    model_flops = (6 if m["kind"] == "train" else 2) * n_active * tokens
+    hlo_global = h["dot_flops_per_device"] * chips
+    frac = compute / max(max(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("sync_strategy", "scu"),
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / max(hlo_global, 1e-30),
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "lever": LEVERS[dominant],
+    }
+
+
+def load_all(art_dir: str = "artifacts/dryrun", mesh: str = "single") -> List[Dict]:
+    rows = []
+    d = Path(art_dir) / mesh
+    if not d.exists():
+        return rows
+    for f in sorted(d.glob("*.json")):
+        if f.stem.count("__") > 1:
+            continue  # §Perf variant artifacts live alongside the baselines
+        rec = json.loads(f.read_text())
+        r = analyze_record(rec)
+        if r is not None:
+            r["file"] = f.name
+            rows.append(r)
+        elif rec.get("applicable") is False:
+            rows.append(
+                {"arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+                 "skip": rec.get("skip_reason", "")}
+            )
+    return rows
+
+
+def run(art_dir: str = "artifacts/dryrun", verbose: bool = True) -> Dict:
+    out = {}
+    for mesh in ("single", "multi"):
+        rows = load_all(art_dir, mesh)
+        out[mesh] = rows
+        if not verbose or not rows:
+            continue
+        print(f"\n== Roofline ({mesh} mesh) ==")
+        print(
+            f"{'arch':22s} {'shape':12s} {'comp ms':>9s} {'mem ms':>9s} "
+            f"{'coll ms':>9s} {'dom':>5s} {'RLfrac':>7s} {'useful':>7s}"
+        )
+        for r in rows:
+            if "skip" in r:
+                print(f"{r['arch']:22s} {r['shape']:12s} SKIP ({r['skip'][:48]}...)")
+                continue
+            print(
+                f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']*1e3:9.1f} "
+                f"{r['memory_s']*1e3:9.1f} {r['collective_s']*1e3:9.1f} "
+                f"{r['dominant'][:4]:>5s} {r['roofline_fraction']:7.3f} "
+                f"{r['useful_ratio']:7.2f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), then the
+Tier-2 roofline read-out from the dry-run artifacts.  The chip-level
+barrier timing benchmark needs its own process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and is invoked as a
+subprocess (device count is locked at jax init).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the slow PCA app")
+    args = ap.parse_args()
+
+    from benchmarks import fig5_overhead, roofline, table1_primitives, table2_apps
+
+    print("#" * 72)
+    print("# Tier 1 -- paper-faithful reproduction (cycle-accurate simulator)")
+    print("#" * 72)
+    table1_primitives.run()
+    fig5_overhead.run()
+    table2_apps.run(include_slow=not args.fast)
+
+    print("\n" + "#" * 72)
+    print("# Tier 2 -- chip-level barrier disciplines (8 host devices)")
+    print("#" * 72)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.jax_barriers"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    print(r.stdout)
+    if r.returncode != 0:
+        print("[jax_barriers] failed:", r.stderr[-2000:])
+
+    print("\n" + "#" * 72)
+    print("# Tier 2 -- roofline from the multi-pod dry-run artifacts")
+    print("#" * 72)
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

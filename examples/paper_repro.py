@@ -1,0 +1,9 @@
+"""Reproduce the paper's headline numbers on the Tier-1 simulator.
+
+    PYTHONPATH=src python examples/paper_repro.py
+"""
+
+from benchmarks import fig5_overhead, table1_primitives
+
+table1_primitives.run()
+fig5_overhead.run()

@@ -1,0 +1,36 @@
+"""Quickstart: build a small model, run a forward pass, take one train step.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config, list_archs
+from repro.launch.mesh import make_host_mesh
+from repro.models.lm import init_lm, lm_forward, lm_loss
+from repro.train.data import SyntheticLM
+from repro.train.loop import TrainerConfig, train
+from repro.train.optimizer import OptConfig
+from repro.train.step import TrainConfig
+
+print("available architectures:", ", ".join(list_archs()))
+
+cfg = get_smoke_config("qwen3-moe-30b-a3b")  # MoE family, reduced size
+print(f"\nusing {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+      f"experts={cfg.moe.n_experts} top-{cfg.moe.top_k}")
+
+params = init_lm(jax.random.PRNGKey(0), cfg)
+tokens = jnp.zeros((2, 32), jnp.int32)
+hidden = lm_forward(params, cfg, tokens=tokens)
+print("forward:", hidden.shape, hidden.dtype)
+
+mesh = make_host_mesh(data=2, model=2)
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+tcfg = TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=5), remat_policy="none")
+_, _, hist = train(
+    cfg, tcfg, TrainerConfig(steps=10, log_every=2, ckpt_every=10**9),
+    mesh, lambda i: data.batch(i, batch_size=8),
+)
+print(f"\nloss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over 10 steps")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + greedy decode on a reduced config.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "phi4-mini-3.8b",
+     "--smoke", "--batch", "4", "--prompt-len", "32", "--gen", "16"],
+    check=True,
+)

@@ -1,0 +1,3 @@
+"""repro: SCU-paper reproduction -- cycle-accurate Tier 1 + TPU-pod Tier 2."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,61 @@
+"""Tier-1 faithful reproduction: cycle-accurate SCU cluster simulator."""
+
+from .energy import DEFAULT_ENERGY, Activity, EnergyModel, calibrate
+from .engine import Cluster, ClusterStats, Compute, CoreState, Mem, Scu
+from .extensions import Barrier, EventFifo, Mutex, Notifier
+from .primitives import (
+    DEFAULT_COSTS,
+    BarrierState,
+    CostModel,
+    scu_barrier,
+    scu_mutex_section,
+    sw_barrier,
+    sw_mutex_section,
+    tas_barrier,
+    tas_mutex_section,
+)
+from .programs import (
+    MicrobenchResult,
+    run_barrier_bench,
+    run_mutex_bench,
+    run_nop_bench,
+)
+from .scu_unit import EV, SCU, BaseUnit
+from .apps import APPS, AppModel, AppResult, run_app
+
+__all__ = [
+    "APPS",
+    "Activity",
+    "AppModel",
+    "AppResult",
+    "Barrier",
+    "BarrierState",
+    "BaseUnit",
+    "Cluster",
+    "ClusterStats",
+    "Compute",
+    "CoreState",
+    "CostModel",
+    "DEFAULT_COSTS",
+    "DEFAULT_ENERGY",
+    "EV",
+    "EnergyModel",
+    "EventFifo",
+    "Mem",
+    "MicrobenchResult",
+    "Mutex",
+    "Notifier",
+    "SCU",
+    "Scu",
+    "calibrate",
+    "run_app",
+    "run_barrier_bench",
+    "run_mutex_bench",
+    "run_nop_bench",
+    "scu_barrier",
+    "scu_mutex_section",
+    "sw_barrier",
+    "sw_mutex_section",
+    "tas_barrier",
+    "tas_mutex_section",
+]

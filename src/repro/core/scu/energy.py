@@ -1,0 +1,168 @@
+"""Cluster energy model (paper Sec. 6.2: 22 nm, 0.8 V, 25 C, 350 MHz).
+
+The paper measures post-layout energy of the whole cluster; we model it as a
+linear combination of activity counters produced by the cycle-accurate
+simulation:
+
+    E = e_comp * comp  + e_wait * wait + e_gate * gated
+      + e_mem  * tcdm  + e_scu  * scu  + e_static * wall_cycles
+
+with per-event/energy coefficients in pJ:
+
+  comp   -- core-cycles spent executing (incl. its I$ fetch share),
+  wait   -- core-cycles clocked but held (LINT stall / elw grant window /
+            wake sequencing): pipeline registers + clock tree only,
+  gated  -- clock-gated core-cycles (leakage + local clock root),
+  tcdm   -- TCDM bank accesses incl. the interconnect traversal,
+  scu    -- SCU transactions over the private links,
+  static -- cluster-wide per-cycle constant (leakage + global clock tree;
+            the clock distribution network the paper emphasizes).
+
+The default coefficients are CALIBRATED against the paper's Table 1 energy
+column and the Fig. 5 minimum-SFR anchors (42 / 1622 / 1771 cycles @ 10%
+energy overhead, 8 cores); see ``benchmarks/table1_primitives.py`` for the
+reproduction and fit error, and :func:`calibrate` for the fitting procedure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from .engine import ClusterStats
+
+__all__ = ["EnergyModel", "DEFAULT_ENERGY", "Activity", "calibrate"]
+
+F_CLK = 350e6  # Hz, the paper's reported operating point
+
+
+@dataclasses.dataclass(frozen=True)
+class Activity:
+    """Activity counters for an execution window (absolute, not per-iter)."""
+
+    comp: float
+    wait: float
+    gated: float
+    tcdm: float
+    scu: float
+    cycles: float
+
+    @staticmethod
+    def from_stats(st: ClusterStats) -> "Activity":
+        return Activity(
+            comp=st.total_comp,
+            wait=st.total_wait,
+            gated=st.total_gated,
+            tcdm=st.total_tcdm,
+            scu=st.total_scu,
+            cycles=st.cycles,
+        )
+
+    def vector(self) -> Tuple[float, ...]:
+        return (self.comp, self.wait, self.gated, self.tcdm, self.scu, self.cycles)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """pJ coefficients; defaults calibrated to the paper (see module doc)."""
+
+    e_comp: float = 2.0
+    e_wait: float = 0.8
+    e_gate: float = 0.2
+    e_mem: float = 1.5
+    e_scu: float = 1.0
+    e_static: float = 12.0
+    # Application (DSP) instruction mix: MACs/SIMD + ~1 TCDM access every
+    # other instruction burn substantially more than the control/spin
+    # instructions the Table-1 microbenchmarks execute.  Calibrated against
+    # the Table-2 application energies (AES: ~68 pJ/cycle cluster-wide).
+    e_dsp: float = 7.0
+    mem_intensity: float = 0.5  # TCDM accesses per DSP compute cycle
+
+    def app_energy_adjustment_pj(self, app_comp_cycles: float) -> float:
+        """Extra energy of ``app_comp_cycles`` core-cycles of DSP work over
+        the plain ``e_comp`` charge already accounted by the simulator."""
+        return app_comp_cycles * (
+            self.e_dsp - self.e_comp + self.mem_intensity * self.e_mem
+        )
+
+    def energy_pj(self, act: Activity) -> float:
+        return (
+            self.e_comp * act.comp
+            + self.e_wait * act.wait
+            + self.e_gate * act.gated
+            + self.e_mem * act.tcdm
+            + self.e_scu * act.scu
+            + self.e_static * act.cycles
+        )
+
+    def energy_nj(self, act: Activity) -> float:
+        return self.energy_pj(act) / 1e3
+
+    def breakdown_pj(self, act: Activity) -> Dict[str, float]:
+        """Per-component energy -- the Fig. 7 analogue."""
+        return {
+            "cores_active": self.e_comp * act.comp + self.e_wait * act.wait,
+            "cores_gated": self.e_gate * act.gated,
+            "tcdm+interco": self.e_mem * act.tcdm,
+            "scu": self.e_scu * act.scu,
+            "static+clktree": self.e_static * act.cycles,
+        }
+
+    def power_mw(self, act: Activity) -> float:
+        """Average power over the window at the paper's 350 MHz."""
+        if act.cycles == 0:
+            return 0.0
+        return self.energy_pj(act) / act.cycles * 1e-12 * F_CLK * 1e3
+
+    def nop_power_per_cycle_pj(self, n_cores: int, n_total: int = 8) -> float:
+        """P_comp,N: cluster energy/cycle with N cores running straight-line
+        code and the rest clock-gated (the paper's 512-nop normalization)."""
+        return (
+            n_cores * self.e_comp
+            + (n_total - n_cores) * self.e_gate
+            + self.e_static
+        )
+
+
+DEFAULT_ENERGY = EnergyModel()
+
+
+def calibrate(
+    cells: Sequence[Tuple[Activity, float, int]],
+    sfr_anchors: Sequence[Tuple[Activity, float, int, float]] = (),
+    grids: Dict[str, Sequence[float]] | None = None,
+) -> Tuple[EnergyModel, float]:
+    """Fit coefficients to paper anchors by bounded grid search.
+
+    ``cells``: (per-iteration activity, paper energy in pJ, n_cores).
+    ``sfr_anchors``: (per-iter activity, paper min-SFR cycles @10%, n_cores,
+    weight); the induced constraint is  E_prim == 0.1 * SFR * P_comp,N.
+
+    Returns the best model and its RMS relative error over the cells.
+    """
+    grids = grids or {
+        "e_comp": [1.5, 2.0, 2.5, 3.0],
+        "e_wait": [0.4, 0.8, 1.2],
+        "e_gate": [0.05, 0.1, 0.2],
+        "e_mem": [2.0, 4.0, 6.0, 8.0],
+        "e_scu": [0.5, 1.0, 2.0],
+        "e_static": [2.0, 3.5, 5.0, 7.0],
+    }
+    names = list(grids)
+    best: Tuple[float, EnergyModel] | None = None
+    for combo in itertools.product(*(grids[n] for n in names)):
+        m = EnergyModel(**dict(zip(names, combo)))
+        err = 0.0
+        for act, paper_pj, _n in cells:
+            pred = m.energy_pj(act)
+            err += ((pred - paper_pj) / paper_pj) ** 2
+        for act, sfr, n, w in sfr_anchors:
+            pred_sfr = m.energy_pj(act) / (0.1 * m.nop_power_per_cycle_pj(n))
+            err += w * ((pred_sfr - sfr) / sfr) ** 2
+        if best is None or err < best[0]:
+            best = (err, m)
+    assert best is not None
+    n_cells = max(1, len(cells))
+    return best[1], (best[0] / n_cells) ** 0.5

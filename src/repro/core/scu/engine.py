@@ -1,0 +1,415 @@
+"""Cycle-accurate discrete-event engine for the shared-L1 multiprocessor cluster.
+
+This is the Tier-1, paper-faithful model of the system evaluated in
+
+    Glaser et al., "Energy-Efficient Hardware-Accelerated Synchronization for
+    Shared-L1-Memory Multiprocessor Clusters" (2020).
+
+The cluster consists of
+
+  * ``n_cores`` in-order single-issue PEs (1 op/cycle when not stalled),
+  * a word-interleaved multi-banked TCDM (banking factor 2 by default) behind a
+    single-cycle logarithmic interconnect (LINT) with per-bank round-robin
+    arbitration and native 3-cycle test-and-set (TAS) transactions,
+  * the SCU: per-core base units (32 event lines, event buffer, event/irq
+    masks, active/sleep/irq FSM, clock-enable control) reached over private
+    single-cycle core<->SCU links, plus shared extensions (notifier, barrier,
+    mutex, event FIFO) -- see :mod:`repro.core.scu.scu_unit` and
+    :mod:`repro.core.scu.extensions`.
+
+Programs are Python generators that yield micro-ops (:class:`Compute`,
+:class:`Mem`, :class:`Scu`); the engine advances one clock cycle at a time and
+resolves arbitration, SCU event generation, sleep/wake-up sequencing and
+clock gating exactly as described in Sec. 4/5 and Fig. 4 of the paper.
+
+Accounting distinguishes *active* core cycles (clock enabled) from *gated*
+cycles -- the quantity behind the paper's energy results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+
+__all__ = [
+    "Compute",
+    "Mem",
+    "Scu",
+    "CoreState",
+    "CoreStats",
+    "ClusterStats",
+    "Cluster",
+    "Program",
+]
+
+
+# ---------------------------------------------------------------------------
+# Micro-ops yielded by core programs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Compute:
+    """``cycles`` of core-local work (ALU/regfile only, no memory traffic)."""
+
+    cycles: int
+
+
+@dataclasses.dataclass
+class Mem:
+    """A TCDM transaction through the LINT.
+
+    kind:
+      ``lw``  -- load word (single cycle when granted; contention stalls)
+      ``sw``  -- store word
+      ``tas`` -- atomic test-and-set: returns current value, writes -1.
+                 Occupies the bank for :attr:`Cluster.TAS_CYCLES` cycles
+                 ("TAS transactions take just three cycles", Sec. 4.1).
+    """
+
+    kind: str
+    addr: int
+    data: int = 0
+
+
+@dataclasses.dataclass
+class Scu:
+    """A transaction on the private core<->SCU link (single cycle, Sec. 4.4).
+
+    kind:
+      ``elw``   -- event-load-word (Sec. 5): read `addr` in the aliased SCU
+                   space; the SCU withholds the grant until a masked-in event
+                   is buffered, clock-gating the core meanwhile.  The read
+                   response carries extension-specific data.
+      ``read``  -- plain (non-blocking) read of an SCU register.
+      ``write`` -- plain write (mutex unlock, notifier trigger, mask setup...).
+    """
+
+    kind: str
+    addr: Any
+    data: int = 0
+
+
+Program = Callable[["Cluster", int], Generator]
+
+
+class CoreState(enum.Enum):
+    ACTIVE = 0  # clock enabled, executing / issuing
+    STALL_MEM = 1  # clock enabled, waiting for a TCDM grant
+    STALL_SCU = 2  # clock enabled, elw issued, pre-gate window (Fig. 4 left)
+    SLEEP = 3  # clock gated by the SCU
+    WAKING = 4  # event seen; grant/response sequencing (Fig. 4 right)
+    DONE = 5
+
+
+@dataclasses.dataclass
+class CoreStats:
+    active_cycles: int = 0  # clock enabled (= comp + wait)
+    comp_cycles: int = 0  # clocked and executing/issuing (full core power)
+    wait_cycles: int = 0  # clocked but pipeline held (stall/grant/wake)
+    gated_cycles: int = 0  # clock gated by the SCU
+    stall_cycles: int = 0  # subset of wait: stalled on LINT contention
+    instructions: int = 0
+    tcdm_accesses: int = 0
+    tas_accesses: int = 0
+    scu_accesses: int = 0
+    finished_at: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    cycles: int = 0
+    cores: List[CoreStats] = dataclasses.field(default_factory=list)
+    bank_conflicts: int = 0
+    scu_events: int = 0
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def total_active(self) -> int:
+        return sum(c.active_cycles for c in self.cores)
+
+    @property
+    def total_comp(self) -> int:
+        return sum(c.comp_cycles for c in self.cores)
+
+    @property
+    def total_wait(self) -> int:
+        return sum(c.wait_cycles for c in self.cores)
+
+    @property
+    def total_gated(self) -> int:
+        return sum(c.gated_cycles for c in self.cores)
+
+    @property
+    def total_tcdm(self) -> int:
+        return sum(c.tcdm_accesses for c in self.cores)
+
+    @property
+    def total_scu(self) -> int:
+        return sum(c.scu_accesses for c in self.cores)
+
+
+class _Core:
+    """Execution context of one PE."""
+
+    __slots__ = (
+        "cid",
+        "gen",
+        "state",
+        "busy",
+        "pending",
+        "resume_value",
+        "wake_countdown",
+        "sleep_entry",
+        "stats",
+        "elw_issued",
+    )
+
+    def __init__(self, cid: int, gen: Generator):
+        self.cid = cid
+        self.gen = gen
+        self.state = CoreState.ACTIVE
+        self.busy = 0  # remaining Compute cycles
+        self.pending: Optional[Any] = None  # outstanding Mem/Scu op
+        self.resume_value: int = 0  # data returned to the generator
+        self.wake_countdown = 0
+        self.sleep_entry = 0  # busy-release window before clock gating
+        self.stats = CoreStats()
+        self.elw_issued = False  # extension trigger-once guard (Sec. 5)
+
+
+class Cluster:
+    """The cycle-accurate cluster model.
+
+    Parameters
+    ----------
+    n_cores:
+        Number of PEs (the paper's cluster: 8; SCU supports up to 16).
+    banking_factor:
+        TCDM banks = ``banking_factor * n_cores`` (paper: 2).
+    scu:
+        An :class:`repro.core.scu.scu_unit.SCU` instance (constructed by the
+        caller so extensions are configurable).  May be ``None`` for purely
+        software experiments.
+    """
+
+    TAS_CYCLES = 3  # Sec. 4.1: "TAS transactions take just three cycles"
+    # Fig. 4 timing: elw issue -> busy release -> clock gate takes 2 cycles on
+    # the way in; event -> clock enable + grant -> response -> resume takes 4
+    # cycles on the way out.  Together with the issue and address-setup cycles
+    # this yields the paper's 6 active core cycles per handled
+    # synchronization point (Sec. 5, Fig. 4).
+    SLEEP_ENTRY_CYCLES = 1
+    WAKE_CYCLES = 4
+
+    def __init__(self, n_cores: int, scu=None, banking_factor: int = 2):
+        self.n_cores = n_cores
+        self.n_banks = banking_factor * n_cores
+        self.scu = scu
+        if scu is not None:
+            scu.attach(self)
+        self.tcdm: Dict[int, int] = {}
+        self._bank_locked_until = [0] * self.n_banks  # TAS write-back lockout
+        self._rr = [0] * self.n_banks  # per-bank round-robin pointers
+        self.cores: List[_Core] = []
+        self.cycle = 0
+        self.stats = ClusterStats()
+        self._trace: List[Tuple[int, int, str]] = []
+        self.trace_enabled = False
+
+    # ------------------------------------------------------------------ api
+    def load(self, programs: List[Program]) -> None:
+        assert len(programs) == self.n_cores
+        self.cores = [_Core(i, prog(self, i)) for i, prog in enumerate(programs)]
+        self.stats = ClusterStats(cores=[c.stats for c in self.cores])
+
+    def run(self, max_cycles: int = 10_000_000) -> ClusterStats:
+        while not all(c.state is CoreState.DONE for c in self.cores):
+            if self.cycle >= max_cycles:
+                raise RuntimeError(
+                    f"cluster did not finish within {max_cycles} cycles "
+                    f"(states: {[c.state.name for c in self.cores]})"
+                )
+            self.step()
+        self.stats.cycles = self.cycle
+        return self.stats
+
+    # ---------------------------------------------------------------- cycle
+    def step(self) -> None:
+        """Advance the whole cluster by one clock cycle."""
+        # Phase 0: extension comparators are registered -- events caused by
+        # the *previous* cycle's triggers become visible in the buffers now.
+        if self.scu is not None:
+            n_ev = self.scu.evaluate(self.cycle)
+            self.stats.scu_events += n_ev
+
+        # Phase 1: issue -- every clocked core makes progress / places reqs.
+        for core in self.cores:
+            self._issue(core)
+
+        # Phase 2: TCDM / LINT arbitration (per-bank round robin).
+        self._arbitrate_tcdm()
+
+        # Phase 3: SCU -- private links, elw grant logic, extension triggers.
+        if self.scu is not None:
+            self._service_scu()
+
+        # Phase 4: pending elw transactions are polled against the buffers.
+        if self.scu is not None:
+            self._wake_cores()
+
+        # Phase 5: accounting.
+        for core in self.cores:
+            if core.state is CoreState.DONE:
+                continue
+            if core.state is CoreState.SLEEP:
+                core.stats.gated_cycles += 1
+            else:
+                core.stats.active_cycles += 1
+                if core.state is CoreState.ACTIVE:
+                    core.stats.comp_cycles += 1
+                else:
+                    # clocked but held: LINT stall, elw grant window, wake
+                    core.stats.wait_cycles += 1
+                    if core.state is CoreState.STALL_MEM:
+                        core.stats.stall_cycles += 1
+        self.cycle += 1
+
+    # ------------------------------------------------------------ internals
+    def _advance(self, core: _Core, value: int = 0) -> None:
+        """Feed ``value`` into the program generator and fetch the next op."""
+        try:
+            op = core.gen.send(value) if core.stats.instructions else next(core.gen)
+        except StopIteration:
+            core.state = CoreState.DONE
+            core.stats.finished_at = self.cycle
+            core.pending = None
+            return
+        core.stats.instructions += 1
+        if isinstance(op, Compute):
+            core.busy = max(0, op.cycles - 1)  # this cycle counts as work
+            core.state = CoreState.ACTIVE
+            core.pending = None
+        elif isinstance(op, Mem):
+            core.pending = op
+            core.state = CoreState.STALL_MEM
+        elif isinstance(op, Scu):
+            core.pending = op
+            core.state = CoreState.STALL_SCU
+        else:  # pragma: no cover - programming error
+            raise TypeError(f"bad micro-op {op!r}")
+
+    def _issue(self, core: _Core) -> None:
+        if core.state is CoreState.DONE:
+            return
+        if core.state is CoreState.ACTIVE:
+            if core.busy > 0:
+                core.busy -= 1
+                return
+            self._advance(core, core.resume_value)
+        elif core.state is CoreState.WAKING:
+            core.wake_countdown -= 1
+            if core.wake_countdown <= 0:
+                core.state = CoreState.ACTIVE
+                # response data already latched in resume_value
+                self._advance(core, core.resume_value)
+        elif core.state is CoreState.STALL_SCU and core.elw_issued:
+            # busy-release window (Fig. 4 left): active, then clock gated
+            core.sleep_entry -= 1
+            if core.sleep_entry <= 0:
+                core.state = CoreState.SLEEP
+
+    def _bank_of(self, addr: int) -> int:
+        return (addr >> 2) % self.n_banks
+
+    def _arbitrate_tcdm(self) -> None:
+        by_bank: Dict[int, List[_Core]] = {}
+        for core in self.cores:
+            if core.state is CoreState.STALL_MEM and isinstance(core.pending, Mem):
+                by_bank.setdefault(self._bank_of(core.pending.addr), []).append(core)
+        for bank, reqs in by_bank.items():
+            if self._bank_locked_until[bank] > self.cycle:
+                self.stats.bank_conflicts += len(reqs)
+                continue
+            # round-robin election among contenders
+            reqs.sort(key=lambda c: (c.cid - self._rr[bank]) % self.n_cores)
+            winner = reqs[0]
+            self._rr[bank] = (winner.cid + 1) % self.n_cores
+            self.stats.bank_conflicts += len(reqs) - 1
+            op: Mem = winner.pending  # type: ignore[assignment]
+            winner.stats.tcdm_accesses += 1
+            if op.kind == "lw":
+                value = self.tcdm.get(op.addr, 0)
+            elif op.kind == "sw":
+                self.tcdm[op.addr] = op.data
+                value = 0
+            elif op.kind == "tas":
+                value = self.tcdm.get(op.addr, 0)
+                self.tcdm[op.addr] = -1
+                winner.stats.tas_accesses += 1
+                # "-1 written back to memory in the next cycle before any
+                # other core gets its request granted" (Sec. 4.1): the LINT
+                # sequences the write-back through a forwarding write buffer
+                # (atomicity is guaranteed by the arbitration order), and the
+                # requesting core sees the full 3-cycle TAS latency.
+                winner.busy = self.TAS_CYCLES - 1
+            else:  # pragma: no cover
+                raise ValueError(op.kind)
+            # single-cycle TCDM: response consumed next cycle
+            winner.pending = None
+            winner.resume_value = value
+            winner.state = CoreState.ACTIVE
+
+    def _service_scu(self) -> None:
+        for core in self.cores:
+            if core.state is not CoreState.STALL_SCU or not isinstance(
+                core.pending, Scu
+            ):
+                continue
+            op: Scu = core.pending
+            core.stats.scu_accesses += 1
+            if op.kind in ("write", "read"):
+                value = self.scu.access(core.cid, op.kind, op.addr, op.data)
+                core.pending = None
+                core.resume_value = value if value is not None else 0
+                core.state = CoreState.ACTIVE
+            elif op.kind == "elw":
+                if not core.elw_issued:
+                    # Trigger the addressed extension exactly once per elw
+                    # transaction (FSM trigger-once guard, Sec. 5).
+                    self.scu.elw_trigger(core.cid, op.addr)
+                    core.elw_issued = True
+                    # Grant withheld for now; if the event is already buffered
+                    # the phase-4 poll grants in this same cycle with no
+                    # power management ("to not waste any cycles", Sec. 5).
+                    core.sleep_entry = self.SLEEP_ENTRY_CYCLES
+            else:  # pragma: no cover
+                raise ValueError(op.kind)
+
+    def _wake_cores(self) -> None:
+        """Phase 4: poll every in-flight elw against the event buffers."""
+        for core in self.cores:
+            if core.pending is None or not core.elw_issued:
+                continue
+            if core.state not in (CoreState.STALL_SCU, CoreState.SLEEP):
+                continue
+            granted, value = self.scu.elw_poll(core.cid, core.pending.addr)
+            if granted:
+                never_slept = core.state is CoreState.STALL_SCU
+                core.pending = None
+                core.elw_issued = False
+                core.resume_value = value
+                core.state = CoreState.WAKING
+                # Immediate grants skip the clock-gate entry latency but still
+                # pay grant + response + resume.
+                core.wake_countdown = (
+                    self.WAKE_CYCLES - 1 if never_slept else self.WAKE_CYCLES
+                )
+
+    # ------------------------------------------------------------- helpers
+    def poke(self, addr: int, value: int) -> None:
+        self.tcdm[addr] = value
+
+    def peek(self, addr: int) -> int:
+        return self.tcdm.get(addr, 0)

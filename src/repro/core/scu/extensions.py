@@ -1,0 +1,132 @@
+"""SCU extensions: notifier, barrier, mutex, event FIFO (paper Sec. 4.3).
+
+Extensions are shared blocks that generate *per-core* events; the per-core
+events of all instances of one extension type are OR-combined onto a single
+event line per type (Sec. 4.3, last paragraph) -- lines ``EV.BARRIER`` /
+``EV.MUTEX`` / ``EV.FIFO`` / ``EV.NOTIFIER0..7``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+__all__ = ["Notifier", "Barrier", "Mutex", "EventFifo"]
+
+_EV_BARRIER = 8
+_EV_MUTEX = 9
+_EV_FIFO = 10
+
+
+@dataclasses.dataclass
+class Notifier:
+    """Any-to-any matrix-style core-to-core signaling (8 notifier events)."""
+
+    n_cores: int
+
+    def trigger(self, event: int, target_mask: int, base_units) -> None:
+        assert 0 <= event < 8
+        if target_mask == 0:  # all-zero -> broadcast (Sec. 4.3)
+            target_mask = (1 << self.n_cores) - 1
+        for cid in range(self.n_cores):
+            if target_mask & (1 << cid):
+                base_units[cid].buffer_set(event)
+
+
+@dataclasses.dataclass
+class Barrier:
+    """Hardware barrier: worker/target masks + arrival status register.
+
+    A *worker* subset must arrive; once ``status == worker_mask`` an event is
+    generated for every core in the *target* subset and the status register
+    clears (ready for immediate reuse -- barriers are commonly back-to-back).
+    """
+
+    index: int
+    n_cores: int
+    worker_mask: int = 0
+    target_mask: int = 0
+    status: int = 0
+    _fired: bool = dataclasses.field(default=False, repr=False)
+
+    def __post_init__(self):
+        full = (1 << self.n_cores) - 1
+        if self.worker_mask == 0:
+            self.worker_mask = full
+        if self.target_mask == 0:
+            self.target_mask = full
+
+    def arrive(self, cid: int, base_units) -> None:
+        self.status |= 1 << cid
+
+    def evaluate(self, base_units) -> int:
+        if self.worker_mask and (self.status & self.worker_mask) == self.worker_mask:
+            n = 0
+            for cid in range(self.n_cores):
+                if self.target_mask & (1 << cid):
+                    base_units[cid].buffer_set(_EV_BARRIER)
+                    n += 1
+            self.status = 0
+            return n
+        return 0
+
+
+@dataclasses.dataclass
+class Mutex:
+    """Hardware mutex: pending-request queue + election + message passing.
+
+    ``try_lock`` registers a request; ``evaluate`` elects exactly one pending
+    core when the mutex is free and sends it the mutex event.  ``unlock``
+    releases and carries a 32-bit message delivered to the next elected core
+    over the elw response channel (Sec. 5).
+    """
+
+    index: int
+    n_cores: int
+    owner: Optional[int] = None
+    message: int = 0
+    pending: Deque[int] = dataclasses.field(default_factory=deque)
+
+    def try_lock(self, cid: int, base_units) -> None:
+        if cid not in self.pending and self.owner != cid:
+            self.pending.append(cid)
+
+    def unlock(self, cid: int, message: int, base_units) -> None:
+        if self.owner == cid:
+            self.owner = None
+            self.message = message
+
+    def evaluate(self, base_units) -> int:
+        if self.owner is None and self.pending:
+            elected = self.pending.popleft()
+            self.owner = elected
+            base_units[elected].buffer_set(_EV_MUTEX)
+            return 1
+        return 0
+
+
+@dataclasses.dataclass
+class EventFifo:
+    """Up to 256 cluster-external events over an async 8-bit event bus."""
+
+    depth: int = 16
+    fifo: Deque[int] = dataclasses.field(default_factory=deque)
+    dropped: int = 0
+
+    def push(self, event_id: int) -> None:
+        assert 0 <= event_id < 256
+        if len(self.fifo) >= self.depth:
+            self.dropped += 1
+            return
+        self.fifo.append(event_id)
+
+    def pop(self) -> Optional[int]:
+        return self.fifo.popleft() if self.fifo else None
+
+    def evaluate(self, base_units) -> int:
+        if self.fifo:
+            for u in base_units:
+                u.buffer_set(_EV_FIFO)
+            return 1
+        return 0

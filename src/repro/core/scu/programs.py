@@ -1,0 +1,146 @@
+"""Microbenchmark programs reproducing the paper's Sec. 6.3 experiments.
+
+``primitive_cost`` mirrors the paper's methodology: "we let the involved
+cores execute a loop eight times that contains the respective primitive 32
+times and average the resulting cycle count".  The synchronization-free
+region (SFR) between primitives is a run of ``Compute`` cycles (the paper
+uses ``nop`` runs), tunable to sweep Fig. 5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from .engine import Cluster, ClusterStats, Compute
+from .primitives import (
+    DEFAULT_COSTS,
+    BarrierState,
+    scu_barrier,
+    scu_mutex_section,
+    sw_barrier,
+    sw_mutex_section,
+    tas_barrier,
+    tas_mutex_section,
+)
+from .scu_unit import SCU
+
+__all__ = ["MicrobenchResult", "run_barrier_bench", "run_mutex_bench", "run_nop_bench"]
+
+
+@dataclasses.dataclass
+class MicrobenchResult:
+    variant: str
+    primitive: str
+    n_cores: int
+    sfr: int
+    iters: int
+    cycles_total: int
+    cycles_per_iter: float
+    prim_cycles: float  # cycles_per_iter - ideal (SFR resp. N*T_crit)
+    active_core_cycles_per_iter: float
+    gated_core_cycles_per_iter: float
+    tcdm_per_iter: float
+    scu_per_iter: float
+    stats: ClusterStats
+
+
+def _make_cluster(n_cores: int) -> Cluster:
+    return Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores))
+
+
+def _collect(
+    variant: str,
+    primitive: str,
+    cl: Cluster,
+    n_cores: int,
+    sfr: int,
+    iters: int,
+    ideal_per_iter: float,
+    warmup_stats: Optional[Tuple[int, Dict[str, float]]] = None,
+) -> MicrobenchResult:
+    st = cl.run()
+    per_iter = st.cycles / iters
+    return MicrobenchResult(
+        variant=variant,
+        primitive=primitive,
+        n_cores=n_cores,
+        sfr=sfr,
+        iters=iters,
+        cycles_total=st.cycles,
+        cycles_per_iter=per_iter,
+        prim_cycles=per_iter - ideal_per_iter,
+        active_core_cycles_per_iter=st.total_active / iters,
+        gated_core_cycles_per_iter=st.total_gated / iters,
+        tcdm_per_iter=st.total_tcdm / iters,
+        scu_per_iter=st.total_scu / iters,
+        stats=st,
+    )
+
+
+def run_barrier_bench(
+    variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None
+) -> MicrobenchResult:
+    """Loop of ``iters`` (SFR-compute + barrier) on every core."""
+    cl = _make_cluster(n_cores)
+    bstate = BarrierState(n_cores)
+    cm = cost_model or DEFAULT_COSTS
+
+    def program(cluster, cid):
+        for _ in range(iters):
+            if sfr > 0:
+                yield Compute(sfr)
+            if variant == "SCU":
+                yield from scu_barrier(cluster, cid)
+            elif variant == "TAS":
+                yield from tas_barrier(cluster, cid, bstate, cm)
+            elif variant == "SW":
+                yield from sw_barrier(cluster, cid, bstate, cm)
+            else:
+                raise ValueError(variant)
+
+    cl.load([program] * n_cores)
+    return _collect(variant, "barrier", cl, n_cores, sfr, iters, float(sfr))
+
+
+def run_mutex_bench(
+    variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
+    cost_model=None,
+) -> MicrobenchResult:
+    """Loop of (SFR-compute + critical section) on every core.
+
+    Following the paper, the reported primitive cost is the overhead over the
+    ideal ``N_C * T_crit`` serialization of the critical sections
+    (``T_ideal = N_C T_crit``, Sec. 6.3).
+    """
+    cl = _make_cluster(n_cores)
+    cm = cost_model or DEFAULT_COSTS
+
+    def program(cluster, cid):
+        for _ in range(iters):
+            if sfr > 0:
+                yield Compute(sfr)
+            if variant == "SCU":
+                yield from scu_mutex_section(cluster, cid, t_crit)
+            elif variant == "TAS":
+                yield from tas_mutex_section(cluster, cid, t_crit, cm)
+            elif variant == "SW":
+                yield from sw_mutex_section(cluster, cid, t_crit, cm)
+            else:
+                raise ValueError(variant)
+
+    cl.load([program] * n_cores)
+    ideal = float(n_cores * t_crit + sfr)
+    return _collect(variant, f"mutex_t{t_crit}", cl, n_cores, sfr, iters, ideal)
+
+
+def run_nop_bench(n_cores: int, cycles: int = 512) -> ClusterStats:
+    """``cycles`` of straight-line compute on every core (the paper's 512-nop
+    run used to normalize power, Sec. 6.3)."""
+    cl = _make_cluster(n_cores)
+
+    def program(cluster, cid):
+        yield Compute(cycles)
+
+    cl.load([program] * n_cores)
+    return cl.run()

@@ -1,0 +1,210 @@
+"""SCU base units and top-level unit (paper Sec. 4.2-4.4).
+
+One *base unit* per core provides:
+
+  * 32 level-sensitive event lines latched into an *event buffer*,
+  * an *event mask* (which buffered events allow elw to complete) and an
+    *interrupt mask* (which trigger the irq FSM state; Sec. 5.1),
+  * the active/sleep/interrupt FSM and the core clock-enable control --
+    realized in :class:`repro.core.scu.engine.Cluster` by the grant-withhold
+    and wake sequencing driven from :meth:`SCU.elw_poll`.
+
+Extensions (notifier / barrier / mutex / event FIFO) are shared and generate
+per-core events; see :mod:`repro.core.scu.extensions`.
+
+Addressing: the real SCU aliases a 1 Kibit address space per core over the
+private links.  We model addresses symbolically as tuples, e.g.::
+
+    ("barrier", 0, "wait_all")      elw: arrive + sleep until barrier fires
+    ("mutex", 0, "lock")            elw: try-lock, sleep until elected
+    ("mutex", 0, "unlock")          write: release, wake next waiter
+    ("notifier", 3, "trigger")      write: send event 3 to mask in data
+    ("notifier", 3, "wait")         elw: sleep until notifier event 3
+    ("event", "wait_any")           elw: sleep until any masked event
+    ("mask", "event")               write: set event mask
+    ("buffer", "clear")             write: clear event buffer bits in data
+
+Event line allocation (32 lines, Sec. 4.2):
+  0..7    notifier events 0..7
+  8       barrier event (per-core OR over all barrier instances, Sec. 4.3)
+  9       mutex event (OR over all mutex instances)
+  10      event-FIFO non-empty
+  11..31  external / specialized-PE events (available to users)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from .extensions import Barrier, EventFifo, Mutex, Notifier
+
+__all__ = ["EV", "BaseUnit", "SCU"]
+
+
+class EV:
+    """Event line numbers."""
+
+    NOTIFIER0 = 0  # .. NOTIFIER7 = 7
+    BARRIER = 8
+    MUTEX = 9
+    FIFO = 10
+    EXT0 = 11
+
+
+@dataclasses.dataclass
+class BaseUnit:
+    """Per-core event buffer / masks (Sec. 4.2)."""
+
+    cid: int
+    event_buffer: int = 0
+    event_mask: int = 0
+    irq_mask: int = 0
+    notifier_target_mask: int = 0  # target register for read-triggered notify
+
+    def buffer_set(self, line: int) -> None:
+        self.event_buffer |= 1 << line
+
+    def buffer_clear(self, bits: int) -> None:
+        self.event_buffer &= ~bits
+
+    def pending_masked(self) -> int:
+        return self.event_buffer & self.event_mask
+
+    def pending_irq(self) -> int:
+        return self.event_buffer & self.irq_mask
+
+
+class SCU:
+    """Top-level synchronization and communication unit.
+
+    Parameters mirror the paper's design-time knobs: ``n_barriers``
+    (:math:`N_B`, paper default ``n_cores/2``) and ``n_mutexes``
+    (:math:`N_{Mx}`, paper default 1).
+    """
+
+    def __init__(
+        self,
+        n_cores: int,
+        n_barriers: Optional[int] = None,
+        n_mutexes: int = 1,
+        fifo_depth: int = 16,
+    ):
+        self.n_cores = n_cores
+        n_barriers = max(1, n_cores // 2) if n_barriers is None else n_barriers
+        self.base: List[BaseUnit] = [BaseUnit(cid=i) for i in range(n_cores)]
+        self.barriers: List[Barrier] = [
+            Barrier(index=i, n_cores=n_cores) for i in range(n_barriers)
+        ]
+        self.mutexes: List[Mutex] = [
+            Mutex(index=i, n_cores=n_cores) for i in range(n_mutexes)
+        ]
+        self.notifier = Notifier(n_cores=n_cores)
+        self.fifo = EventFifo(depth=fifo_depth)
+        self.cluster = None
+        # response data latched per core for the in-flight elw (Fig. 4: the
+        # read response carries the event buffer or extension data).
+        self._elw_response: Dict[int, int] = {}
+
+    # ----------------------------------------------------------------- wiring
+    def attach(self, cluster) -> None:
+        self.cluster = cluster
+
+    # ------------------------------------------------------------ plain access
+    def access(self, cid: int, kind: str, addr: Any, data: int = 0) -> Optional[int]:
+        """Single-cycle read/write over the private link (non-elw)."""
+        unit = self.base[cid]
+        tag = addr[0]
+        if kind == "write":
+            if tag == "mask":
+                if addr[1] == "event":
+                    unit.event_mask = data
+                else:
+                    unit.irq_mask = data
+            elif tag == "buffer":
+                unit.buffer_clear(data)
+            elif tag == "notifier":
+                self.notifier.trigger(addr[1], data, self.base)
+            elif tag == "mutex":
+                if addr[2] == "unlock":
+                    self.mutexes[addr[1]].unlock(cid, data, self.base)
+            elif tag == "barrier":
+                b = self.barriers[addr[1]]
+                if addr[2] == "workers":
+                    b.worker_mask = data
+                elif addr[2] == "targets":
+                    b.target_mask = data
+                elif addr[2] == "arrive_only":
+                    # non-blocking arrival (producer that does not wait)
+                    b.arrive(cid, self.base)
+            elif tag == "target_reg":
+                unit.notifier_target_mask = data
+            return None
+        else:  # read
+            if tag == "buffer":
+                return unit.event_buffer
+            if tag == "barrier":
+                return self.barriers[addr[1]].status
+            if tag == "mutex":
+                return 1 if self.mutexes[addr[1]].owner is not None else 0
+            return 0
+
+    # ------------------------------------------------------------------ elw
+    def elw_trigger(self, cid: int, addr: Any) -> None:
+        """Extension side-effect of an elw transaction (fires exactly once)."""
+        tag = addr[0]
+        if tag == "barrier":
+            if addr[2] in ("wait_all", "arrive_wait"):
+                self.barriers[addr[1]].arrive(cid, self.base)
+            # addr[2] == "wait": pure target wait, no arrival
+        elif tag == "mutex":
+            self.mutexes[addr[1]].try_lock(cid, self.base)
+        elif tag == "notifier" and addr[2] == "trigger_wait":
+            # read-triggered notify using the per-core target register
+            self.notifier.trigger(addr[1], self.base[cid].notifier_target_mask, self.base)
+        # ("event","wait_any") and ("notifier", n, "wait"): no trigger action
+
+    def _wait_mask(self, cid: int, addr: Any) -> int:
+        tag = addr[0]
+        if tag == "barrier":
+            return 1 << EV.BARRIER
+        if tag == "mutex":
+            return 1 << EV.MUTEX
+        if tag == "notifier":
+            return 1 << (EV.NOTIFIER0 + addr[1])
+        if tag == "event":
+            return self.base[cid].event_mask or 0xFFFFFFFF
+        raise ValueError(addr)
+
+    def elw_poll(self, cid: int, addr: Any) -> Tuple[bool, int]:
+        """Grant decision for a pending elw; returns (granted, response)."""
+        unit = self.base[cid]
+        wait_mask = self._wait_mask(cid, addr)
+        hit = unit.event_buffer & wait_mask
+        if not hit:
+            return False, 0
+        # Response channel data (Sec. 5): mutex passes the 32-bit message of
+        # the unlocking core; otherwise the event buffer content is returned.
+        if addr[0] == "mutex":
+            value = self.mutexes[addr[1]].message
+        else:
+            value = unit.event_buffer
+        # Auto-clear (address-controlled in hardware; we always auto-clear the
+        # lines belonging to the waited-on extension, the common case).
+        unit.buffer_clear(wait_mask)
+        return True, value
+
+    # ------------------------------------------------------------- evaluate
+    def evaluate(self, cycle: int) -> int:
+        """Per-cycle extension evaluation -> event generation (phase 4)."""
+        n = 0
+        for b in self.barriers:
+            n += b.evaluate(self.base)
+        for m in self.mutexes:
+            n += m.evaluate(self.base)
+        n += self.fifo.evaluate(self.base)
+        return n
+
+    # ------------------------------------------------------------- external
+    def push_external_event(self, event_id: int) -> None:
+        self.fifo.push(event_id)

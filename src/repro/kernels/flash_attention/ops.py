@@ -1,0 +1,58 @@
+"""Jit-ready wrapper: Pallas flash attention on TPU, flash-vjp ref elsewhere.
+
+``flash_attention(q, k, v)`` takes the models' (b, s, h, d) layout, runs the
+Pallas kernel when a TPU backend is present (or ``interpret=True`` is
+forced), and otherwise falls back to the numerically identical pure-JAX
+flash core (which also provides the backward pass -- the Pallas backward
+kernel is future work; on TPU the forward kernel is wrapped in
+``jax.custom_vjp`` with the flash-recompute backward from
+:mod:`repro.models.layers.flash_core`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.flash_core import flash_attention_core
+from .kernel import flash_attention_fwd
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (b, s, h, d)
+    k: jnp.ndarray,  # (b, s, kvh, d)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    use_pallas = interpret if interpret is not None else _on_tpu()
+    if use_pallas:
+        out = flash_attention_fwd(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=bool(interpret),
+        )
+        return out.transpose(0, 2, 1, 3)
+    g = h // kvh
+    out = flash_attention_core(
+        q.reshape(b, sq, kvh, g, d), k, v, causal, block_q, block_k, 0
+    )
+    return out.reshape(b, sq, h, d)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (head-major layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (b, h, sq, d)
+    k: jnp.ndarray,  # (b, kvh, sk, d)
+    v: jnp.ndarray,  # (b, kvh, sk, d)
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,17 @@
+"""Oracle for the SCU barrier/notifier ops: plain psum semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["barrier_ref", "self_signal_ref"]
+
+
+def barrier_ref(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
+    return jax.lax.psum(arrive, axis)
+
+
+def self_signal_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle of the single-core signal/wait/consume roundtrip."""
+    return x + 1

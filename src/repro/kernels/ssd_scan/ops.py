@@ -1,0 +1,22 @@
+"""Jit wrapper for the SSD scan: Pallas on TPU, chunked-jnp elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.ssm import ssd_chunked
+from .kernel import ssd_scan_fwd
+
+__all__ = ["ssd_scan"]
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool | None = None):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B, C: (b,s,n)."""
+    use_pallas = interpret if interpret is not None else (
+        jax.default_backend() == "tpu"
+    )
+    if use_pallas:
+        return ssd_scan_fwd(x, dt, A, B, C, chunk=chunk, interpret=bool(interpret))
+    y, _ = ssd_chunked(x, dt, A, B[:, :, None, :], C[:, :, None, :], chunk=chunk)
+    return y

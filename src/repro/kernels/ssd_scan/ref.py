@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the SSD scan kernel (single B/C group)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.ssm import ssd_chunked
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 256):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B, C: (b,s,n) single group."""
+    y, _ = ssd_chunked(x, dt, A, B[:, :, None, :], C[:, :, None, :], chunk=chunk)
+    return y

@@ -1,0 +1,357 @@
+"""Trip-count-aware analysis of optimized HLO text.
+
+``jax.stages.Compiled.cost_analysis()`` counts every while-loop body ONCE --
+with scan-over-layers that understates FLOPs, bytes, and collective traffic
+by the layer count.  This module parses the optimized HLO, builds a symbol
+table per computation (operand shapes are not inline in the modern HLO
+dialect), builds the computation call graph (while bodies weighted by
+``known_trip_count``, fusions, calls, conditionals) and accumulates:
+
+  * ``dot_flops``          -- 2 * prod(result) * prod(contracting dims),
+                              weighted by the execution multiplier;
+  * ``bytes_accessed``     -- sum of (operand + result) bytes of top-level
+                              instructions per computation (fusion-boundary
+                              buffers ~ HBM traffic on TPU), weighted;
+  * per-collective counts / result bytes / estimated wire bytes (ring-model
+    per-device estimates using replica group sizes), weighted.
+
+This is the data source for the roofline terms in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloSummary", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)')
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"  # result name
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+"  # result shape(s)
+    r"([\w\-]+)\("  # op name
+)
+_HEADER_PARAM = re.compile(r"([\w\.\-]+)\s*:\s*([a-z0-9]+\[[\d,]*\])")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_CALLEE_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_CALLEE_CTRL = [
+    re.compile(r"condition=%?([\w\.\-]+)"),
+    re.compile(r"true_computation=%?([\w\.\-]+)"),
+    re.compile(r"false_computation=%?([\w\.\-]+)"),
+]
+_CALLEE_FUSED = [
+    re.compile(r"calls=%?([\w\.\-]+)"),
+    re.compile(r"to_apply=%?([\w\.\-]+)"),
+]
+_CALLEE_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLL_CANON = {
+    "all-reduce": "all-reduce", "all-reduce-start": "all-reduce",
+    "all-gather": "all-gather", "all-gather-start": "all-gather",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+}
+
+# ops with no real memory traffic of their own
+_FREE_OPS = {
+    "get-tuple-element", "bitcast", "tuple", "parameter", "constant", "iota",
+    "reshape", "after-all", "opt-barrier", "partition-id", "replica-id",
+}
+
+
+def _shapes_in(seg: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> float:
+    return float(sum(_DTYPE_BYTES[dt] * math.prod(s or (1,)) for dt, s in shapes))
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    transcendental_elems: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(c["wire_bytes"] for c in self.collectives.values())
+
+    @property
+    def total_collective_count(self) -> float:
+        return sum(c["count"] for c in self.collectives.values())
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    header: str
+    lines: List[str] = dataclasses.field(default_factory=list)
+    symbols: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    current: Optional[_Comp] = None
+    depth = 0
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and "->" in stripped:
+                is_entry = stripped.startswith("ENTRY")
+                name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+                if not name_m:
+                    continue
+                current = _Comp(name_m.group(1), is_entry, stripped)
+                comps[current.name] = current
+                if is_entry:
+                    entry = current.name
+                # header params populate the symbol table
+                for pname, pshape in _HEADER_PARAM.findall(stripped):
+                    current.symbols[pname] = _shapes_in(pshape)
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            current = None
+            continue
+        if " = " in stripped:
+            current.lines.append(stripped)
+            m = _INSTR_RE.match(stripped)
+            if m:
+                current.symbols[m.group(1)] = _shapes_in(m.group(2))
+    return comps, entry
+
+
+def _callees(line: str) -> List[Tuple[str, str]]:
+    """(callee, kind) where kind in {body, branch, fused}."""
+    out = []
+    for name in _CALLEE_BODY.findall(line):
+        out.append((name, "body"))
+    for rx in _CALLEE_CTRL:
+        for name in rx.findall(line):
+            out.append((name, "branch"))
+    for rx in _CALLEE_FUSED:
+        for name in rx.findall(line):
+            out.append((name, "fused"))
+    for grp in _CALLEE_BRANCHES.findall(line):
+        for name in grp.split(","):
+            name = name.strip().lstrip("%")
+            if name:
+                out.append((name, "branch"))
+    return out
+
+
+def analyze_hlo(text: str) -> HloSummary:
+    comps, entry = _parse(text)
+    summary = HloSummary(
+        collectives={
+            c: {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0}
+            for c in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute")
+        }
+    )
+    if entry is None:
+        return summary
+
+    # --- execution multiplier per computation (fixed point over call graph) --
+    # "control" computations (entry, while bodies/conds, conditional branches)
+    # own their instructions' memory traffic; fusion/reduce bodies (reached
+    # via calls=/to_apply=) only contribute dot FLOPs -- their internal ops
+    # live in registers/VMEM, the fusion *call site* accounts the HBM bytes.
+    mult: Dict[str, float] = {entry: 1.0}
+    control: Dict[str, bool] = {entry: True}
+    for _ in range(64):
+        changed = False
+        for comp in comps.values():
+            w = mult.get(comp.name)
+            if not w:
+                continue
+            for line in comp.lines:
+                trip = 1.0
+                tm = _TRIP_RE.search(line)
+                if tm and " while(" in line:
+                    trip = float(tm.group(1))
+                for callee, kind in _callees(line):
+                    if callee not in comps:
+                        continue
+                    weight = trip if kind == "body" else 1.0
+                    new = w * weight
+                    if mult.get(callee, 0.0) < new:
+                        mult[callee] = new
+                        changed = True
+                    is_ctrl = control.get(comp.name, False) and kind in (
+                        "body", "branch",
+                    )
+                    if is_ctrl and not control.get(callee, False):
+                        control[callee] = True
+                        changed = True
+        if not changed:
+            break
+
+    # --- effective boundary bytes of fusion computations ---------------------
+    # A fusion's real HBM traffic is its *boundary*: params read + root
+    # written -- except params that are only dynamic-sliced inside (read the
+    # slice, not the buffer) and dynamic-update-slice roots (write the update
+    # region; the buffer aliases in place).
+    fusion_bytes: Dict[str, float] = {}
+    for comp in comps.values():
+        header_params = dict(_HEADER_PARAM.findall(comp.header))
+        in_bytes = 0.0
+        # usage analysis per param
+        for pname, pshape in header_params.items():
+            full = _bytes_of(_shapes_in(pshape))
+            refs = [ln for ln in comp.lines if re.search(rf"%{re.escape(pname)}\b", ln.split(" = ", 1)[-1])]
+            if refs and all(
+                _INSTR_RE.match(r) and _INSTR_RE.match(r).group(3) == "dynamic-slice"
+                and _OPERAND_RE.findall(r.split("(", 1)[1])[:1] == [pname]
+                for r in refs
+            ):
+                in_bytes += sum(
+                    _bytes_of(_shapes_in(_INSTR_RE.match(r).group(2))) for r in refs
+                )
+            else:
+                in_bytes += full
+        out_bytes = 0.0
+        for ln in comp.lines:
+            if not ln.startswith("ROOT"):
+                continue
+            m = _INSTR_RE.match(ln)
+            if not m:
+                break
+            _rn, rseg, rop = m.groups()
+            if rop == "dynamic-update-slice":
+                onames = _OPERAND_RE.findall(ln.split("(", 1)[1])
+                upd = comp.symbols.get(onames[1], []) if len(onames) > 1 else []
+                out_bytes += _bytes_of(upd)
+            else:
+                out_bytes += _bytes_of(_shapes_in(rseg))
+            break
+        fusion_bytes[comp.name] = in_bytes + out_bytes
+
+    # --- accumulate per instruction ------------------------------------------
+    for comp in comps.values():
+        w = mult.get(comp.name, 0.0)
+        if w == 0.0:
+            continue
+        is_control = control.get(comp.name, False)
+        for line in comp.lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            _res_name, result_seg, op = m.groups()
+            result_shapes = _shapes_in(result_seg)
+            rb = _bytes_of(result_shapes)
+
+            if op == "while":
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    summary.while_trip_counts.append(int(tm.group(1)))
+                continue  # body costs attributed via multipliers
+
+            # operand shapes via the computation symbol table
+            args_seg = line.split("(", 1)[1].split(")", 1)[0] if "(" in line else ""
+            operand_names = _OPERAND_RE.findall(args_seg)
+            opshapes: List[Tuple[str, Tuple[int, ...]]] = []
+            for on in operand_names:
+                opshapes.extend(comp.symbols.get(on, []))
+
+            if op in ("dot", "convolution"):
+                if result_shapes:
+                    res_elems = math.prod(result_shapes[0][1] or (1,))
+                    cprod = 1
+                    cm = _DOT_CONTRACT.search(line)
+                    lhs_shapes = comp.symbols.get(operand_names[0], []) if operand_names else []
+                    lhs = lhs_shapes[0][1] if lhs_shapes else ()
+                    if cm is not None and lhs:
+                        cdims = [int(d) for d in cm.group(1).split(",") if d]
+                        cprod = math.prod([lhs[d] for d in cdims if d < len(lhs)] or [1])
+                    summary.dot_flops += w * 2.0 * res_elems * cprod
+
+            canon = _COLL_CANON.get(op)
+            if canon is not None:
+                g = 2.0
+                gi = _GROUPS_IOTA.search(line)
+                if gi:
+                    g = float(gi.group(2))
+                else:
+                    gl = _GROUPS_LIST.search(line)
+                    if gl:
+                        g = float(len([x for x in gl.group(1).split(",") if x.strip()]))
+                if canon == "all-reduce":
+                    wire = 2.0 * rb * (g - 1) / g
+                elif canon == "all-gather":
+                    wire = rb * (g - 1) / g
+                elif canon == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif canon == "all-to-all":
+                    wire = rb * (g - 1) / g
+                else:
+                    wire = float(rb)
+                c = summary.collectives[canon]
+                c["count"] += w
+                c["result_bytes"] += w * rb
+                c["wire_bytes"] += w * wire
+                summary.bytes_accessed += w * 2 * rb
+                continue
+
+            if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                      "logistic", "sine", "cosine") and result_shapes:
+                summary.transcendental_elems += w * math.prod(
+                    result_shapes[0][1] or (1,)
+                )
+
+            if op in _FREE_OPS or not is_control:
+                continue
+            if op == "fusion":
+                callee = next(
+                    (c for c, k in _callees(line) if k == "fused" and c in fusion_bytes),
+                    None,
+                )
+                summary.bytes_accessed += w * (
+                    fusion_bytes[callee] if callee else rb + _bytes_of(opshapes)
+                )
+            elif op == "dynamic-slice":
+                # reads only the slice (plus writes it): NOT the full buffer
+                summary.bytes_accessed += w * 2 * rb
+            elif op == "dynamic-update-slice":
+                # reads + writes the updated region only (result aliases the
+                # buffer); the update operand is the second argument
+                upd = (
+                    _bytes_of(comp.symbols.get(operand_names[1], []))
+                    if len(operand_names) > 1
+                    else rb
+                )
+                summary.bytes_accessed += w * 2 * upd
+            else:
+                summary.bytes_accessed += w * (rb + _bytes_of(opshapes))
+    return summary

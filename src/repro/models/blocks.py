@@ -1,0 +1,109 @@
+"""Decoder blocks: sequential / parallel-residual / hybrid, dense or MoE FFN.
+
+A *block* is one transformer layer: mixer (attention / MLA / SSD) + FFN
+(dense MLP or MoE), pre-norm residual.  ``command-r``-style architectures use
+a parallel residual (one input norm, attn and MLP both read it).
+
+Blocks are grouped for ``lax.scan``: :func:`group_pattern` returns the
+periodic (kind, is_moe) pattern of one scan group so heterogeneous stacks
+(Jamba's 1:7 SSM:attention interleave with MoE every other layer) scan over
+*groups* with a fixed internal structure.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers.attention import attention_apply, init_attention, init_mla, mla_apply
+from .layers.basics import apply_norm, init_mlp, init_norm, mlp_apply
+from .layers.moe import init_moe, moe_apply
+from .layers.ssm import init_ssm, ssm_apply
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["group_pattern", "init_block", "block_apply", "prelude_layers"]
+
+
+def prelude_layers(cfg: ModelConfig) -> int:
+    """Leading layers that do not fit the periodic scan pattern."""
+    return cfg.moe.first_k_dense if cfg.moe is not None else 0
+
+
+def group_pattern(cfg: ModelConfig) -> List[Tuple[str, bool]]:
+    """(mixer kind, is_moe) for each position of one scan group."""
+    pre = prelude_layers(cfg)
+    return [
+        (cfg.layer_kind(pre + p), cfg.layer_is_moe(pre + p))
+        for p in range(cfg.block_group)
+    ]
+
+
+def init_block(
+    key: jax.Array, cfg: ModelConfig, layer_idx: int, dtype=jnp.float32
+) -> Params:
+    """Parameters of one layer (mixer + FFN + norms)."""
+    kind = cfg.layer_kind(layer_idx)
+    is_moe = cfg.layer_is_moe(layer_idx)
+    k_mix, k_ffn = jax.random.split(key)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = (
+            init_mla(k_mix, cfg, dtype) if cfg.mla is not None else init_attention(k_mix, cfg, dtype)
+        )
+    else:
+        p["mixer"] = init_ssm(k_mix, cfg, dtype)
+    if is_moe:
+        p["ffn"] = init_moe(k_ffn, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["ffn"] = init_mlp(k_ffn, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if not cfg.parallel_block and "ffn" in p:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model)
+    return p
+
+
+def _mixer(
+    p: Params,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    positions: Optional[jnp.ndarray],
+) -> jnp.ndarray:
+    if kind == "attn":
+        if cfg.mla is not None:
+            return mla_apply(p, cfg, x, positions)
+        return attention_apply(p, cfg, x, positions)
+    return ssm_apply(p, cfg, x)
+
+
+def _ffn(p: Params, cfg: ModelConfig, is_moe: bool, x: jnp.ndarray) -> jnp.ndarray:
+    if is_moe:
+        return moe_apply(p, cfg, x)
+    return mlp_apply(p, x, cfg.act)
+
+
+def block_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    kind: str,
+    is_moe: bool,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """One layer, full-sequence path (training / prefill)."""
+    has_ffn = "ffn" in p
+    if cfg.parallel_block:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        out = x + _mixer(p["mixer"], cfg, kind, h, positions)
+        if has_ffn:
+            out = out + _ffn(p["ffn"], cfg, is_moe, h)
+        return out
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    x = x + _mixer(p["mixer"], cfg, kind, h, positions)
+    if has_ffn:
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + _ffn(p["ffn"], cfg, is_moe, h)
+    return x

@@ -1,0 +1,252 @@
+"""Attention layers: GQA/MHA, MLA (DeepSeek-V2), chunked flash-style core.
+
+The attention core (:func:`chunked_attention`) is a memory-efficient
+online-softmax implementation in pure JAX (lax.scan over query and KV
+blocks), used for training and prefill.  It is also the numerical oracle for
+the Pallas ``flash_attention`` kernel (``repro/kernels/flash_attention``).
+
+Decode (single-token) paths are in :mod:`repro.serve.decode`, including the
+sequence-sharded distributed decode with log-sum-exp combination.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from .basics import apply_rope, dense, init_dense, init_norm, rmsnorm, rope_frequencies
+from .flash_core import flash_attention_core
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = [
+    "init_attention",
+    "attention_apply",
+    "init_mla",
+    "mla_apply",
+    "chunked_attention",
+    "naive_attention",
+]
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Reference O(S^2)-memory attention.  q: (b, sq, h, d); k/v: (b, sk, kvh, d)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (d**-0.5)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, sq, h, d)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash attention with O(S) memory and flash-recompute backward.
+
+    q: (b, sq, h, d); k, v: (b, sk, kvh, d) with h % kvh == 0 (GQA).
+    Returns (b, sq, h, d) in q.dtype.  Delegates to the custom-VJP core in
+    :mod:`repro.models.layers.flash_core`.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    out = flash_attention_core(
+        qg, k, v, causal, min(q_chunk, sq), min(kv_chunk, k.shape[1]), q_offset
+    )
+    return out.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_dense(ks[1], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_dense(ks[2], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_dense(ks[3], h * hd, d, scale=(h * hd) ** -0.5, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm("rmsnorm", hd)
+        p["k_norm"] = init_norm("rmsnorm", hd)
+    return p
+
+
+def attention_qkv(
+    p: Params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Projections + RoPE; shared by train/prefill/decode paths."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, hd)
+    k = dense(p["wk"], x).reshape(b, s, kvh, hd)
+    v = dense(p["wv"], x).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["scale"])
+        k = rmsnorm(k, p["k_norm"]["scale"])
+    if cfg.use_rope:
+        rot_dim, inv_freq = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q, positions, rot_dim, inv_freq)
+        k = apply_rope(k, positions, rot_dim, inv_freq)
+    return q, k, v
+
+
+def attention_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Full-sequence causal attention (training / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    # TP alignment: when the kv-head count does not divide the model axis
+    # (production TP=16) but the q-head count does, expand K/V to full heads
+    # so the (kv_heads, group) factorization never crosses shard boundaries
+    # (avoids XLA "involuntary full rematerialization" resharding).
+    g = cfg.n_heads // cfg.n_kv_heads
+    if g > 1 and cfg.n_kv_heads % 16 != 0 and cfg.n_heads % 16 == 0:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if s <= 2048:
+        o = naive_attention(q, k, v, causal=True)
+    else:
+        o = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return dense(p["wo"], o.reshape(b, s, -1))
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        # queries (v2-lite: no q compression)
+        "wq": init_dense(ks[0], d, h * qk_dim, dtype=dtype),
+        # compressed KV path
+        "w_dkv": init_dense(ks[1], d, m.kv_lora_rank, dtype=dtype),
+        "kv_norm": init_norm("rmsnorm", m.kv_lora_rank),
+        "w_kr": init_dense(ks[2], d, m.qk_rope_dim, dtype=dtype),  # shared rope key
+        "w_uk": init_dense(ks[3], m.kv_lora_rank, h * m.qk_nope_dim, dtype=dtype),
+        "w_uv": init_dense(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype=dtype),
+        "wo": init_dense(ks[5], h * m.v_head_dim, d, scale=(h * m.v_head_dim) ** -0.5, dtype=dtype),
+    }
+
+
+def mla_latents(
+    p: Params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compressed KV latents (c_kv, k_rope) -- this is what the KV cache
+    stores (the MLA memory saving: kv_lora + rope_dim per token)."""
+    m: MLAConfig = cfg.mla
+    c_kv = rmsnorm(dense(p["w_dkv"], x), p["kv_norm"]["scale"])  # (b, s, r)
+    k_r = dense(p["w_kr"], x)[:, :, None, :]  # (b, s, 1, rope_dim)
+    rot, inv = rope_frequencies(m.qk_rope_dim, 1.0, cfg.rope_theta)
+    k_r = apply_rope(k_r, positions, rot, inv)
+    return c_kv, k_r[:, :, 0, :]
+
+
+def mla_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Training/prefill MLA: decompress K/V and run the shared core."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q = dense(p["wq"], x).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    rot, inv = rope_frequencies(m.qk_rope_dim, 1.0, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, positions, rot, inv)
+
+    c_kv, k_r = mla_latents(p, cfg, x, positions)  # (b,s,r), (b,s,rope)
+    k_nope = dense(p["w_uk"], c_kv).reshape(b, s, h, m.qk_nope_dim)
+    v = dense(p["w_uv"], c_kv).reshape(b, s, h, m.v_head_dim)
+
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_r[:, :, None, :], (b, s, h, m.qk_rope_dim))],
+        axis=-1,
+    )
+    # the MLA core handles distinct qk/v head dims
+    if s <= 2048:
+        o = _mla_core(qq, kk, v)
+    else:
+        o = _mla_core_chunked(qq, kk, v, q_chunk, kv_chunk)
+    return dense(p["wo"], o.reshape(b, s, -1))
+
+
+def _mla_core(q, k, v):
+    """MHA core with distinct qk/v dims.  q,k: (b,s,h,dqk), v: (b,s,h,dv)."""
+    d = q.shape[-1]
+    s = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (d**-0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _mla_core_chunked(q, k, v, q_chunk, kv_chunk):
+    """Flash core for distinct qk/v head dims (kvh == h, g == 1)."""
+    b, sq, h, dqk = q.shape
+    dv = v.shape[-1]
+    out = flash_attention_core(
+        q.reshape(b, sq, h, 1, dqk),
+        k,
+        v,
+        True,
+        min(q_chunk, sq),
+        min(kv_chunk, sq),
+        0,
+    )
+    return out.reshape(b, sq, h, dv)

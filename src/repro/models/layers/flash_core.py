@@ -1,0 +1,211 @@
+"""Flash attention core with custom VJP (pure JAX, O(S) memory).
+
+Generic over GQA grouping and distinct qk/v head dims:
+
+    q: (b, sq, kvh, g, dqk)    k: (b, sk, kvh, dqk)    v: (b, sk, kvh, dv)
+    out: (b, sq, kvh, g, dv)
+
+GQA: ``g = n_heads / n_kv_heads``;  MLA: ``kvh = n_heads, g = 1, dv != dqk``.
+
+The forward is an online-softmax over KV blocks; the backward follows the
+FlashAttention-2 recomputation scheme (only ``out`` and the log-sum-exp are
+saved; score blocks are recomputed per (q-block, kv-block) pair).  This is
+the numerical oracle for the ``repro/kernels/flash_attention`` Pallas
+kernel, and the memory-safe attention used by training and prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_core"]
+
+_NEG = -1e30
+
+
+def _blocks(x, n, axis=1):
+    """(b, s, ...) -> (n, b, s/n, ...) block-major for lax.scan."""
+    shape = x.shape
+    new = shape[:axis] + (n, shape[axis] // n) + shape[axis + 1 :]
+    return jnp.moveaxis(x.reshape(new), axis, 0)
+
+
+def _unblocks(x, axis=1):
+    """(n, b, blk, ...) -> (b, n*blk, ...)."""
+    x = jnp.moveaxis(x, 0, axis)
+    shape = x.shape
+    return x.reshape(shape[:axis] + (shape[axis] * shape[axis + 1],) + shape[axis + 2 :])
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention_core(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    out, _ = _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    b, sq, kvh, g, dqk = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = dqk**-0.5
+    out_dtype = q.dtype
+
+    qb = _blocks(q, nq)  # (nq, b, qc, kvh, g, dqk)
+    kb = _blocks(k, nk)  # (nk, b, kc, kvh, dqk)
+    vb = _blocks(v, nk)
+    qpos = (jnp.arange(sq) + q_offset).reshape(nq, q_chunk)
+    kpos = jnp.arange(sk).reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        qblk, qp = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            s = (
+                jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qblk, kblk,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            if causal:
+                s = jnp.where((kp[None, :] <= qp[:, None])[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpos))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(out_dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (b, kvh, g, qc)
+        return None, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qb, qpos))
+    # outs: (nq, b, kvh, g, qc, dv) -> (b, sq, kvh, g, dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, kvh, g, dv)
+    return out, lses  # lses: (nq, b, kvh, g, qc)
+
+
+def _fwd(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    out, lse = _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, q_chunk, kv_chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    b, sq, kvh, g, dqk = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = dqk**-0.5
+    f32 = jnp.float32
+
+    qb = _blocks(q, nq)
+    kb = _blocks(k, nk)
+    vb = _blocks(v, nk)
+    dob = _blocks(dout, nq)  # (nq, b, qc, kvh, g, dv)
+    # delta_i = rowsum(dout * out), blocked to (nq, b, kvh, g, qc)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dout.astype(f32), out.astype(f32))
+    deltab = delta.reshape(b, kvh, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    qpos = (jnp.arange(sq) + q_offset).reshape(nq, q_chunk)
+    kpos = jnp.arange(sk).reshape(nk, kv_chunk)
+    # lse comes blocked from fwd: (nq, b, kvh, g, qc)
+
+    def recompute_p(qblk, kblk, qp, kp):
+        s = (
+            jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk, kblk, preferred_element_type=f32
+            )
+            * scale
+        )
+        if causal:
+            s = jnp.where((kp[None, :] <= qp[:, None])[None, None, None], s, _NEG)
+        return s
+
+    # ---- dq: loop over q blocks, inner loop over kv blocks ------------------
+    def dq_step(_, qi):
+        qblk, doblk, lse_i, dlt_i, qp = qi
+
+        def inner(dq_acc, ki):
+            kblk, vblk, kp = ki
+            s = recompute_p(qblk, kblk, qp, kp)
+            p = jnp.exp(s - lse_i[..., None])  # (b,h,g,qc,kc)
+            dp = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", doblk, vblk, preferred_element_type=f32
+            )
+            ds = p * (dp - dlt_i[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", ds.astype(kblk.dtype), kblk
+            ).astype(f32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, q_chunk, kvh, g, dqk), f32)
+        dq_i, _ = jax.lax.scan(jax.checkpoint(inner), dq0, (kb, vb, kpos))
+        return None, dq_i
+
+    _, dqb = jax.lax.scan(dq_step, None, (qb, dob, lse, deltab, qpos))
+    dq = _unblocks(dqb).astype(q.dtype)
+
+    # ---- dk, dv: loop over kv blocks, inner loop over q blocks --------------
+    def dkv_step(_, ki):
+        kblk, vblk, kp = ki
+
+        def inner(carry, qi):
+            dk_acc, dv_acc = carry
+            qblk, doblk, lse_i, dlt_i, qp = qi
+            s = recompute_p(qblk, kblk, qp, kp)
+            p = jnp.exp(s - lse_i[..., None])
+            dv_acc = dv_acc + jnp.einsum(
+                "bhgqk,bqhgd->bkhd", p.astype(f32), doblk.astype(f32)
+            )
+            dp = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", doblk, vblk, preferred_element_type=f32
+            )
+            ds = p * (dp - dlt_i[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bhgqk,bqhgd->bkhd", ds, qblk.astype(f32)
+            )
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((b, kv_chunk, kvh, dqk), f32)
+        dv0 = jnp.zeros((b, kv_chunk, kvh, dv), f32)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            jax.checkpoint(inner), (dk0, dv0), (qb, dob, lse, deltab, qpos)
+        )
+        return None, (dk_j, dv_j)
+
+    _, (dkb, dvb) = jax.lax.scan(dkv_step, None, (kb, vb, kpos))
+    dk = _unblocks(dkb).astype(k.dtype)
+    dv = _unblocks(dvb).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_core.defvjp(_fwd, _bwd)

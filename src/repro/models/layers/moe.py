@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Design (TPU-/pjit-friendly, static shapes):
+
+  1. router logits -> top-k experts per token (+ optional renormalization);
+  2. the (tokens x k) assignments are *sorted by expert id* and scattered
+     into a dense ``(E, C, D)`` buffer (capacity ``C`` per expert; overflow
+     tokens are dropped, standard capacity-factor semantics);
+  3. expert FFNs run as grouped einsums over the ``E`` axis -- this is the
+     axis expert parallelism shards (``experts`` logical axis -> ``model``);
+  4. results are gathered back and combined with routing weights.
+
+The dispatch/return movement is what becomes the all-to-all under expert
+parallelism; the SyncEngine's `scu` strategy overlaps it with the shared
+expert / attention compute (see DESIGN.md).
+
+Shared experts (DeepSeek-style) run densely over all tokens.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from .basics import init_mlp, mlp_apply
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["init_moe", "moe_apply", "router_topk", "dispatch_indices"]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    kr, ke, ks = jax.random.split(key, 3)
+    # experts as stacked weights (E, d, ff): grouped-einsum friendly
+    def expert_stack(key, d_in, d_out):
+        return jax.random.normal(key, (m.n_experts, d_in, d_out), dtype) * (d_in**-0.5)
+
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p: Params = {
+        "router": jax.random.normal(kr, (d, m.n_experts), jnp.float32) * (d**-0.5),
+        "gate": expert_stack(k1, d, m.d_ff_expert),
+        "up": expert_stack(k2, d, m.d_ff_expert),
+        "down": expert_stack(k3, m.d_ff_expert, d),
+    }
+    if m.n_shared > 0:
+        p["shared"] = init_mlp(ks, d, m.d_ff_expert * m.n_shared, "swiglu", dtype)
+    return p
+
+
+def router_topk(
+    logits: jnp.ndarray, m: MoEConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(T, E) logits -> (T, K) weights (float32) and (T, K) expert ids."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)
+    if m.router_norm_topk:
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx
+
+
+def dispatch_indices(
+    idx: jnp.ndarray, n_experts: int, capacity: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch bookkeeping.
+
+    idx: (T, K) expert assignment.  Returns
+      ``dest``    (T*K,) flat destination slot in the (E*C [+1 drop]) buffer,
+      ``token``   (T*K,) source token of each sorted slot,
+      ``slot_w``  (T*K,) position of this slot in the (T, K) weight matrix.
+    """
+    T, K = idx.shape
+    flat_expert = idx.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    token = order // K
+    # rank of each slot within its expert group
+    starts = jnp.searchsorted(sorted_expert, jnp.arange(n_experts))  # (E,)
+    rank = jnp.arange(T * K) - starts[sorted_expert]
+    keep = rank < capacity
+    dest = jnp.where(keep, sorted_expert * capacity + rank, n_experts * capacity)
+    return dest, token, order
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    xf = x.reshape(T, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # (T, E)
+    weights, idx = router_topk(logits, m)  # (T, K)
+
+    capacity = int(T * m.top_k / m.n_experts * m.capacity_factor)
+    capacity = max(8, min(capacity, T))
+    dest, token, order = dispatch_indices(idx, m.n_experts, capacity)
+
+    # scatter tokens into the expert buffers (dropped slots land in the
+    # scratch row E*C which is sliced away)
+    buf = jnp.zeros((m.n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[token])
+    h = buf[: m.n_experts * capacity].reshape(m.n_experts, capacity, d)
+    if cfg.moe_shard_hints:
+        # §Perf: pin the dispatch buffer to expert-parallel sharding so the
+        # token movement lowers to an all-to-all instead of all-gathers
+        from jax.sharding import PartitionSpec as _P
+
+        h = jax.lax.with_sharding_constraint(h, _P("model", None, None))
+
+    # grouped expert FFN (SwiGLU): the E axis is the EP sharding axis
+    dt = x.dtype
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", h, p["up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["down"].astype(dt))  # (E, C, D)
+    if cfg.moe_shard_hints:
+        from jax.sharding import PartitionSpec as _P
+
+        y = jax.lax.with_sharding_constraint(y, _P("model", None, None))
+
+    # gather back + weighted combine
+    y_flat = jnp.concatenate([y.reshape(-1, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    slot_out = y_flat[dest]  # (T*K, D), dropped slots contribute 0
+    w_sorted = weights.reshape(-1)[order].astype(y.dtype)  # (T*K,)
+    out = jnp.zeros((T, d), y.dtype).at[token].add(slot_out * w_sorted[:, None])
+
+    if m.n_shared > 0:
+        out = out + mlp_apply(p["shared"], xf, "swiglu")
+    return out.reshape(b, s, d)

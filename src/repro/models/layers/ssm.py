@@ -1,0 +1,290 @@
+"""Mamba-2 (SSD -- state-space duality) mixer layer.
+
+Implements the chunked "dual" form of the SSD recurrence (Dao & Gu, 2024,
+arXiv:2405.21060 Listing 1): within-chunk attention-like matmuls + an
+inter-chunk recurrence over compressed states -- matmul-dominated and
+MXU-friendly.  The pure-jnp implementation here is also the oracle for the
+``repro/kernels/ssd_scan`` Pallas kernel.
+
+Layer structure follows mamba2 with the input projection *split by
+component* (z | x | B | C | dt) so tensor parallelism can shard the
+d_inner-sized components (z, x -- and with them the SSD heads) over the
+``model`` axis while the small B/C/dt projections stay replicated.  This is
+a column partition of the fused in_proj -- mathematically identical.
+
+A single-token recurrent step for decoding is provided
+(:func:`ssm_decode_step`).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from .basics import init_dense, dense, rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = [
+    "init_ssm",
+    "ssm_apply",
+    "ssd_chunked",
+    "ssd_recurrent",
+    "ssm_decode_step",
+    "ssm_state_shapes",
+]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim, s.n_groups, s.d_state
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim, g, n = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        # input projections, split by component for clean TP sharding
+        "in_z": init_dense(ks[0], d, d_inner, dtype=dtype),
+        "in_x": init_dense(ks[1], d, d_inner, dtype=dtype),
+        "in_B": init_dense(ks[2], d, g * n, dtype=dtype),
+        "in_C": init_dense(ks[3], d, g * n, dtype=dtype),
+        "in_dt": init_dense(ks[4], d, n_heads, dtype=dtype),
+        # causal depthwise conv per component (x | B | C)
+        "conv_x": jax.random.normal(ks[5], (s.d_conv, d_inner), dtype) * 0.2,
+        "conv_B": jax.random.normal(ks[6], (s.d_conv, g * n), dtype) * 0.2,
+        "conv_C": jax.random.normal(ks[7], (s.d_conv, g * n), dtype) * 0.2,
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_bB": jnp.zeros((g * n,), dtype),
+        "conv_bC": jnp.zeros((g * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_dense(ks[4], d_inner, d, scale=d_inner**-0.5, dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (j <= i)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, s, h, p)
+    dt: jnp.ndarray,  # (b, s, h)  (positive, post-softplus)
+    A: jnp.ndarray,  # (h,)       (negative)
+    B: jnp.ndarray,  # (b, s, g, n)
+    C: jnp.ndarray,  # (b, s, g, n)
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # (b, h, p, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD ("matmul" dual form).  Returns (y (b,s,h,p), final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    rep = h // g  # heads per B/C group
+
+    f32 = jnp.float32
+    xb = (x * dt[..., None]).reshape(b, nc, chunk, h, p)  # dt-weighted input
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b, nc, Q, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, h)  # (b,nc,Q,h)
+    dA = jnp.moveaxis(dA, -1, 2)  # (b, nc, h, Q)
+    dA_cum = jnp.cumsum(dA, axis=-1)  # within-chunk cumulative
+
+    # ---- diagonal (within-chunk) part: attention-like with decay kernel ----
+    L = jnp.exp(_segsum(dA))  # (b, nc, h, Q, Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch.astype(f32), Bh.astype(f32))
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, xb.astype(f32))
+
+    # ---- chunk states: decay-weighted B^T x over each chunk -----------------
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (b, nc, h, Q)
+    states = jnp.einsum(
+        "bckhn,bchk,bckhp->bchpn", Bh.astype(f32), decay_states, xb.astype(f32)
+    )  # (b, nc, h, p, n)
+
+    # ---- inter-chunk recurrence over compressed states ---------------------
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # (b, nc, h)
+    s0 = (
+        jnp.zeros((b, h, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # ---- off-diagonal contribution: C @ carried state with in-chunk decay --
+    state_decay = jnp.exp(dA_cum)  # (b, nc, h, Q)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bchq->bcqhp", Ch.astype(f32), prev_states, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_recurrent(
+    x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+    initial_state: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token reference recurrence (oracle for tests + decode)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32)
+    st = (
+        jnp.zeros((b, h, p, n), f32) if initial_state is None else initial_state.astype(f32)
+    )
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        dec = jnp.exp(dtt.astype(f32) * A.astype(f32))  # (b,h)
+        st = st * dec[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt.astype(f32) * dtt[..., None].astype(f32), Bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", st, Ct)
+        return st, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    st, ys = jax.lax.scan(step, st, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# Full mixer layer
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (b, s, c); w: (d_conv, c)."""
+    bsz, s, c = x.shape
+    d_conv = w.shape[0]
+    pad = jnp.zeros((bsz, d_conv - 1, c), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + s, :] * w[i][None, None, :] for i in range(d_conv))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _project(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """Shared projection + conv path for full-seq and decode."""
+    z = dense(p["in_z"], x)
+    xs = dense(p["in_x"], x)
+    B = dense(p["in_B"], x)
+    C = dense(p["in_C"], x)
+    dt = dense(p["in_dt"], x)
+    return z, xs, B, C, dt
+
+
+def ssm_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba-2 mixer.  x: (b, s, d_model)."""
+    s_cfg: SSMConfig = cfg.ssm
+    b, s, _ = x.shape
+    d_inner, n_heads, conv_dim, g, n = _dims(cfg)
+
+    z, xs, B, C, dt = _project(p, cfg, x)
+    xs = _causal_conv(xs, p["conv_x"].astype(xs.dtype), p["conv_bx"])
+    B = _causal_conv(B, p["conv_B"].astype(B.dtype), p["conv_bB"])
+    C = _causal_conv(C, p["conv_C"].astype(C.dtype), p["conv_bC"])
+
+    xs = xs.reshape(b, s, n_heads, s_cfg.head_dim)
+    B = B.reshape(b, s, g, n)
+    C = C.reshape(b, s, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, s, h)
+    A = -jnp.exp(p["A_log"])  # (h,) negative
+
+    y, _ = ssd_chunked(xs, dtv, A, B, C, chunk=min(s_cfg.chunk, s))
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    # gated RMSNorm (mamba2)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return dense(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrent step)
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple[int, ...]]:
+    s: SSMConfig = cfg.ssm
+    d_inner, n_heads, conv_dim, g, n = _dims(cfg)
+    return {
+        "ssm": (batch, n_heads, s.head_dim, n),
+        "conv": (batch, s.d_conv - 1, conv_dim),
+    }
+
+
+def ssm_decode_step(
+    p: Params, cfg: ModelConfig, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token step.  x: (b, 1, d); state: {'ssm': (b,h,p,n), 'conv': ...}."""
+    s_cfg: SSMConfig = cfg.ssm
+    b = x.shape[0]
+    d_inner, n_heads, conv_dim, g, n = _dims(cfg)
+
+    z, xs, B, C, dt = _project(p, cfg, x)
+    xc = jnp.concatenate([xs, B, C], axis=-1)  # conv channel layout (x|B|C)
+    hist = jnp.concatenate([state["conv"].astype(xc.dtype), xc], axis=1)
+    w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1
+    ).astype(xc.dtype)
+    bias = jnp.concatenate([p["conv_bx"], p["conv_bB"], p["conv_bC"]])
+    conv = jnp.einsum("btc,tc->bc", hist, w)[:, None, :] + bias.astype(xc.dtype)
+    conv = jax.nn.silu(conv)
+    new_conv_state = hist[:, 1:, :]
+
+    xs, B, C = (
+        conv[..., :d_inner],
+        conv[..., d_inner : d_inner + g * n],
+        conv[..., d_inner + g * n :],
+    )
+    xs = xs.reshape(b, 1, n_heads, s_cfg.head_dim)
+    B = B.reshape(b, 1, g, n)
+    C = C.reshape(b, 1, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ssd_recurrent(xs, dtv, A, B, C, initial_state=state["ssm"])
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return dense(p["out_proj"], y), {"ssm": new_ssm, "conv": new_conv_state}

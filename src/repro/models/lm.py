@@ -1,0 +1,210 @@
+"""Causal LM assembly: embeddings -> (prelude + scanned groups) -> norm -> head.
+
+Layers are stacked and iterated with ``jax.lax.scan`` so the lowered HLO is
+O(1) in depth -- essential for compiling 48-64-layer models for 512 devices.
+Heterogeneous stacks (Jamba) scan over *groups* with a fixed internal
+pattern (see :func:`repro.models.blocks.group_pattern`).
+
+Remat: the scan body is wrapped in ``jax.checkpoint`` with a configurable
+policy ("none" | "dots" | "full") -- "dots" saves matmul outputs and
+recomputes the rest, the standard memory/compute trade for long sequences.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .blocks import block_apply, group_pattern, init_block, prelude_layers
+from .layers.basics import apply_norm, embed, init_embedding, init_norm, unembed
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["init_lm", "lm_forward", "lm_logits", "lm_loss", "REMAT_POLICIES"]
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def residual_spec_div(spec) -> int:
+    """Mesh divisor implied by a sequence-sharded residual spec (for the
+    divisibility guard); NamedShardings carry their mesh."""
+    try:
+        mesh = spec.mesh  # NamedSharding
+        axis = spec.spec[1]
+    except AttributeError:
+        return 1
+    if axis is None:
+        return 1
+    names = axis if isinstance(axis, tuple) else (axis,)
+    d = 1
+    for n in names:
+        d *= mesh.shape[n]
+    return d
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    pre = prelude_layers(cfg)
+    body = cfg.n_layers - pre
+    assert body % cfg.block_group == 0, (cfg.n_layers, pre, cfg.block_group)
+    n_groups = body // cfg.block_group
+
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    params: Params = {
+        "embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.vocab_size, cfg.d_model, dtype)
+
+    for i in range(pre):
+        params[f"prelude_{i}"] = init_block(layer_keys[i], cfg, i, dtype)
+
+    groups = []
+    for g in range(n_groups):
+        group = {}
+        for p_idx in range(cfg.block_group):
+            li = pre + g * cfg.block_group + p_idx
+            group[f"pos_{p_idx}"] = init_block(layer_keys[li], cfg, li, dtype)
+        groups.append(group)
+    params["blocks"] = _tree_stack(groups)
+    return params
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeddings: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    remat_policy: str = "dots",
+    residual_spec=None,
+    embed_grad_spec=None,
+) -> jnp.ndarray:
+    """Returns final hidden states (b, s, d_model) in compute dtype."""
+    dtype = jnp.dtype(cfg.dtype)
+    if embeddings is None:
+        x = embed(params["embed"], tokens, dtype, grad_sharding=embed_grad_spec)
+    else:
+        x = embeddings.astype(dtype)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    if not cfg.use_rope:
+        # learned-position-free archs (musicgen backbone): sinusoidal adds
+        d = cfg.d_model
+        inv = 1.0 / (10_000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+        ang = positions[:, None].astype(jnp.float32) * inv
+        pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pos_emb.astype(dtype)[None]
+
+    # sequence-parallel residual stream: the scan carry (the only activation
+    # saved per layer group under full remat) is sharded over the model axis
+    # along the sequence -- required for the 100B-class archs to fit HBM
+    def constrain(x):
+        if residual_spec is not None and s % residual_spec_div(residual_spec) == 0:
+            return jax.lax.with_sharding_constraint(x, residual_spec)
+        return x
+
+    pattern = group_pattern(cfg)
+    pre = prelude_layers(cfg)
+    x = constrain(x)
+    for i in range(pre):
+        x = block_apply(
+            params[f"prelude_{i}"], cfg, x, cfg.layer_kind(i), cfg.layer_is_moe(i), positions
+        )
+        x = constrain(x)
+
+    def group_body(x, group_params):
+        for p_idx, (kind, is_moe) in enumerate(pattern):
+            x = block_apply(
+                group_params[f"pos_{p_idx}"], cfg, x, kind, is_moe, positions
+            )
+        return constrain(x), None
+
+    policy = REMAT_POLICIES.get(remat_policy)
+    if remat_policy != "none":
+        group_body = jax.checkpoint(group_body, policy=policy)
+
+    x, _ = jax.lax.scan(group_body, x, params["blocks"])
+    return apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def lm_logits(params: Params, cfg: ModelConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, hidden)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    remat_policy: str = "dots",
+    residual_spec=None,
+    embed_grad_spec=None,
+    logits_spec=None,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  ``batch``: tokens/embeddings + labels.
+
+    The gold-logit extraction is a masked sum (not take_along_axis): with the
+    vocabulary sharded over "model", a cross-vocab gather would force XLA to
+    replicate the (tokens, vocab) logits -- tens of GiB for 256k vocabs.  The
+    masked sum keeps every op elementwise/reduce over the sharded axis.
+    """
+    hidden = lm_forward(
+        params,
+        cfg,
+        tokens=batch.get("tokens"),
+        embeddings=batch.get("embeddings"),
+        remat_policy=remat_policy,
+        residual_spec=residual_spec,
+        embed_grad_spec=embed_grad_spec,
+    )
+    labels = batch["labels"]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+    def chunk_loss(h_chunk, l_chunk):
+        """Summed CE of one sequence chunk -- the full-sequence logits (a
+        multi-GiB f32 buffer for 256k vocabs) never materialize."""
+        logits = unembed(head, h_chunk).astype(jnp.float32)
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        vocab_iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1
+        )
+        gold = jnp.sum(
+            jnp.where(vocab_iota == l_chunk[..., None], logits, 0.0), axis=-1
+        )
+        return jnp.sum(logz - gold)
+
+    b, s, _ = hidden.shape
+    n_chunks = max(1, s // 2048)
+    if s % n_chunks == 0 and n_chunks > 1:
+        hc = hidden.reshape(b, n_chunks, s // n_chunks, -1).swapaxes(0, 1)
+        lc = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+
+        def body(acc, xs):
+            h, l = xs
+            return acc + chunk_loss(h, l), None
+
+        total, _ = jax.lax.scan(
+            jax.checkpoint(body), jnp.zeros((), jnp.float32), (hc, lc)
+        )
+    else:
+        total = chunk_loss(hidden, labels)
+    return total / (b * s)

@@ -1,0 +1,181 @@
+"""Sharding rules: logical parameter roles -> mesh PartitionSpecs.
+
+Parallelism layout (DESIGN.md Sec. 5):
+
+  * ``("pod", "data")`` -- data parallelism (+ ZeRO for optimizer state),
+  * ``"model"``         -- tensor parallelism: attention heads, MLP hidden,
+                           MoE experts (EP), vocab; decode shards the KV
+                           cache *sequence* over "model" (SP-decode).
+
+Specs are derived from the parameter tree by path+shape rules (the tree
+structure is the one built by ``repro.models.lm.init_lm``); any axis whose
+size does not divide the mesh axis falls back to replication -- sharding
+must never be silently wrong.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "dp_axes",
+    "model_axis_size",
+    "param_specs",
+    "param_shardings",
+    "batch_spec",
+    "zero_spec",
+    "tree_size_bytes",
+]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+# parameter-name -> (shard output dim over model?) rules; see module doc.
+_COL_SHARDED = {"wq", "wk", "wv", "gate", "up", "in_z", "in_x", "w_uk", "w_uv"}
+_ROW_SHARDED = {"wo", "down", "out_proj"}
+_REPLICATED = {"router", "w_dkv", "w_kr", "in_B", "in_C", "in_dt"}
+_VOCAB_TABLES = {"embed", "lm_head"}
+# head-aligned sharding guards: sharding a head-structured projection over
+# "model" is only profitable when the head count divides the axis --
+# otherwise XLA factorizes the sharding across the head boundary and falls
+# back to involuntary rematerialization at the attention reshape.
+_Q_HEAD_PARAMS = {"wq", "wo", "w_uk", "w_uv"}
+_KV_HEAD_PARAMS = {"wk", "wv"}
+
+
+def _spec_for(
+    path: Tuple[str, ...], shape: Tuple[int, ...], model: int, cfg=None
+) -> P:
+    """Sharding spec for one parameter, ignoring any stacked layer axis."""
+    # innermost named ancestor that identifies the role
+    names = set(path)
+    leaf = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    if cfg is not None and model > 1:
+        role = parent if parent in (_Q_HEAD_PARAMS | _KV_HEAD_PARAMS) else (
+            leaf if leaf in (_Q_HEAD_PARAMS | _KV_HEAD_PARAMS) else None
+        )
+        if role in _Q_HEAD_PARAMS and cfg.n_heads % model != 0:
+            return P(*([None] * len(shape)))
+        if role in _KV_HEAD_PARAMS and cfg.n_kv_heads % model != 0:
+            return P(*([None] * len(shape)))
+
+    if parent in _VOCAB_TABLES and leaf == "table":
+        return P("model", None) if _div(shape[0], model) else P(None, None)
+
+    if parent in _REPLICATED or leaf in _REPLICATED:
+        return P(*([None] * len(shape)))
+
+    # MoE expert stacks: (E, d_in, d_out) -> experts over model (EP)
+    if parent in ("gate", "up", "down") and len(shape) == 3 or (
+        leaf in ("gate", "up", "down") and len(shape) == 3
+    ):
+        return (
+            P("model", None, None) if _div(shape[0], model) else P(None, None, None)
+        )
+
+    if (parent in _COL_SHARDED or leaf in _COL_SHARDED) and len(shape) == 2:
+        return P(None, "model") if _div(shape[1], model) else P(None, None)
+    if (parent in _COL_SHARDED) and len(shape) == 1:  # bias of a col-sharded proj
+        return P("model") if _div(shape[0], model) else P(None)
+
+    if (parent in _ROW_SHARDED or leaf in _ROW_SHARDED) and len(shape) == 2:
+        return P("model", None) if _div(shape[0], model) else P(None, None)
+    if parent in _ROW_SHARDED and len(shape) == 1:
+        return P(None)
+
+    if leaf in ("conv_x",):  # (d_conv, d_inner): channel = model axis
+        return P(None, "model") if _div(shape[1], model) else P(None, None)
+    if leaf in ("conv_bx", "norm_scale"):
+        return P("model") if _div(shape[0], model) else P(None)
+    # everything else (norms, scalars, conv_B/C, A_log, D, dt_bias): replicate
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params_tree: Any, mesh: Mesh, fsdp: bool = True, cfg=None) -> Any:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS leaves).
+
+    With ``fsdp=True`` (default) every parameter additionally shards its
+    first yet-unsharded, divisible axis over the data axes (weight-sharded
+    data parallelism): mandatory for the 100B-class archs to fit HBM, and
+    XLA SPMD turns the per-layer weight gathers into scan-local all-gathers
+    that the latency-hiding scheduler overlaps with compute.
+    """
+    model = model_axis_size(mesh)
+
+    def one(path, leaf):
+        names = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        shape = tuple(leaf.shape)
+        stacked = "blocks" in names  # scan-stacked: leading layer axis
+        if stacked:
+            inner = _spec_for(names, shape[1:], model, cfg)
+            if fsdp and len(shape) >= 3:
+                # never FSDP-shard the stacked layer axis (scan slices it)
+                inner = zero_spec(inner, shape[1:], mesh)
+            return P(None, *inner)
+        spec = _spec_for(names, shape, model, cfg)
+        if fsdp and len(shape) >= 2:
+            spec = zero_spec(spec, shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings(params_tree: Any, mesh: Mesh, cfg=None) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_tree, mesh, cfg=cfg),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch sharded over all data axes; remaining dims replicated."""
+    return P(dp_axes(mesh), *([None] * extra_dims))
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Upgrade a param spec with ZeRO sharding of the optimizer state:
+    shard the first yet-unsharded axis divisible by the DP world size over
+    the data axes.  Falls back to the original spec."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp_size <= 1:
+        return spec
+    # already ZeRO/FSDP-sharded somewhere: a mesh axis may appear only once
+    used = set()
+    for e in spec:
+        for n in e if isinstance(e, tuple) else ((e,) if e else ()):
+            used.add(n)
+    if used & set(dp):
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if s is None and _div(dim, dp_size):
+            entries[i] = dp
+            return P(*entries)
+    return spec
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize for leaf in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,459 @@
+"""Serving: prefill + single-token decode with distributed KV/SSM caches.
+
+Cache layout mirrors the scan-stacked parameter layout: one entry per group
+position, stacked over scan groups (leading ``G`` axis), plus unstacked
+prelude entries.  Cache kinds:
+
+  * GQA attention:  ``{"k","v"}: (G, b, S, kv_heads, head_dim)``
+  * MLA:            ``{"c_kv": (G, b, S, kv_lora), "k_r": (G, b, S, rope)}``
+                    -- the compressed-latent cache (the MLA memory win);
+                    decode uses the *absorbed* formulation (scores against
+                    c_kv directly, W_uk folded into the query).
+  * SSD (mamba2):   ``{"ssm": (G, b, H, P, N), "conv": (G, b, w, conv_dim)}``
+                    -- O(1)-size state, no sequence axis at all.
+
+Sequence-parallel decode: the KV cache's sequence axis is sharded over the
+``model`` mesh axis.  The decode attention is written so the SPMD
+partitioner keeps S sharded: per-shard partial scores -> global max/sum
+(the log-sum-exp combine) -> per-shard weighted values -> all-reduce.  This
+is distributed flash-decode expressed in pure jnp + sharding constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.blocks import group_pattern, prelude_layers
+from repro.models.layers.attention import attention_qkv
+from repro.models.layers.basics import apply_norm, dense, embed, mlp_apply, unembed
+from repro.models.layers.basics import apply_rope, rope_frequencies
+from repro.models.layers.moe import moe_apply
+from repro.models.layers.ssm import ssm_decode_step, ssm_state_shapes
+from repro.models.lm import prelude_layers as _pre  # noqa: F401 (re-export safety)
+from repro.parallel.sharding import dp_axes
+
+__all__ = [
+    "cache_shapes",
+    "cache_specs",
+    "init_cache",
+    "make_serve_step",
+    "make_prefill",
+]
+
+
+# ---------------------------------------------------------------------------
+# Cache structure
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(
+    cfg: ModelConfig, kind: str, batch: int, max_seq: int
+) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """{name: (shape, dtype)} for one (unstacked) layer."""
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "ssm":
+        sh = ssm_state_shapes(cfg, batch)
+        return {"ssm": (sh["ssm"], jnp.float32), "conv": (sh["conv"], dt)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": ((batch, max_seq, m.kv_lora_rank), dt),
+            "k_r": ((batch, max_seq, m.qk_rope_dim), dt),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": ((batch, max_seq, cfg.n_kv_heads, hd), dt),
+        "v": ((batch, max_seq, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the whole cache."""
+    pre = prelude_layers(cfg)
+    pattern = group_pattern(cfg)
+    n_groups = (cfg.n_layers - pre) // cfg.block_group
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    out: Dict[str, Any] = {}
+    for i in range(pre):
+        kind = cfg.layer_kind(i)
+        out[f"prelude_{i}"] = {
+            k: sds(sh, dt) for k, (sh, dt) in _layer_cache_shape(cfg, kind, batch, max_seq).items()
+        }
+    blocks = {}
+    for p_idx, (kind, _) in enumerate(pattern):
+        blocks[f"pos_{p_idx}"] = {
+            k: sds((n_groups,) + sh, dt)
+            for k, (sh, dt) in _layer_cache_shape(cfg, kind, batch, max_seq).items()
+        }
+    out["blocks"] = blocks
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int) -> Any:
+    """PartitionSpec tree: batch over data axes; seq (or heads) over model.
+
+    Any non-divisible axis falls back to replication (e.g. ``long_500k``
+    decodes a single sequence: batch cannot shard over data)."""
+    dp_all = dp_axes(mesh)
+    dp_size = 1
+    for a in dp_all:
+        dp_size *= mesh.shape[a]
+    dp = dp_all if (batch % max(dp_size, 1) == 0) else None
+    model = mesh.shape.get("model", 1)
+
+    def spec_for(path_key: str, shape: Tuple[int, ...], stacked: bool) -> P:
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+        if path_key in ("k", "v"):  # (b, S, kvh, hd): seq over model
+            s_ok = body[1] % model == 0
+            return P(*lead, dp, "model" if s_ok else None, None, None)
+        if path_key in ("c_kv", "k_r"):  # (b, S, r)
+            s_ok = body[1] % model == 0
+            return P(*lead, dp, "model" if s_ok else None, None)
+        if path_key == "ssm":  # (b, H, P, N): heads over model
+            h_ok = body[1] % model == 0
+            return P(*lead, dp, "model" if h_ok else None, None, None)
+        if path_key == "conv":  # (b, w, conv_dim)
+            return P(*lead, dp, None, None)
+        raise KeyError(path_key)
+
+    shapes = cache_shapes(cfg, batch, max_seq)
+
+    def walk(tree, stacked):
+        return {
+            k: (
+                walk(v, stacked)
+                if isinstance(v, dict)
+                else spec_for(k, tuple(v.shape), stacked)
+            )
+            for k, v in tree.items()
+        }
+
+    out = {}
+    for k, v in shapes.items():
+        out[k] = walk(v, stacked=(k == "blocks"))
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    """Concrete zero-filled cache (CPU tests / real serving)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes(cfg, batch, max_seq)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention cores
+# ---------------------------------------------------------------------------
+
+
+def _gqa_decode(p, cfg: ModelConfig, x, cache, position):
+    """x: (b,1,d); cache k/v: (b,S,kvh,hd); position: (b,) int32."""
+    b = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k_new, v_new = attention_qkv(p, cfg, x, positions=position[:, None])
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, position].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, position].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)  # (b, kvh, g, hd) -- squeeze the seq dim
+    # partial scores over the (possibly model-sharded) cache sequence
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    mask = jnp.arange(S)[None, :] <= position[:, None]  # (b, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    # log-sum-exp combine: XLA lowers the sharded-S reductions to the
+    # distributed max/sum (flash-decode) pattern
+    a = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", a.astype(v.dtype), v)
+    out = out.reshape(b, 1, h * hd)
+    return dense(p["wo"], out), {"k": k, "v": v}
+
+
+def _mla_decode(p, cfg: ModelConfig, x, cache, position):
+    """Absorbed MLA decode: scores directly against the compressed latents."""
+    m = cfg.mla
+    b = x.shape[0]
+    S = cache["c_kv"].shape[1]
+    h = cfg.n_heads
+
+    from repro.models.layers.attention import mla_latents
+
+    c_new, kr_new = mla_latents(p, cfg, x, position[:, None])  # (b,1,r), (b,1,rope)
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, position].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_r = cache["k_r"].at[bidx, position].set(kr_new[:, 0].astype(cache["k_r"].dtype))
+
+    q = dense(p["wq"], x).reshape(b, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    rot, inv = rope_frequencies(m.qk_rope_dim, 1.0, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, None], position[:, None], rot, inv)[:, 0]
+
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk.astype(q.dtype))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhp,bsp->bhs", q_rope, k_r, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = jnp.arange(S)[None, :] <= position[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", a.astype(c_kv.dtype), c_kv)
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    val = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(ctx.dtype))
+    out = val.reshape(b, 1, h * m.v_head_dim)
+    return dense(p["wo"], out), {"c_kv": c_kv, "k_r": k_r}
+
+
+def _ffn_decode(p, cfg: ModelConfig, is_moe: bool, x):
+    if is_moe:
+        return moe_apply(p, cfg, x)
+    return mlp_apply(p, x, cfg.act)
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, is_moe: bool, x, cache, position):
+    has_ffn = "ffn" in p
+    if cfg.parallel_block:
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        if kind == "attn":
+            mix, cache = (
+                _mla_decode(p["mixer"], cfg, h, cache, position)
+                if cfg.mla is not None
+                else _gqa_decode(p["mixer"], cfg, h, cache, position)
+            )
+        else:
+            mix, cache = ssm_decode_step(p["mixer"], cfg, h, cache)
+        out = x + mix
+        if has_ffn:
+            out = out + _ffn_decode(p["ffn"], cfg, is_moe, h)
+        return out, cache
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        mix, cache = (
+            _mla_decode(p["mixer"], cfg, h, cache, position)
+            if cfg.mla is not None
+            else _gqa_decode(p["mixer"], cfg, h, cache, position)
+        )
+    else:
+        mix, cache = ssm_decode_step(p["mixer"], cfg, h, cache)
+    x = x + mix
+    if has_ffn:
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + _ffn_decode(p["ffn"], cfg, is_moe, h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# serve_step / prefill factories
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    """Returns (serve_fn, in_shardings, out_shardings).
+
+    ``serve_fn(params, cache, tokens, position) -> (next_tokens, logits_f32
+    stats, cache)``: one decode step for the whole batch.
+    """
+    from repro.parallel.sharding import batch_spec, param_shardings
+    from repro.train.step import abstract_params
+
+    pattern = group_pattern(cfg)
+    pre = prelude_layers(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def serve_fn(params, cache, tokens, position):
+        x = embed(params["embed"], tokens, dtype)  # (b, 1, d)
+        if not cfg.use_rope:
+            d = cfg.d_model
+            inv = 1.0 / (10_000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+            ang = position[:, None].astype(jnp.float32) * inv
+            pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pos_emb.astype(dtype)[:, None, :]
+
+        new_cache: Dict[str, Any] = {}
+        for i in range(pre):
+            x, new_cache[f"prelude_{i}"] = _block_decode(
+                params[f"prelude_{i}"],
+                cfg,
+                cfg.layer_kind(i),
+                cfg.layer_is_moe(i),
+                x,
+                cache[f"prelude_{i}"],
+                position,
+            )
+
+        def group_body(x, xs):
+            gparams, gcache = xs
+            outc = {}
+            for p_idx, (kind, is_moe) in enumerate(pattern):
+                x, outc[f"pos_{p_idx}"] = _block_decode(
+                    gparams[f"pos_{p_idx}"],
+                    cfg,
+                    kind,
+                    is_moe,
+                    x,
+                    gcache[f"pos_{p_idx}"],
+                    position,
+                )
+            return x, outc
+
+        x, blocks_cache = jax.lax.scan(
+            group_body, x, (params["blocks"], cache["blocks"])
+        )
+        new_cache["blocks"] = blocks_cache
+
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = unembed(head, x[:, 0, :]).astype(jnp.float32)  # (b, vocab)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, new_cache
+
+    params_sds = abstract_params(cfg, dtype)
+    params_sh = param_shardings(params_sds, mesh, cfg=cfg)
+    cspecs = cache_specs(cfg, mesh, batch, max_seq)
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    dp_all = dp_axes(mesh)
+    dp_size = 1
+    for a in dp_all:
+        dp_size *= mesh.shape[a]
+    bspec = (dp_all,) if batch % max(dp_size, 1) == 0 else (None,)
+    tok_sh = NamedSharding(mesh, P(*bspec, None))
+    pos_sh = NamedSharding(mesh, P(*bspec))
+    logits_sh = NamedSharding(
+        mesh,
+        P(*bspec, "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None),
+    )
+    in_sh = (params_sh, cache_sh, tok_sh, pos_sh)
+    out_sh = (pos_sh, logits_sh, cache_sh)
+    return serve_fn, in_sh, out_sh, params_sds
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    """Prefill: full forward that also produces the filled cache.
+
+    ``prefill_fn(params, batch_inputs) -> (last_logits, cache)``.
+    """
+    from repro.models.blocks import block_apply
+    from repro.models.layers.attention import mla_latents
+    from repro.parallel.sharding import batch_spec, param_shardings
+    from repro.train.step import abstract_params
+    from repro.models.layers.ssm import ssm_apply  # noqa: F401
+
+    pattern = group_pattern(cfg)
+    pre = prelude_layers(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    dp = dp_axes(mesh)
+    residual_sh = (
+        NamedSharding(mesh, P(dp, "model", None))
+        if mesh.shape.get("model", 1) > 1
+        else None
+    )
+
+    def layer_with_cache(p, kind, is_moe, x, positions):
+        """block_apply + cache extraction for one layer."""
+        h_in = apply_norm(p["norm1"], x, cfg.norm)
+        cache: Dict[str, jnp.ndarray] = {}
+        if kind == "attn":
+            if cfg.mla is not None:
+                c_kv, k_r = mla_latents(p["mixer"], cfg, h_in, positions)
+                cache = {"c_kv": c_kv.astype(dtype), "k_r": k_r.astype(dtype)}
+            else:
+                q, k, v = attention_qkv(p["mixer"], cfg, h_in, positions)
+                cache = {"k": k.astype(dtype), "v": v.astype(dtype)}
+        else:
+            # SSD: run the chunked scan and keep the final state
+            from repro.models.layers.ssm import (
+                _causal_conv,  # type: ignore[attr-defined]
+                _dims,
+                _project,
+                ssd_chunked,
+            )
+
+            s_cfg = cfg.ssm
+            b, s, _ = h_in.shape
+            d_inner, n_heads, conv_dim, g, n = _dims(cfg)
+            z, xs, B, C, dt = _project(p["mixer"], cfg, h_in)
+            conv_tail = jnp.concatenate([xs, B, C], axis=-1)[:, -(s_cfg.d_conv - 1) :, :]
+            xs = _causal_conv(xs, p["mixer"]["conv_x"].astype(xs.dtype), p["mixer"]["conv_bx"])
+            B = _causal_conv(B, p["mixer"]["conv_B"].astype(B.dtype), p["mixer"]["conv_bB"])
+            C = _causal_conv(C, p["mixer"]["conv_C"].astype(C.dtype), p["mixer"]["conv_bC"])
+            xs = xs.reshape(b, s, n_heads, s_cfg.head_dim)
+            B = B.reshape(b, s, g, n)
+            C = C.reshape(b, s, g, n)
+            dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["mixer"]["dt_bias"])
+            A = -jnp.exp(p["mixer"]["A_log"])
+            _, final_state = ssd_chunked(xs, dtv, A, B, C, chunk=min(s_cfg.chunk, s))
+            cache = {"ssm": final_state, "conv": conv_tail.astype(dtype)}
+        # the actual layer output (recomputes the mixer -- clarity over
+        # cleverness here; XLA CSEs the shared projections)
+        x = block_apply(p, cfg, x, kind, is_moe, positions)
+        return x, cache
+
+    def prefill_fn(params, inputs):
+        if cfg.frontend is not None:
+            x = inputs["embeddings"].astype(dtype)
+        else:
+            x = embed(params["embed"], inputs["tokens"], dtype)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)
+        if not cfg.use_rope:
+            d = cfg.d_model
+            inv = 1.0 / (10_000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+            ang = positions[:, None].astype(jnp.float32) * inv
+            pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pos_emb.astype(dtype)[None]
+
+        def constrain(v):
+            if residual_sh is not None and v.shape[1] % mesh.shape.get("model", 1) == 0:
+                return jax.lax.with_sharding_constraint(v, residual_sh)
+            return v
+
+        x = constrain(x)
+        cache: Dict[str, Any] = {}
+        for i in range(pre):
+            x, cache[f"prelude_{i}"] = layer_with_cache(
+                params[f"prelude_{i}"], cfg.layer_kind(i), cfg.layer_is_moe(i), x, positions
+            )
+            x = constrain(x)
+
+        def group_body(x, gparams):
+            outc = {}
+            for p_idx, (kind, is_moe) in enumerate(pattern):
+                x, outc[f"pos_{p_idx}"] = layer_with_cache(
+                    gparams[f"pos_{p_idx}"], kind, is_moe, x, positions
+                )
+            return constrain(x), outc
+
+        x, blocks_cache = jax.lax.scan(group_body, x, params["blocks"])
+        cache["blocks"] = blocks_cache
+
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        last_logits = unembed(head, x[:, -1, :]).astype(jnp.float32)
+        return last_logits, cache
+
+    params_sds = abstract_params(cfg, dtype)
+    params_sh = param_shardings(params_sds, mesh, cfg=cfg)
+    cspecs = cache_specs(cfg, mesh, batch, seq)
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    in_sh = (params_sh, None)
+    out_sh = (NamedSharding(mesh, batch_spec(mesh, 1)), cache_sh)
+    return prefill_fn, in_sh, out_sh, params_sds

@@ -1,0 +1,225 @@
+"""Sharded checkpointing with atomic commit and restart/elastic re-carve.
+
+Design (no external deps -- orbax is unavailable by construction):
+
+  * every host saves the process-local shards of every array
+    (``.addressable_shards``) into one ``.npz`` per host, with a msgpack-free
+    JSON index mapping tree paths -> (global shape, dtype, shard indices);
+  * writes go to ``<dir>/step_<n>.tmp_<uuid>/`` and the directory is
+    atomically renamed on completion -- a crash mid-save never corrupts the
+    latest checkpoint (restart picks the newest *committed* step);
+  * restore reassembles global arrays via ``jax.make_array_from_callback``
+    against the *current* mesh/sharding -- the checkpoint is
+    topology-independent, so a restart may re-carve onto a different mesh
+    (elastic downscale after node failure: see ``repro/train/elastic.py``);
+  * an async mode snapshots device arrays to host memory synchronously and
+    writes to disk on a background thread (training continues).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import uuid
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+_SEP = "/"
+
+# numpy's format cannot store bf16/f8 natively: view them as uint bits
+_EXOTIC = {"bfloat16", "float8_e4m3fn", "float8_e5m2"}
+
+
+def _encode(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        bits = np.uint16 if arr.dtype.itemsize == 2 else np.uint8
+        return arr.view(bits), name
+    return arr, name
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten_with_paths(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p)
+            for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> Path:
+    """Atomic sharded save.  Returns the committed directory."""
+    base = Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    tmp = base / f"step_{step:09d}.tmp_{uuid.uuid4().hex[:8]}"
+    final = base / f"step_{step:09d}"
+    tmp.mkdir()
+
+    flat = _flatten_with_paths(tree)
+    index: Dict[str, Any] = {"step": step, "arrays": {}}
+    payload: Dict[str, np.ndarray] = {}
+    for key, leaf in flat.items():
+        arr = leaf
+        if isinstance(arr, jax.Array):
+            shards = arr.addressable_shards
+            idx_list = []
+            dname = str(arr.dtype)
+            for i, sh in enumerate(shards):
+                name = f"{key}@@{i}"
+                enc, dname = _encode(np.asarray(sh.data))
+                payload[name] = enc
+                idx_list.append(
+                    {"slot": i, "index": _serialize_index(sh.index, arr.shape)}
+                )
+            index["arrays"][key] = {
+                "shape": list(arr.shape),
+                "dtype": dname,
+                "shards": idx_list,
+            }
+        else:
+            enc, dname = _encode(np.asarray(arr))
+            payload[f"{key}@@0"] = enc
+            index["arrays"][key] = {
+                "shape": list(np.shape(arr)),
+                "dtype": dname,
+                "shards": [{"slot": 0, "index": None}],
+            }
+    np.savez(tmp / "host_0.npz", **payload)
+    (tmp / "index.json").write_text(json.dumps(index))
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def _serialize_index(idx: Tuple[slice, ...], shape) -> list:
+    out = []
+    for sl, dim in zip(idx, shape):
+        out.append([sl.start or 0, sl.stop if sl.stop is not None else dim])
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    base = Path(directory)
+    if not base.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in base.iterdir()
+        if p.name.startswith("step_") and ".tmp_" not in p.name
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    target: Any,
+    shardings: Optional[Any] = None,
+) -> Any:
+    """Restore into the structure of ``target`` (SDS or arrays), placing
+    shards per ``shardings`` (defaults to replicated host arrays).
+
+    Works across mesh changes: data is reassembled globally, then
+    re-sharded by the current sharding -- the elastic re-carve path.
+    """
+    base = Path(directory) / f"step_{step:09d}"
+    index = json.loads((base / "index.json").read_text())
+    data = np.load(base / "host_0.npz")
+
+    flat_target = _flatten_with_paths(target)
+    flat_shardings = _flatten_with_paths(shardings) if shardings is not None else {}
+
+    restored: Dict[str, Any] = {}
+    for key, meta in index["arrays"].items():
+        shape = tuple(meta["shape"])
+        dtype = _np_dtype(meta["dtype"])
+
+        def _decode(piece):
+            if meta["dtype"] in _EXOTIC:
+                return piece.view(dtype)
+            return piece.astype(dtype, copy=False)
+
+        if shape == ():
+            full = _decode(data[f"{key}@@0"]).reshape(())
+        else:
+            full = np.zeros(shape, dtype)
+            for sh in meta["shards"]:
+                piece = _decode(data[f"{key}@@{sh['slot']}"])
+                if sh["index"] is None:
+                    full = piece.reshape(shape)
+                    break
+                slices = tuple(slice(a, b) for a, b in sh["index"])
+                full[slices] = piece
+        sharding = flat_shardings.get(key)
+        if sharding is not None:
+            arr = jax.make_array_from_callback(
+                shape, sharding, lambda idx, f=full: f[idx]
+            )
+        else:
+            arr = jax.numpy.asarray(full)
+        restored[key] = arr
+
+    # rebuild the tree in target order
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    keys = list(_flatten_with_paths(target).keys())
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class CheckpointManager:
+    """Keep-last-k manager with optional async disk writes."""
+
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        # snapshot to host memory synchronously (device buffers may be
+        # donated/overwritten by the next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if self._thread is not None:
+            self._thread.join()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        base = Path(self.directory)
+        steps = sorted(
+            p for p in base.iterdir()
+            if p.name.startswith("step_") and ".tmp_" not in p.name
+        )
+        for p in steps[: -self.keep]:
+            for f in p.iterdir():
+                f.unlink()
+            p.rmdir()

@@ -1,0 +1,121 @@
+"""Training driver: init -> (restore?) -> step loop -> checkpoint/metrics.
+
+Fault-tolerance contract (DESIGN.md Sec. 5):
+  * checkpoint every ``ckpt_every`` steps (atomic, async, keep-last-k);
+  * on start, resume from the latest committed step if one exists;
+  * the data pipeline is a pure function of ``step`` -- restart reproduces
+    the exact batch sequence;
+  * straggler / failure handling wraps the step in a watchdog that raises
+    after ``step_timeout_s`` so the supervisor (launch script) can re-carve
+    the mesh (see ``repro/train/elastic.py``) and restart from the last
+    checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import init_lm
+from repro.train.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.train.optimizer import init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["TrainerConfig", "train"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    seed: int = 0
+    step_timeout_s: float = 3600.0
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    trainer: TrainerConfig,
+    mesh,
+    batch_fn: Callable[[int], Dict[str, np.ndarray]],
+    on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+):
+    """Run the training loop; returns (params, opt_state, metrics history)."""
+    step_fn, (in_sh, batch_sh_fn), out_sh, params_sds = make_train_step(
+        cfg, tcfg, mesh
+    )
+    params_sh, opt_sh, step_sh = in_sh[0], in_sh[1], in_sh[2]
+
+    with mesh:
+        start = 0
+        if trainer.ckpt_dir and (ls := latest_step(trainer.ckpt_dir)) is not None:
+            print(f"[train] resuming from step {ls}")
+            params0 = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), params_sds
+            )
+            state_target = {
+                "params": params0,
+                "opt": init_opt_state(params0),
+                "step": jnp.zeros((), jnp.int32),
+            }
+            restored = restore_checkpoint(
+                trainer.ckpt_dir,
+                ls,
+                state_target,
+                {"params": params_sh, "opt": opt_sh, "step": step_sh},
+            )
+            params, opt_state = restored["params"], restored["opt"]
+            start = int(restored["step"])
+        else:
+            key = jax.random.PRNGKey(trainer.seed)
+            params = jax.jit(
+                lambda k: init_lm(k, cfg, jnp.dtype(tcfg.param_dtype)),
+                out_shardings=params_sh,
+            )(key)
+            opt_state = jax.jit(init_opt_state, out_shardings=opt_sh)(params)
+
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(params_sh, opt_sh, step_sh, None),
+            out_shardings=out_sh,
+            donate_argnums=(0, 1),
+        )
+
+        ckpt = (
+            CheckpointManager(trainer.ckpt_dir) if trainer.ckpt_dir else None
+        )
+        history = []
+        step = jnp.asarray(start, jnp.int32)
+        for i in range(start, trainer.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in batch_fn(i).items()}
+            params, opt_state, step, metrics = jitted(params, opt_state, step, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time_s"] = time.time() - t0
+            if metrics["step_time_s"] > trainer.step_timeout_s:
+                raise TimeoutError(
+                    f"step {i} exceeded {trainer.step_timeout_s}s -- straggler; "
+                    "supervisor should re-carve (elastic.py) and restart"
+                )
+            history.append(metrics)
+            if on_metrics:
+                on_metrics(i, metrics)
+            if trainer.log_every and i % trainer.log_every == 0:
+                print(
+                    f"[train] step {i:5d} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} "
+                    f"({metrics['step_time_s']*1e3:.0f} ms)"
+                )
+            if ckpt and (i + 1) % trainer.ckpt_every == 0:
+                ckpt.save(i + 1, {"params": params, "opt": opt_state, "step": step})
+        if ckpt:
+            ckpt.wait()
+        return params, opt_state, history

@@ -1,0 +1,168 @@
+"""Training step factory: loss -> grads -> SyncEngine -> AdamW.
+
+``make_train_step`` builds the jit-able step for a (model config, train
+config, mesh) triple, together with the in/out shardings needed for
+``jax.jit(...).lower()`` -- used by both the real trainer and the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.sync.strategies import opt_state_specs, shape_gradients
+from repro.models.lm import init_lm, lm_loss
+from repro.parallel.sharding import batch_spec, param_shardings, param_specs
+from repro.train.optimizer import OptConfig, adamw_update, compress_decompress
+
+__all__ = ["TrainConfig", "make_train_step", "train_state_specs", "abstract_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    sync_strategy: str = "scu"  # scu | tas | sw (see core/sync/strategies.py)
+    remat_policy: str = "full"
+    param_dtype: str = "bfloat16"
+    sequence_parallel: bool = True  # shard the residual carry over "model"
+    grad_accum: int = 1  # microbatches per step (activation-memory knob)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree of the model parameters (no allocation)."""
+    sds = jax.eval_shape(
+        functools.partial(init_lm, cfg=cfg, dtype=dtype), jax.random.PRNGKey(0)
+    )
+    return sds
+
+
+def train_state_specs(
+    cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh
+) -> Dict[str, Any]:
+    """PartitionSpec trees for (params, opt_state, step)."""
+    params_sds = abstract_params(cfg, jnp.dtype(tcfg.param_dtype))
+    pspecs = param_specs(params_sds, mesh, cfg=cfg)
+    ospecs = opt_state_specs(tcfg.sync_strategy, params_sds, mesh, cfg=cfg)
+    return {"params": pspecs, "opt": ospecs, "step": P()}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """Returns (step_fn, in_shardings, out_shardings, abstract_state).
+
+    ``step_fn(params, opt_state, step, batch) -> (params, opt_state, step,
+    metrics)``.  All sharding is communicated via in/out shardings; the
+    gradient path is shaped by the configured SyncEngine strategy.
+    """
+    param_dtype = jnp.dtype(tcfg.param_dtype)
+    params_sds = abstract_params(cfg, param_dtype)
+    specs = train_state_specs(cfg, tcfg, mesh)
+
+    def to_shardings(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    params_sh = to_shardings(specs["params"])
+    opt_sh = to_shardings(specs["opt"])
+    step_sh = NamedSharding(mesh, P())
+    bspec = NamedSharding(mesh, batch_spec(mesh, extra_dims=1))
+    bspec3 = NamedSharding(mesh, batch_spec(mesh, extra_dims=2))
+
+    def batch_shardings(batch_sds: Dict[str, Any]):
+        return {
+            k: (bspec3 if v.ndim == 3 else bspec) for k, v in batch_sds.items()
+        }
+
+    use_int8 = tcfg.opt.compression == "int8"
+
+    residual_sh = (
+        NamedSharding(mesh, P(tuple(a for a in mesh.axis_names if a in ("pod", "data")), "model", None))
+        if (tcfg.sequence_parallel and mesh.shape.get("model", 1) > 1)
+        else None
+    )
+
+    embed_grad_sh = params_sh["embed"]["table"]
+    logits_sh = NamedSharding(
+        mesh,
+        P(
+            tuple(a for a in mesh.axis_names if a in ("pod", "data")),
+            None,
+            "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None,
+        ),
+    )
+
+    accum = max(1, tcfg.grad_accum)
+
+    def loss_fn(p, b):
+        return lm_loss(
+            p, cfg, b, remat_policy=tcfg.remat_policy,
+            residual_spec=residual_sh, embed_grad_spec=embed_grad_sh,
+            logits_spec=logits_sh,
+        )
+
+    def step_fn(params, opt_state, step, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = shape_gradients(
+                tcfg.sync_strategy, grads, params_sds, mesh, cfg=cfg
+            )
+        else:
+            # gradient accumulation: scan over microbatches; the f32
+            # accumulators live on the ZeRO/FSDP shards (constrained per
+            # microbatch), so they cost params/world_size, not params.
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                g = shape_gradients(
+                    tcfg.sync_strategy, g, params_sds, mesh, cfg=cfg
+                )
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p_: jnp.zeros(p_.shape, jnp.float32), params
+            )
+            g0 = shape_gradients("scu" if tcfg.sync_strategy == "scu" else
+                                 tcfg.sync_strategy, g0, params_sds, mesh, cfg=cfg)
+            (gsum, lsum), _ = jax.lax.scan(
+                mb, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+
+        if use_int8:
+            grads = jax.tree.map(
+                lambda g: compress_decompress(g, None)[0], grads
+            )
+
+        new_params, new_opt, metrics = adamw_update(
+            tcfg.opt, grads, opt_state, step, param_dtype
+        )
+        # params return to their TP sharding (all-gather under ZeRO)
+        new_params = jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(p, s),
+            new_params,
+            params_sh,
+        )
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, step + 1, metrics
+
+    in_shardings = (params_sh, opt_sh, step_sh, None)  # batch filled at lower
+    out_shardings = (params_sh, opt_sh, step_sh, None)
+    return step_fn, (in_shardings, batch_shardings), out_shardings, params_sds

@@ -1,0 +1,14 @@
+"""Test env: a handful of host devices for the distributed-path tests.
+
+NOTE: this deliberately requests 4 (not 512) devices -- the 512-device
+production mesh exists only inside ``repro.launch.dryrun`` (per assignment).
+"""
+
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+# repo root on sys.path so `import benchmarks` works under pytest
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))

@@ -1,0 +1,251 @@
+"""Model-layer correctness tests: oracles, equivalences, param counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_config, get_smoke_config, list_archs
+from repro.models.layers.attention import chunked_attention, naive_attention
+from repro.models.layers.moe import dispatch_indices, router_topk
+from repro.models.layers.ssm import ssd_chunked, ssd_recurrent
+from repro.models.lm import init_lm, lm_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked online-softmax == naive
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("sq", [128, 256])
+def test_chunked_attention_matches_naive(h, kvh, sq):
+    d = 32
+    b = 2
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sq, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sq, kvh, d), jnp.float32)
+    ref = naive_attention(q, k, v, causal=True)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_bf16_close():
+    b, s, h, d = 1, 256, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.bfloat16)
+    ref = naive_attention(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    out = chunked_attention(q, k, v, q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), rtol=0.1, atol=0.05
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked dual form == token-by-token recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_ssd_chunked_matches_recurrent(chunk):
+    b, s, h, p, g, n = 2, 64, 4, 8, 2, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n), jnp.float32) * 0.3
+    y_ref, st_ref = ssd_recurrent(x, dt, A, B, C)
+    y, st = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_initial_state_continuation():
+    """Processing [part1; part2] == processing part2 with part1's final state."""
+    b, s, h, p, g, n = 1, 64, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    y_full, st_full = ssd_chunked(x, dt, A, B, C, chunk=16)
+    half = s // 2
+    y1, st1 = ssd_chunked(x[:, :half], dt[:, :half], A, B[:, :half], C[:, :half], chunk=16)
+    y2, st2 = ssd_chunked(
+        x[:, half:], dt[:, half:], A, B[:, half:], C[:, half:], chunk=16,
+        initial_state=st1,
+    )
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, half:]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+
+def _dense_moe_reference(xf, router, gate, up, down, m: MoEConfig):
+    """Loop-over-experts reference (no capacity drops)."""
+    logits = xf.astype(jnp.float32) @ router
+    weights, idx = router_topk(logits, m)
+    T, d = xf.shape
+    out = jnp.zeros((T, d), jnp.float32)
+    for e in range(m.n_experts):
+        h = jax.nn.silu(xf @ gate[e]) * (xf @ up[e])
+        y = h @ down[e]
+        w = ((idx == e) * weights).sum(-1)  # (T,)
+        out = out + w[:, None] * y.astype(jnp.float32)
+    return out
+
+
+def test_moe_matches_dense_reference_when_capacity_ample():
+    m = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, capacity_factor=8.0)
+    T, d = 64, 16
+    ks = jax.random.split(KEY, 5)
+    xf = jax.random.normal(ks[0], (T, d), jnp.float32)
+    router = jax.random.normal(ks[1], (d, m.n_experts), jnp.float32)
+    gate = jax.random.normal(ks[2], (m.n_experts, d, m.d_ff_expert)) * 0.1
+    up = jax.random.normal(ks[3], (m.n_experts, d, m.d_ff_expert)) * 0.1
+    down = jax.random.normal(ks[4], (m.n_experts, m.d_ff_expert, d)) * 0.1
+
+    from repro.configs.base import ModelConfig
+    from repro.models.layers.moe import moe_apply
+
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=1, n_kv_heads=1,
+        d_ff=32, vocab_size=8, moe=m,
+    )
+    params = {"router": router, "gate": gate, "up": up, "down": down}
+    out = moe_apply(params, cfg, xf[None])  # (1, T, d)
+    ref = _dense_moe_reference(xf, router, gate, up, down, m)
+    np.testing.assert_allclose(
+        np.asarray(out[0], np.float32), np.asarray(ref), rtol=2e-3, atol=2e-3
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    T=st.integers(min_value=4, max_value=64),
+    E=st.sampled_from([4, 8, 16]),
+    K=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_dispatch_indices_properties(T, E, K, seed):
+    """Property: every kept slot lands in the right expert block, ranks are
+    unique per expert, and drops only happen beyond capacity."""
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (T, K), 0, E)
+    C = max(1, (T * K) // E)
+    dest, token, order = dispatch_indices(idx, E, C)
+    dest = np.asarray(dest)
+    token = np.asarray(token)
+    flat_expert = np.asarray(idx).reshape(-1)[np.asarray(order)]
+    kept = dest < E * C
+    # kept slots land in their expert's block
+    assert (dest[kept] // C == flat_expert[kept]).all()
+    # slots within one expert have unique positions
+    for e in range(E):
+        slots = dest[kept & (flat_expert == e)]
+        assert len(np.unique(slots)) == len(slots)
+        assert len(slots) == min(C, (flat_expert == e).sum())
+    # every slot's source token matches its expert assignment
+    orig = np.asarray(idx)
+    for s_i in np.where(kept)[0]:
+        assert flat_expert[s_i] in orig[token[s_i]]
+
+
+# ---------------------------------------------------------------------------
+# Full-model parameter counts vs published sizes
+# ---------------------------------------------------------------------------
+
+PUBLISHED = {
+    # name: (total params, tolerance fraction)
+    "mamba2-1.3b": (1.3e9, 0.15),
+    "jamba-v0.1-52b": (52e9, 0.15),
+    "deepseek-v2-lite-16b": (16e9, 0.15),
+    "qwen3-moe-30b-a3b": (30e9, 0.15),
+    "command-r-plus-104b": (104e9, 0.15),
+    "phi4-mini-3.8b": (3.8e9, 0.20),
+    "stablelm-3b": (2.8e9, 0.25),
+    # the assigned config (d_ff=13440, untied 92k vocab) computes to 8.2B;
+    # the "7B" name undercounts embeddings -- assignment numbers govern
+    "codeqwen1.5-7b": (7e9, 0.20),
+    "llava-next-34b": (34e9, 0.15),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PUBLISHED))
+def test_param_count_matches_published(name):
+    cfg = get_config(name)
+    n = cfg.n_params()
+    target, tol = PUBLISHED[name]
+    assert abs(n - target) / target < tol, f"{name}: {n/1e9:.2f}B vs {target/1e9:.1f}B"
+
+
+ACTIVE = {
+    "qwen3-moe-30b-a3b": (3e9, 0.35),  # A3B
+    "deepseek-v2-lite-16b": (2.4e9, 0.35),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ACTIVE))
+def test_active_params(name):
+    cfg = get_config(name)
+    n = cfg.n_active_params()
+    target, tol = ACTIVE[name]
+    assert abs(n - target) / target < tol, f"{name}: active {n/1e9:.2f}B vs {target/1e9:.1f}B"
+
+
+# ---------------------------------------------------------------------------
+# Smoke: every arch runs a forward/loss step with finite output
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_arch_smoke_forward(name):
+    cfg = get_smoke_config(name)
+    params = init_lm(KEY, cfg)
+    b, s = 2, 32
+    if cfg.frontend:
+        batch = {
+            "embeddings": jax.random.normal(KEY, (b, s, cfg.d_model), jnp.bfloat16),
+            "labels": jnp.zeros((b, s), jnp.int32),
+        }
+    else:
+        batch = {
+            "tokens": jnp.zeros((b, s), jnp.int32),
+            "labels": jnp.zeros((b, s), jnp.int32),
+        }
+    loss = jax.jit(lambda p, bt: lm_loss(p, cfg, bt))(params, batch)
+    assert np.isfinite(float(loss))
+    assert 2.0 < float(loss) < 8.0  # ~ln(vocab) at random init
+
+
+def test_flash_attention_gradients_match_naive():
+    """custom-VJP flash backward == autodiff through naive attention."""
+    b, s, h, kvh, d = 1, 128, 4, 2, 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    tangent = jax.random.normal(ks[3], (b, s, h, d), jnp.float32)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(chunked_attention(q, k, v, q_chunk=32, kv_chunk=32) * tangent)
+
+    def loss_naive(q, k, v):
+        return jnp.sum(naive_attention(q, k, v, causal=True) * tangent)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,336 @@
+"""Unit + property tests for the Tier-1 cycle-accurate SCU simulator."""
+
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scu import (
+    SCU,
+    BarrierState,
+    Cluster,
+    Compute,
+    Mem,
+    Scu,
+    run_barrier_bench,
+    run_mutex_bench,
+)
+from repro.core.scu.primitives import (
+    scu_barrier,
+    scu_mutex_section,
+    sw_barrier,
+    sw_mutex_section,
+    tas_barrier,
+    tas_mutex_section,
+)
+
+
+def make_cluster(n):
+    return Cluster(n_cores=n, scu=SCU(n_cores=n))
+
+
+# ---------------------------------------------------------------------------
+# Engine basics
+# ---------------------------------------------------------------------------
+
+
+def test_compute_only_program_cycles():
+    cl = make_cluster(2)
+
+    def prog(cluster, cid):
+        yield Compute(10)
+        yield Compute(5)
+
+    cl.load([prog, prog])
+    stats = cl.run()
+    # one trailing cycle to observe generator completion
+    assert stats.cycles == 16
+    assert all(c.finished_at == 15 for c in stats.cores)
+    assert all(c.active_cycles == 15 for c in stats.cores)
+    assert all(c.gated_cycles == 0 for c in stats.cores)
+
+
+def test_tcdm_load_store_roundtrip():
+    cl = make_cluster(2)
+    seen = {}
+
+    def writer(cluster, cid):
+        yield Mem("sw", 0x40, 1234)
+
+    def reader(cluster, cid):
+        yield Compute(4)  # let the writer go first
+        v = yield Mem("lw", 0x40)
+        seen["v"] = v
+
+    cl.load([writer, reader])
+    cl.run()
+    assert seen["v"] == 1234
+
+
+def test_tas_returns_value_then_locks():
+    cl = make_cluster(2)
+    got = {}
+
+    def prog(cluster, cid):
+        v = yield Mem("tas", 0x80)
+        got[cid] = v
+
+    cl.load([prog, prog])
+    cl.run()
+    # exactly one core saw the free value 0; the other saw -1
+    assert sorted(got.values()) == [-1, 0]
+
+
+def test_bank_conflict_serializes():
+    cl = make_cluster(2)
+    # two stores to the same bank in the same cycle -> one stalls
+    def prog(cluster, cid):
+        yield Mem("sw", 0x40, cid)
+
+    cl.load([prog, prog])
+    stats = cl.run()
+    assert stats.bank_conflicts >= 1
+    assert stats.cycles >= 2
+
+
+# ---------------------------------------------------------------------------
+# SCU barrier semantics (safety)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_scu_barrier_no_early_release(n):
+    """No core may pass the barrier before the last one arrives."""
+    cl = make_cluster(n)
+    order = []
+
+    def prog(delay):
+        def p(cluster, cid):
+            yield Compute(delay)
+            yield from scu_barrier(cluster, cid)
+            order.append((cid, cluster.cycle))
+
+        return p
+
+    delays = [1 + 7 * i for i in range(n)]
+    cl.load([prog(d) for d in delays])
+    cl.run()
+    last_arrival = max(delays)
+    for cid, cyc in order:
+        assert cyc >= last_arrival, f"core {cid} passed at {cyc} < {last_arrival}"
+    # all cores released within a few cycles of each other
+    times = [c for _, c in order]
+    assert max(times) - min(times) <= 2
+
+
+def test_scu_barrier_reusable_back_to_back():
+    n = 4
+    cl = make_cluster(n)
+    counts = [0] * n
+
+    def prog(cluster, cid):
+        for _ in range(10):
+            yield from scu_barrier(cluster, cid)
+            counts[cid] += 1
+
+    cl.load([prog] * n)
+    cl.run()
+    assert counts == [10] * n
+
+
+# ---------------------------------------------------------------------------
+# Mutex semantics (mutual exclusion + liveness), all three variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["SCU", "TAS", "SW"])
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_mutex_mutual_exclusion_and_liveness(variant, n):
+    cl = make_cluster(n)
+    inside = {"count": 0, "max": 0, "entries": 0}
+
+    def section(cluster, cid):
+        # emulate the critical section body with explicit begin/end marks
+        inside["count"] += 1
+        inside["max"] = max(inside["max"], inside["count"])
+        inside["entries"] += 1
+        yield Compute(3)
+        inside["count"] -= 1
+
+    def prog(cluster, cid):
+        for _ in range(5):
+            if variant == "SCU":
+                yield Compute(1)
+                yield Scu("elw", ("mutex", 0, "lock"))
+                yield from section(cluster, cid)
+                yield Scu("write", ("mutex", 0, "unlock"), 0)
+            elif variant == "SW":
+                while True:
+                    v = yield Mem("tas", 0x10C)
+                    if v == 0:
+                        break
+                    yield Compute(1)
+                yield from section(cluster, cid)
+                yield Mem("sw", 0x10C, 0)
+            else:  # TAS
+                v = yield Mem("tas", 0x10C)
+                while v != 0:
+                    yield Scu("elw", ("notifier", 1, "wait"))
+                    v = yield Mem("tas", 0x10C)
+                yield from section(cluster, cid)
+                yield Mem("sw", 0x10C, 0)
+                yield Scu("write", ("notifier", 1, "trigger"), 0)
+
+    cl.load([prog] * n)
+    cl.run(max_cycles=2_000_000)
+    assert inside["max"] == 1, "mutual exclusion violated"
+    assert inside["entries"] == 5 * n, "liveness violated (missing entries)"
+
+
+def test_scu_mutex_message_passing():
+    """The unlocking core's 32-bit message reaches the next lock owner."""
+    n = 2
+    cl = make_cluster(n)
+    received = {}
+
+    def first(cluster, cid):
+        yield Scu("elw", ("mutex", 0, "lock"))
+        yield Compute(5)
+        yield Scu("write", ("mutex", 0, "unlock"), 0xBEEF)
+
+    def second(cluster, cid):
+        yield Compute(3)  # arrive strictly later
+        msg = yield Scu("elw", ("mutex", 0, "lock"))
+        received["msg"] = msg
+        yield Scu("write", ("mutex", 0, "unlock"), 0)
+
+    cl.load([first, second])
+    cl.run()
+    assert received["msg"] == 0xBEEF
+
+
+# ---------------------------------------------------------------------------
+# Software barrier correctness under random arrival skew (property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    delays=st.lists(st.integers(min_value=1, max_value=200), min_size=4, max_size=4),
+    variant=st.sampled_from(["SCU", "TAS", "SW"]),
+)
+def test_barrier_safety_random_skew(delays, variant):
+    n = len(delays)
+    cl = make_cluster(n)
+    bstate = BarrierState(n)
+    passed = []
+
+    def prog(delay):
+        def p(cluster, cid):
+            yield Compute(delay)
+            if variant == "SCU":
+                yield from scu_barrier(cluster, cid)
+            elif variant == "TAS":
+                yield from tas_barrier(cluster, cid, bstate)
+            else:
+                yield from sw_barrier(cluster, cid, bstate)
+            passed.append((cid, cluster.cycle))
+
+        return p
+
+    cl.load([prog(d) for d in delays])
+    cl.run(max_cycles=1_000_000)
+    assert len(passed) == n
+    last_arrival = max(delays)
+    for cid, cyc in passed:
+        assert cyc >= last_arrival
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t_crit=st.integers(min_value=0, max_value=20),
+    variant=st.sampled_from(["SCU", "TAS", "SW"]),
+)
+def test_mutex_benchmark_terminates_and_is_positive(t_crit, variant):
+    r = run_mutex_bench(variant, 4, t_crit=t_crit, iters=8)
+    assert r.cycles_total > 0
+    assert r.prim_cycles >= 0
+
+
+# ---------------------------------------------------------------------------
+# Event buffer semantics
+# ---------------------------------------------------------------------------
+
+
+def test_notifier_event_latched_until_consumed():
+    """A notifier fired before the elw must still wake the core (level
+    semantics via the event buffer, not edge semantics)."""
+    n = 2
+    cl = make_cluster(n)
+    woke = {}
+
+    def sender(cluster, cid):
+        yield Scu("write", ("notifier", 3, "trigger"), 0b10)  # target core 1
+
+    def receiver(cluster, cid):
+        yield Compute(20)  # the event arrives long before we wait
+        v = yield Scu("elw", ("notifier", 3, "wait"))
+        woke["buffer"] = v
+
+    cl.load([sender, receiver])
+    stats = cl.run(max_cycles=10_000)
+    assert "buffer" in woke
+    # the receiver should never have been clock-gated: event was pending
+    assert stats.cores[1].gated_cycles == 0
+
+
+def test_notifier_broadcast_on_zero_mask():
+    n = 4
+    cl = make_cluster(n)
+    woke = []
+
+    def sender(cluster, cid):
+        yield Compute(5)
+        yield Scu("write", ("notifier", 2, "trigger"), 0)  # broadcast
+
+    def receiver(cluster, cid):
+        yield Scu("elw", ("notifier", 2, "wait"))
+        woke.append(cid)
+
+    cl.load([sender] + [receiver] * (n - 1))
+    cl.run(max_cycles=10_000)
+    assert sorted(woke) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Paper validation: Table 1 (cycles)
+# ---------------------------------------------------------------------------
+
+PAPER_BARRIER = {"SCU": (6, 6, 6), "TAS": (52, 91, 176), "SW": (47, 87, 176)}
+
+
+@pytest.mark.parametrize("variant", ["SCU", "TAS", "SW"])
+def test_table1_barrier_cycles(variant):
+    for n, paper in zip((2, 4, 8), PAPER_BARRIER[variant]):
+        r = run_barrier_bench(variant, n, sfr=0, iters=32)
+        tol = 0.01 if variant == "SCU" else 0.12
+        assert abs(r.prim_cycles - paper) <= max(1.0, tol * paper), (
+            f"{variant} barrier @{n} cores: {r.prim_cycles} vs paper {paper}"
+        )
+
+
+def test_scu_barrier_cost_independent_of_core_count():
+    costs = [run_barrier_bench("SCU", n, 0, iters=32).prim_cycles for n in (2, 4, 8)]
+    assert max(costs) - min(costs) < 0.5
+
+
+def test_sw_barrier_cost_grows_with_core_count():
+    costs = [run_barrier_bench("SW", n, 0, iters=32).prim_cycles for n in (2, 4, 8)]
+    assert costs[0] < costs[1] < costs[2]
+
+
+def test_scu_barrier_six_active_cycles_per_core():
+    r = run_barrier_bench("SCU", 8, sfr=0, iters=32)
+    per_core = r.active_core_cycles_per_iter / 8
+    assert abs(per_core - 6.0) <= 0.5  # Fig. 4: six active core cycles

@@ -1,0 +1,173 @@
+"""Integration tests: training loop, sync strategies, checkpointing, data,
+elastic recovery.  Run with XLA_FLAGS=--xla_force_host_platform_device_count=4
+(set in tests/conftest.py for this module's worker)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.data import SyntheticLM
+from repro.train.elastic import HealthState, plan_recovery, rescale_batch, shrink_mesh
+from repro.train.loop import TrainerConfig, train
+from repro.train.optimizer import OptConfig
+from repro.train.step import TrainConfig, make_train_step
+
+FAST_OPT = OptConfig(lr=1e-2, warmup_steps=5)
+
+
+def _mesh():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices")
+    return make_host_mesh(data=2, model=2)
+
+
+def test_tiny_training_loss_decreases(tmp_path):
+    cfg = get_smoke_config("stablelm-3b")
+    mesh = _mesh()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+    tcfg = TrainConfig(remat_policy="none", opt=FAST_OPT)
+    trainer = TrainerConfig(steps=30, ckpt_every=1000, log_every=1000)
+    _, _, history = train(
+        cfg, tcfg, trainer, mesh, lambda i: data.batch(i, batch_size=8)
+    )
+    first = np.mean([h["loss"] for h in history[:5]])
+    last = np.mean([h["loss"] for h in history[-5:]])
+    assert last < first - 0.1, f"loss did not decrease: {first:.3f} -> {last:.3f}"
+
+
+@pytest.mark.parametrize("pair", [("scu", "tas"), ("scu", "sw")])
+def test_sync_strategies_numerically_identical(pair):
+    """The three disciplines change the schedule, not the math."""
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    mesh = _mesh()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, seed=1)
+
+    losses = {}
+    for strategy in pair:
+        tcfg = TrainConfig(sync_strategy=strategy, remat_policy="none")
+        trainer = TrainerConfig(steps=5, ckpt_every=1000, log_every=1000, seed=3)
+        _, _, hist = train(
+            cfg, tcfg, trainer, mesh, lambda i: data.batch(i, batch_size=4)
+        )
+        losses[strategy] = [h["loss"] for h in hist]
+    a, b = pair
+    np.testing.assert_allclose(losses[a], losses[b], rtol=2e-4, atol=2e-4)
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 over the same global batch gives (nearly) the same loss path."""
+    cfg = get_smoke_config("stablelm-3b")
+    mesh = _mesh()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, seed=2)
+    losses = {}
+    for accum in (1, 2):
+        tcfg = TrainConfig(remat_policy="none", grad_accum=accum)
+        trainer = TrainerConfig(steps=4, ckpt_every=1000, log_every=1000, seed=5)
+        _, _, hist = train(
+            cfg, tcfg, trainer, mesh, lambda i: data.batch(i, batch_size=8)
+        )
+        losses[accum] = [h["loss"] for h in hist]
+    np.testing.assert_allclose(losses[1], losses[2], rtol=1e-3, atol=1e-3)
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """Train 6 steps; vs train 3 + resume 3: identical final loss."""
+    cfg = get_smoke_config("codeqwen1.5-7b")
+    mesh = _mesh()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, seed=4)
+    tcfg = TrainConfig(remat_policy="none")
+
+    _, _, hist_full = train(
+        cfg, tcfg, TrainerConfig(steps=6, ckpt_every=1000, log_every=1000, seed=7),
+        mesh, lambda i: data.batch(i, batch_size=4),
+    )
+
+    ckpt_dir = str(tmp_path / "ck")
+    train(
+        cfg, tcfg,
+        TrainerConfig(steps=3, ckpt_every=3, ckpt_dir=ckpt_dir, log_every=1000, seed=7),
+        mesh, lambda i: data.batch(i, batch_size=4),
+    )
+    assert latest_step(ckpt_dir) == 3
+    _, _, hist_resumed = train(
+        cfg, tcfg,
+        TrainerConfig(steps=6, ckpt_every=100, ckpt_dir=ckpt_dir, log_every=1000, seed=7),
+        mesh, lambda i: data.batch(i, batch_size=4),
+    )
+    np.testing.assert_allclose(
+        [h["loss"] for h in hist_resumed],
+        [h["loss"] for h in hist_full[3:]],
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_checkpoint_roundtrip_sharded(tmp_path):
+    mesh = _mesh()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = NamedSharding(mesh, P("data", "model"))
+    x = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8), sh)
+    tree = {"a": x, "b": jnp.float32(3.5)}
+    save_checkpoint(str(tmp_path), 7, tree)
+    restored = restore_checkpoint(
+        str(tmp_path), 7, tree, {"a": sh, "b": NamedSharding(mesh, P())}
+    )
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(x))
+    assert float(restored["b"]) == 3.5
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    d = SyntheticLM(vocab_size=64, seq_len=8, seed=9)
+    b1 = d.batch(step=5, batch_size=8)
+    b2 = d.batch(step=5, batch_size=8)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d.batch(step=6, batch_size=8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    failed=st.integers(min_value=0, max_value=200),
+    model_parallel=st.sampled_from([4, 8, 16]),
+)
+def test_shrink_mesh_properties(failed, model_parallel):
+    h = HealthState(total_devices=512, failed_devices=list(range(failed)))
+    if h.healthy < model_parallel:
+        return
+    shape, axes = shrink_mesh(h, model_parallel=model_parallel)
+    n = int(np.prod(shape))
+    assert n <= h.healthy  # never uses dead devices
+    assert shape[-1] == model_parallel  # model parallelism preserved
+    assert len(shape) == len(axes)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    new_replicas=st.sampled_from([1, 2, 4, 8, 16, 32]),
+)
+def test_rescale_batch_preserves_global_batch(new_replicas):
+    gb = 256
+    per, accum = rescale_batch(gb, old_replicas=32, new_replicas=new_replicas, grad_accum=1)
+    assert per * new_replicas == gb
+    assert accum >= 1
+
+
+def test_plan_recovery_smoke():
+    h = HealthState(total_devices=512, failed_devices=list(range(48)))
+    plan = plan_recovery(h, global_batch=256, old_mesh_shape=(2, 16, 16))
+    assert plan["mesh_shape"][-1] == 16
+    assert plan["per_replica_batch"] >= 1
