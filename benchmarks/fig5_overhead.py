@@ -4,6 +4,9 @@ Sweeps the SFR (compute cycles between barriers) and reports cycle and
 energy overhead per variant, plus the minimum SFR that keeps overhead at or
 below 10% -- the paper's headline: SCU 42 cycles vs TAS 1622 / SW 1771
 (energy, 8 cores), a >41x reduction.
+
+Every registered ``repro.sync`` policy is swept (the paper's triad plus
+extensions such as the log-depth ``tree`` barrier).
 """
 
 from __future__ import annotations
@@ -12,8 +15,9 @@ from typing import Dict, List, Tuple
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
 from repro.core.scu.programs import run_barrier_bench
+from repro.sync import available_policies
 
-PAPER_MIN_SFR_ENERGY_8 = {"SCU": 42.0, "TAS": 1622.0, "SW": 1771.0}
+PAPER_MIN_SFR_ENERGY_8 = {"scu": 42.0, "tas": 1622.0, "sw": 1771.0}
 
 SFRS = [8, 16, 32, 42, 64, 100, 160, 250, 400, 640, 1000, 1600, 2500, 4000]
 
@@ -47,8 +51,9 @@ def min_sfr_at(threshold: float, curve: List[Tuple[int, float]]) -> float:
 
 
 def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
+    variants = available_policies()
     curves = {}
-    for variant in ("SCU", "TAS", "SW"):
+    for variant in variants:
         cyc_curve, en_curve = [], []
         for sfr in SFRS:
             c, e = _overheads(variant, n_cores, sfr, iters)
@@ -61,27 +66,28 @@ def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
         result[variant] = {
             "min_sfr_cycles_10pct": min_sfr_at(0.10, cc["cycles"]),
             "min_sfr_energy_10pct": min_sfr_at(0.10, cc["energy"]),
-            "paper_min_sfr_energy": PAPER_MIN_SFR_ENERGY_8[variant],
+            "paper_min_sfr_energy": PAPER_MIN_SFR_ENERGY_8.get(variant),
             "curves": cc,
         }
 
     if verbose:
         print(f"\n== Fig. 5: overhead vs SFR size ({n_cores} cores) ==")
-        hdr = "SFR:      " + "".join(f"{s:>8d}" for s in SFRS)
+        hdr = "SFR:       " + "".join(f"{s:>8d}" for s in SFRS)
         print(hdr)
-        for variant in ("SCU", "TAS", "SW"):
+        for variant in variants:
             row = curves[variant]["energy"]
             print(
-                f"{variant:4s} E-ovh " + "".join(f"{ov*100:7.1f}%" for _, ov in row)
+                f"{variant:5s} E-ovh " + "".join(f"{ov*100:7.1f}%" for _, ov in row)
             )
         print("\nminimum SFR @ 10% energy overhead (measured vs paper):")
-        for variant in ("SCU", "TAS", "SW"):
+        for variant in variants:
             m = result[variant]["min_sfr_energy_10pct"]
             p = result[variant]["paper_min_sfr_energy"]
-            print(f"  {variant:4s}: {m:8.1f} cycles   (paper {p:7.1f})")
+            ps = f"(paper {p:7.1f})" if p is not None else "(paper    -  )"
+            print(f"  {variant:5s}: {m:8.1f} cycles   {ps}")
         ratio = (
-            result["SW"]["min_sfr_energy_10pct"]
-            / max(result["SCU"]["min_sfr_energy_10pct"], 1e-9)
+            result["sw"]["min_sfr_energy_10pct"]
+            / max(result["scu"]["min_sfr_energy_10pct"], 1e-9)
         )
         print(f"  SW/SCU reduction: {ratio:.1f}x (paper: ~41x)")
     return result

@@ -1,10 +1,10 @@
 """Chip-level barrier strategies: real wall-clock on host devices.
 
 The Fig. 5 experiment transplanted to devices: N host devices execute
-(compute-region + barrier) loops under the three disciplines from
-``repro/kernels/scu_barrier/ops.py``; we sweep the compute-region size and
-report the measured overhead curves + min region @10% -- the shape of the
-paper's result reproduced at chip granularity with actual timings.
+(compute-region + barrier) loops under every registered ``repro.sync``
+policy; we sweep the compute-region size and report the measured overhead
+curves + min region @10% -- the shape of the paper's result reproduced at
+chip granularity with actual timings.
 
 Run in a fresh process (device count must be set before jax init):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_axis_mesh, shard_map
 from repro.kernels.scu_barrier.ops import barrier
+from repro.sync import available_policies
 
 REGION_SIZES = [1, 2, 4, 8, 16, 32, 64]  # matmul repetitions between barriers
 N_BARRIERS = 16
@@ -38,7 +40,7 @@ def _make_step(mesh, strategy: str, region: int):
         return x
 
     return jax.jit(
-        jax.shard_map(body, mesh=mesh, in_specs=(P("x"), P()), out_specs=P("x"))
+        shard_map(body, mesh=mesh, in_specs=(P("x"), P()), out_specs=P("x"))
     )
 
 
@@ -56,17 +58,11 @@ def run(verbose: bool = True) -> Dict:
     if n < 2:
         print("[jax_barriers] needs >=2 devices; skipping")
         return {}
-    mesh = jax.make_mesh((n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_axis_mesh((n,), ("x",))
     x = jnp.ones((n * 8, DIM), jnp.float32)
     a = jnp.eye(DIM, dtype=jnp.float32) * 0.99
 
-    # baseline: pure compute, no barrier
-    base = {}
-    for region in REGION_SIZES:
-        fn = _make_step(mesh, "scu", region)
-        # no-barrier baseline approximated by region scaling of compute-only
-        base[region] = None
-
+    strategies = available_policies()
     results: Dict = {"devices": n, "curves": {}}
     # reference: compute-only time per region unit
     def compute_only(x, a, region=max(REGION_SIZES)):
@@ -75,12 +71,12 @@ def run(verbose: bool = True) -> Dict:
                 for _ in range(region):
                     x = jnp.tanh(x @ a)
             return x
-        return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("x"), P()), out_specs=P("x")))
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x"), P()), out_specs=P("x")))
 
     t_full = _time(compute_only(x, a), x, a)
     unit = t_full / (N_BARRIERS * max(REGION_SIZES))
 
-    for strategy in ("scu", "tas", "sw"):
+    for strategy in strategies:
         curve = []
         for region in REGION_SIZES:
             fn = _make_step(mesh, strategy, region)
@@ -92,11 +88,11 @@ def run(verbose: bool = True) -> Dict:
 
     if verbose:
         print(f"\n== Chip-level barrier disciplines ({n} host devices) ==")
-        print("region  " + "".join(f"{s:>10s}" for s in ("scu", "tas", "sw")))
+        print("region  " + "".join(f"{s:>10s}" for s in strategies))
         for i, region in enumerate(REGION_SIZES):
-            row = [results["curves"][s][i][2] for s in ("scu", "tas", "sw")]
+            row = [results["curves"][s][i][2] for s in strategies]
             print(f"{region:6d}  " + "".join(f"{o*100:9.0f}%" for o in row))
-        for s in ("scu", "tas", "sw"):
+        for s in strategies:
             per_barrier = results["curves"][s][0][1]
             print(f"  {s}: ~{per_barrier:.0f} us per barrier at region=1")
     return results

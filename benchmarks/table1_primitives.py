@@ -3,25 +3,32 @@
 Reproduces the paper's microbenchmark methodology on the Tier-1 simulator:
 loops of back-to-back primitives on 2/4/8 cores, averaged; energy from the
 calibrated model.  Prints measured vs paper values and relative error.
+
+The variant list comes from the ``repro.sync`` policy registry, so every
+registered discipline is measured -- the paper's triad against its Table 1
+numbers, extensions (e.g. ``tree``) as new rows without paper references.
 """
 
 from __future__ import annotations
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
 from repro.core.scu.programs import run_barrier_bench, run_mutex_bench
+from repro.sync import available_policies
 
 PAPER = {
-    # (primitive, variant): ((cycles 2/4/8), (energy nJ 2/4/8))
-    ("barrier", "SCU"): ((6, 6, 6), (0.1, 0.1, 0.1)),
-    ("barrier", "TAS"): ((52, 91, 176), (0.8, 1.7, 4.3)),
-    ("barrier", "SW"): ((47, 87, 176), (0.8, 1.8, 4.7)),
-    ("mutex_t0", "SCU"): ((12, 23, 44), (0.2, 0.3, 0.6)),
-    ("mutex_t0", "TAS"): ((25, 39, 69), (0.4, 0.7, 1.6)),
-    ("mutex_t0", "SW"): ((12, 25, 72), (0.2, 0.5, 1.6)),
-    ("mutex_t10", "SCU"): ((13, 24, 50), (0.2, 0.3, 0.7)),
-    ("mutex_t10", "TAS"): ((26, 50, 89), (0.4, 0.9, 2.1)),
-    ("mutex_t10", "SW"): ((13, 26, 55), (0.2, 0.6, 1.5)),
+    # (primitive, policy): ((cycles 2/4/8), (energy nJ 2/4/8))
+    ("barrier", "scu"): ((6, 6, 6), (0.1, 0.1, 0.1)),
+    ("barrier", "tas"): ((52, 91, 176), (0.8, 1.7, 4.3)),
+    ("barrier", "sw"): ((47, 87, 176), (0.8, 1.8, 4.7)),
+    ("mutex_t0", "scu"): ((12, 23, 44), (0.2, 0.3, 0.6)),
+    ("mutex_t0", "tas"): ((25, 39, 69), (0.4, 0.7, 1.6)),
+    ("mutex_t0", "sw"): ((12, 25, 72), (0.2, 0.5, 1.6)),
+    ("mutex_t10", "scu"): ((13, 24, 50), (0.2, 0.3, 0.7)),
+    ("mutex_t10", "tas"): ((26, 50, 89), (0.4, 0.9, 2.1)),
+    ("mutex_t10", "sw"): ((13, 26, 55), (0.2, 0.6, 1.5)),
 }
+
+PRIMITIVES = ("barrier", "mutex_t0", "mutex_t10")
 
 
 def _energy_nj(r, n, t_crit):
@@ -39,27 +46,35 @@ def _energy_nj(r, n, t_crit):
 
 def run(iters: int = 64, verbose: bool = True):
     rows = []
-    for (prim, variant), (pc, pe) in PAPER.items():
+    for prim in PRIMITIVES:
         t_crit = 10 if prim.endswith("t10") else 0
-        meas_c, meas_e = [], []
-        for n in (2, 4, 8):
-            if prim == "barrier":
-                r = run_barrier_bench(variant, n, sfr=0, iters=iters)
-            else:
-                r = run_mutex_bench(variant, n, t_crit=t_crit, iters=iters)
-            meas_c.append(r.prim_cycles)
-            meas_e.append(_energy_nj(r, n, t_crit))
-        rows.append((prim, variant, meas_c, pc, meas_e, pe))
+        for policy in available_policies():
+            meas_c, meas_e = [], []
+            for n in (2, 4, 8):
+                if prim == "barrier":
+                    r = run_barrier_bench(policy, n, sfr=0, iters=iters)
+                else:
+                    r = run_mutex_bench(policy, n, t_crit=t_crit, iters=iters)
+                meas_c.append(r.prim_cycles)
+                meas_e.append(_energy_nj(r, n, t_crit))
+            pc, pe = PAPER.get((prim, policy), (None, None))
+            rows.append((prim, policy, meas_c, pc, meas_e, pe))
 
     if verbose:
         print("\n== Table 1: primitive costs (simulated vs paper) ==")
         print(f"{'prim':10s} {'var':4s} | cycles meas (paper)            | energy nJ meas (paper)")
         for prim, var, mc, pc, me, pe in rows:
-            cyc = "  ".join(f"{m:6.1f}({p})" for m, p in zip(mc, pc))
-            en = "  ".join(f"{m:5.2f}({p})" for m, p in zip(me, pe))
+            cyc = "  ".join(
+                f"{m:6.1f}({str(p) if pc else '-':>3s})"
+                for m, p in zip(mc, pc or (None,) * 3)
+            )
+            en = "  ".join(
+                f"{m:5.2f}({str(p) if pe else '-':>3s})"
+                for m, p in zip(me, pe or (None,) * 3)
+            )
             print(f"{prim:10s} {var:4s} | {cyc} | {en}")
-        scu8 = next(r for r in rows if r[0] == "barrier" and r[1] == "SCU")
-        sw8 = next(r for r in rows if r[0] == "barrier" and r[1] == "SW")
+        scu8 = next(r for r in rows if r[0] == "barrier" and r[1] == "scu")
+        sw8 = next(r for r in rows if r[0] == "barrier" and r[1] == "sw")
         print(
             f"\nSCU vs SW barrier @8 cores: {sw8[2][2]/scu8[2][2]:.1f}x cycles "
             f"(paper: 29x), {sw8[4][2]/scu8[4][2]:.1f}x energy (paper: 41x)"

@@ -1,8 +1,9 @@
-"""Paper Table 2 / Fig. 6: the nine DSP applications under SW/TAS/SCU.
+"""Paper Table 2 / Fig. 6: the nine DSP applications under every policy.
 
-Runs the application synchronization skeletons on the Tier-1 simulator and
-reports total cycles, energy, power, sync-cycle shares, and the normalized
-improvements over the SW baseline (Fig. 6).
+Runs the application synchronization skeletons on the Tier-1 simulator --
+under every registered ``repro.sync`` policy -- and reports total cycles,
+energy, power, sync-cycle shares, and the normalized improvements of the
+SCU discipline over the SW baseline (Fig. 6).
 """
 
 from __future__ import annotations
@@ -10,6 +11,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core.scu.apps import APPS, run_app
+from repro.sync import available_policies
 
 PAPER = {
     # app: (SCU cycles, SW cycles, SCU energy uJ, SW energy uJ)
@@ -26,13 +28,14 @@ PAPER = {
 
 
 def run(include_slow: bool = True, verbose: bool = True) -> List[Dict]:
+    policies = available_policies()
     rows = []
     perf_gains, energy_gains = [], []
     for name, app in APPS.items():
         if not include_slow and app.barriers > 1000:
             continue
-        res = {v: run_app(app, v) for v in ("SCU", "TAS", "SW")}
-        scu, sw = res["SCU"], res["SW"]
+        res = {v: run_app(app, v) for v in policies}
+        scu, sw = res["scu"], res["sw"]
         pg = sw.cycles / scu.cycles - 1
         eg = sw.energy_uj / scu.energy_uj - 1
         perf_gains.append(pg)
@@ -57,18 +60,23 @@ def run(include_slow: bool = True, verbose: bool = True) -> List[Dict]:
             )
         )
     if verbose:
-        print("\n== Table 2 / Fig. 6: DSP applications (SCU vs TAS vs SW) ==")
         print(
-            f"{'app':11s} {'cyc SCU':>9s} {'cyc SW':>9s} {'perf+':>7s} "
+            "\n== Table 2 / Fig. 6: DSP applications "
+            f"({' vs '.join(p.upper() for p in policies)}) =="
+        )
+        cyc_cols = "".join(f" {'cyc ' + p.upper():>9s}" for p in policies)
+        print(
+            f"{'app':11s}{cyc_cols} {'perf+':>7s} "
             f"{'E SCU':>7s} {'E SW':>7s} {'energy+':>8s}  (paper cyc/E SCU,SW)"
         )
         for r in rows:
             p = r["paper"]
             ps = f"({p[0]}/{p[1]}, {p[2]}/{p[3]})" if p else ""
+            cyc = "".join(f" {r['cycles'][v]:>9d}" for v in policies)
             print(
-                f"{r['app']:11s} {r['cycles']['SCU']:>9d} {r['cycles']['SW']:>9d} "
-                f"{r['perf_gain_pct']:6.1f}% {r['energy_uj']['SCU']:7.2f} "
-                f"{r['energy_uj']['SW']:7.2f} {r['energy_gain_pct']:7.1f}%  {ps}"
+                f"{r['app']:11s}{cyc} "
+                f"{r['perf_gain_pct']:6.1f}% {r['energy_uj']['scu']:7.2f} "
+                f"{r['energy_uj']['sw']:7.2f} {r['energy_gain_pct']:7.1f}%  {ps}"
             )
         if perf_gains:
             print(

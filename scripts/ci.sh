@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Offline smoke gate: the tier-1 verify command plus the fast benchmark pass.
+#
+#   ./scripts/ci.sh          # full tier-1 suite + fast benchmarks
+#   ./scripts/ci.sh --tests  # tests only (skip the benchmark pass)
+#
+# Everything runs offline: the suite needs no network and no optional
+# dependencies (hypothesis falls back to tests/_hypothesis_compat.py).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 verify: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--tests" ]]; then
+    echo "== benchmark smoke: benchmarks/run.py --fast =="
+    python -m benchmarks.run --fast
+fi
+
+echo "== ci.sh: all green =="

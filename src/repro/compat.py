@@ -1,0 +1,48 @@
+"""jax version-portability shims.
+
+The repo targets current jax APIs (``jax.shard_map``, ``jax.sharding.
+AxisType``, ``pltpu.CompilerParams``); the pinned container jax may predate
+them.  Every version-sensitive construct is funneled through this module so
+the rest of the code reads as if it were written against one jax.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import Mesh
+
+__all__ = ["CompilerParams", "axis_size", "make_axis_mesh", "shard_map"]
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis from inside shard_map/pmap.
+
+    ``jax.lax.axis_size`` where it exists; otherwise ``psum(1, axis)``,
+    which constant-folds to a concrete int under a bound axis.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return jax.lax.psum(1, axis)
+
+# pltpu.TPUCompilerParams was renamed to pltpu.CompilerParams in newer jax.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def make_axis_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map``, falling back to the experimental spelling."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

@@ -26,7 +26,29 @@ __all__ = [
     "ShapeConfig",
     "SHAPES",
     "input_specs",
+    "sync_policy_choices",
+    "validate_sync_policy",
 ]
+
+
+def sync_policy_choices() -> Tuple[str, ...]:
+    """Registered ``repro.sync`` policy names -- the valid values for every
+    sync-policy config field / CLI flag (launchers build argparse choices
+    from this, so new registered disciplines appear everywhere at once)."""
+    from repro.sync import available_policies  # deferred: keep configs light
+
+    return available_policies()
+
+
+def validate_sync_policy(name: str) -> str:
+    """Canonicalize a sync-policy config value against the registry.
+
+    Returns the canonical (lowercase) registered name; raises ``KeyError``
+    naming the available policies for anything unknown.
+    """
+    from repro.sync import canonical_name  # deferred: keep configs light
+
+    return canonical_name(name)
 
 
 @dataclasses.dataclass(frozen=True)

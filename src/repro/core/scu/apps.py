@@ -25,13 +25,7 @@ import numpy as np
 
 from .energy import DEFAULT_ENERGY, Activity, EnergyModel
 from .engine import Cluster, Compute
-from .primitives import (
-    DEFAULT_COSTS,
-    BarrierState,
-    scu_barrier,
-    sw_barrier,
-    tas_barrier,
-)
+from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
 __all__ = ["AppModel", "APPS", "run_app", "AppResult"]
@@ -107,11 +101,15 @@ def run_app(
     seed: int = 0,
     energy_model: EnergyModel = DEFAULT_ENERGY,
 ) -> AppResult:
-    """Run one application skeleton under one synchronization variant."""
+    """Run one application skeleton under one synchronization variant
+    (any registered ``repro.sync`` policy)."""
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
     sections = _section_lengths(app, n_cores, seed)
     scu = SCU(n_cores=n_cores)
     cl = Cluster(n_cores=n_cores, scu=scu)
-    bstate = BarrierState(n_cores)
+    sync_state = policy.make_sim_state(n_cores)
 
     # Track per-core sync cycles by sampling core state inside primitives.
     sync_marks: List[List[Tuple[int, int]]] = [[] for _ in range(n_cores)]
@@ -121,14 +119,7 @@ def run_app(
             yield Compute(int(sections[b, cid]))
             t0 = cluster.cycle
             a0 = cluster.cores[cid].stats.active_cycles if cluster.cores else 0
-            if variant == "SCU":
-                yield from scu_barrier(cluster, cid)
-            elif variant == "TAS":
-                yield from tas_barrier(cluster, cid, bstate, DEFAULT_COSTS)
-            elif variant == "SW":
-                yield from sw_barrier(cluster, cid, bstate, DEFAULT_COSTS)
-            else:
-                raise ValueError(variant)
+            yield from policy.sim_barrier(cluster, cid, sync_state, DEFAULT_COSTS)
             a1 = cluster.cores[cid].stats.active_cycles
             sync_marks[cid].append((cluster.cycle - t0, a1 - a0))
 

@@ -224,4 +224,8 @@ def scu_mutex_section(
     yield Scu("write", ("mutex", mutex_id, "unlock"), 0)
 
 
+# Legacy spelling of the paper's triad, kept for backward compatibility.
+# The authoritative list of disciplines (including extensions such as the
+# log-depth tree barrier) is ``repro.sync.available_policies()``; these
+# uppercase names resolve there via aliases.
 VARIANTS = ("SCU", "TAS", "SW")

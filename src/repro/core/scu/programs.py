@@ -13,16 +13,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from .engine import Cluster, ClusterStats, Compute
-from .primitives import (
-    DEFAULT_COSTS,
-    BarrierState,
-    scu_barrier,
-    scu_mutex_section,
-    sw_barrier,
-    sw_mutex_section,
-    tas_barrier,
-    tas_mutex_section,
-)
+from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
 __all__ = ["MicrobenchResult", "run_barrier_bench", "run_mutex_bench", "run_nop_bench"]
@@ -81,23 +72,23 @@ def _collect(
 def run_barrier_bench(
     variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None
 ) -> MicrobenchResult:
-    """Loop of ``iters`` (SFR-compute + barrier) on every core."""
+    """Loop of ``iters`` (SFR-compute + barrier) on every core.
+
+    ``variant`` is any registered ``repro.sync`` policy name (legacy
+    uppercase spellings like ``"SCU"`` resolve via aliases).
+    """
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
     cl = _make_cluster(n_cores)
-    bstate = BarrierState(n_cores)
+    state = policy.make_sim_state(n_cores)
     cm = cost_model or DEFAULT_COSTS
 
     def program(cluster, cid):
         for _ in range(iters):
             if sfr > 0:
                 yield Compute(sfr)
-            if variant == "SCU":
-                yield from scu_barrier(cluster, cid)
-            elif variant == "TAS":
-                yield from tas_barrier(cluster, cid, bstate, cm)
-            elif variant == "SW":
-                yield from sw_barrier(cluster, cid, bstate, cm)
-            else:
-                raise ValueError(variant)
+            yield from policy.sim_barrier(cluster, cid, state, cm)
 
     cl.load([program] * n_cores)
     return _collect(variant, "barrier", cl, n_cores, sfr, iters, float(sfr))
@@ -113,21 +104,18 @@ def run_mutex_bench(
     ideal ``N_C * T_crit`` serialization of the critical sections
     (``T_ideal = N_C T_crit``, Sec. 6.3).
     """
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
     cl = _make_cluster(n_cores)
+    state = policy.make_sim_state(n_cores)
     cm = cost_model or DEFAULT_COSTS
 
     def program(cluster, cid):
         for _ in range(iters):
             if sfr > 0:
                 yield Compute(sfr)
-            if variant == "SCU":
-                yield from scu_mutex_section(cluster, cid, t_crit)
-            elif variant == "TAS":
-                yield from tas_mutex_section(cluster, cid, t_crit, cm)
-            elif variant == "SW":
-                yield from sw_mutex_section(cluster, cid, t_crit, cm)
-            else:
-                raise ValueError(variant)
+            yield from policy.sim_mutex(cluster, cid, t_crit, state, cm)
 
     cl.load([program] * n_cores)
     ideal = float(n_cores * t_crit + sfr)

@@ -1,0 +1,9 @@
+"""Legacy home of the training-layer sync strategies.
+
+The implementations moved to the unified :mod:`repro.sync` policy registry;
+:mod:`repro.core.sync.strategies` remains as a compatibility shim.
+"""
+
+from repro.core.sync.strategies import STRATEGIES, opt_state_specs, shape_gradients
+
+__all__ = ["STRATEGIES", "opt_state_specs", "shape_gradients"]

@@ -1,104 +1,38 @@
-"""SyncEngine: the paper's three synchronization disciplines at chip scale.
+"""Backward-compat shim over the unified ``repro.sync`` policy registry.
 
-The SCU paper compares three implementations of the same synchronization
-semantics (Sec. 6.1): ``SW`` (spin-lock, fully serialized), ``TAS``
-(coarse lock + idle-wait, one big blocking sync), ``SCU`` (hardware
-primitives: fine-grain, O(1)-cost, overlappable).  Transplanted to the
-gradient-synchronization schedule of a data-parallel training step:
+The training-schedule implementations that used to live here (the paper's
+three disciplines transplanted to the gradient-synchronization schedule of
+a data-parallel step -- see ``repro/sync/policies.py`` for the mapping)
+are now layer (c) of the :class:`repro.sync.SyncPolicy` objects.  This
+module keeps the old string-keyed call surface working:
 
-  * ``sw``  -- per-tensor *serialized* synchronization: an optimization-
-    barrier chain forces XLA to issue one gradient collective per parameter
-    tensor, strictly in order (the spin-lock analogue: maximal launch count,
-    zero overlap).
-  * ``tas`` -- one coarse synchronization point: all gradients are fused
-    into a single blocking sync at the end of the backward pass (idle-wait
-    analogue: minimal launch count, but compute and communication cannot
-    overlap across the barrier).
-  * ``scu`` -- the paper's discipline: fine-grain *bucketed* reduce-scatter
-    with ZeRO-sharded optimizer state; no artificial barriers, so the XLA
-    latency-hiding scheduler overlaps gradient collectives with remaining
-    backward compute, and the "critical section" (optimizer update) is
-    shard-parallel instead of replicated.  New bf16 params are all-gathered.
-
-The strategies are *numerically identical* (same loss, same update); they
-differ only in schedule/collectives -- exactly like the paper's variants.
-The dry-run collective analysis (EXPERIMENTS.md §Roofline) quantifies the
-difference in the collective roofline term; ``benchmarks/jax_barriers.py``
-measures the wall-clock difference on real (host) devices.
+  * ``STRATEGIES``                 -- the paper's original triad (frozen for
+    compatibility; use :func:`repro.sync.available_policies` to enumerate
+    every registered discipline, including extensions like ``tree``),
+  * ``shape_gradients(strategy, ...)`` / ``opt_state_specs(strategy, ...)``
+    -- dispatch through the registry.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import param_specs, zero_spec
+from repro.sync import get_policy
 
 __all__ = ["STRATEGIES", "shape_gradients", "opt_state_specs"]
 
 STRATEGIES = ("scu", "tas", "sw")
 
 
-def _barrier_chain(tree: Any) -> Any:
-    """Serialize all leaves with an optimization-barrier dependency chain."""
-    leaves, treedef = jax.tree.flatten(tree)
-    token = jnp.zeros((), jnp.float32)
-    out = []
-    for leaf in leaves:
-        leaf, token = jax.lax.optimization_barrier((leaf, token))
-        token = token + 0.0  # keep the chain explicit
-        out.append(leaf)
-    return jax.tree.unflatten(treedef, out)
-
-
 def shape_gradients(
     strategy: str, grads: Any, params_shape: Any, mesh: Mesh, cfg=None
 ) -> Any:
-    """Impose the synchronization discipline on the gradient tree."""
-    if strategy == "sw":
-        # per-tensor serialized sync: barrier chain forces one collective per
-        # tensor in program order
-        return _barrier_chain(grads)
-    if strategy == "tas":
-        # single coarse sync point between backward and optimizer
-        return jax.lax.optimization_barrier(grads)
-    if strategy == "scu":
-        # fine-grain reduce-scatter onto the ZeRO shards; no barriers
-        specs = param_specs(params_shape, mesh, cfg=cfg)
-        zspecs = jax.tree.map(
-            lambda s, p: zero_spec(s, tuple(p.shape), mesh),
-            specs,
-            params_shape,
-            is_leaf=lambda x: isinstance(x, P),
-        )
-        return jax.tree.map(
-            lambda g, s: jax.lax.with_sharding_constraint(
-                g, jax.sharding.NamedSharding(mesh, s)
-            ),
-            grads,
-            zspecs,
-            is_leaf=lambda x: isinstance(x, P),
-        )
-    raise ValueError(f"unknown sync strategy {strategy!r}")
+    """Impose the named policy's synchronization discipline on the grads."""
+    return get_policy(strategy).shape_gradients(grads, params_shape, mesh, cfg=cfg)
 
 
 def opt_state_specs(strategy: str, params_shape: Any, mesh: Mesh, cfg=None) -> Any:
-    """Sharding specs for master/m/v under the given strategy.
-
-    ``scu`` ZeRO-shards the optimizer state over the data axes; the
-    baselines keep it sharded like the params (replicated over data) --
-    the paper's 'every contestant keeps its own copy spinning' analogue.
-    """
-    specs = param_specs(params_shape, mesh, cfg=cfg)
-    if strategy == "scu":
-        specs = jax.tree.map(
-            lambda s, p: zero_spec(s, tuple(p.shape), mesh),
-            specs,
-            params_shape,
-            is_leaf=lambda x: isinstance(x, P),
-        )
-    return {"master": specs, "m": specs, "v": specs}
+    """Sharding specs for master/m/v under the named policy."""
+    return get_policy(strategy).opt_state_specs(params_shape, mesh, cfg=cfg)

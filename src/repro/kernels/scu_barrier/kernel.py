@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 __all__ = ["scu_barrier_kernel", "scu_notifier_kernel", "scu_self_signal_kernel"]
 
 
@@ -85,7 +87,7 @@ def scu_barrier_kernel(arrivals: jnp.ndarray, *, axis: str, interpret: bool = Fa
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(has_side_effects=True),
+        compiler_params=CompilerParams(has_side_effects=True),
     )(arrivals)
 
 
@@ -114,7 +116,7 @@ def scu_notifier_kernel(
         out_shape=jax.ShapeDtypeStruct(payload.shape, payload.dtype),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(has_side_effects=True),
+        compiler_params=CompilerParams(has_side_effects=True),
     )(payload)
 
 

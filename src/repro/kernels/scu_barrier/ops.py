@@ -1,18 +1,16 @@
-"""Portable SCU-barrier ops: collective fallback + strategy variants.
+"""Portable SCU-barrier ops: collective fallback + policy dispatch.
 
-``barrier(...)`` exposes the three disciplines at chip granularity, used by
-``benchmarks/jax_barriers.py`` to reproduce the paper's Fig. 5 at device
-scale with real wall-clock timings (host devices here, TPUs in production):
+``barrier(...)`` exposes the synchronization disciplines at chip
+granularity, used by ``benchmarks/jax_barriers.py`` to reproduce the
+paper's Fig. 5 at device scale with real wall-clock timings (host devices
+here, TPUs in production).
 
-  * ``scu`` -- single fused all-reduce of one arrival word (the hardware
-    barrier analogue; on TPU the Pallas semaphore kernel replaces it),
-  * ``tas`` -- log-n rounds of pairwise exchanges over a shared "status
-    word" (emulating repeated atomic updates of a barrier counter),
-  * ``sw``  -- n sequential one-to-all broadcasts, each contestant updating
-    the shared word in turn (the spin-lock's serialized acquire order).
-
-All three return the same value (the arrival count); they differ only in
-collective structure -- like the paper's variants.
+The per-discipline collective bodies live on the ``repro.sync`` policy
+objects (``repro/sync/policies.py`` and ``repro/sync/tree.py``); this
+module is the backward-compatible call surface.  Every discipline returns
+the same value -- the arrival count, derived from the values it actually
+exchanged -- and differs only in collective structure, like the paper's
+variants (``ref_barrier_count`` is the test oracle for that equivalence).
 """
 
 from __future__ import annotations
@@ -34,34 +32,12 @@ def barrier(arrive: jnp.ndarray, axis: str, strategy: str = "scu") -> jnp.ndarra
     """Inside shard_map/pmap: synchronize the ``axis`` group.
 
     ``arrive`` is this device's arrival word (1).  Returns the summed count
-    (== group size), with collective structure per strategy.
+    (== group size), with collective structure per the named ``repro.sync``
+    policy (``scu``, ``tas``, ``sw``, ``tree``, or any registered since).
     """
-    n = jax.lax.axis_size(axis)
-    if strategy == "scu":
-        # one fused synchronization event
-        return jax.lax.psum(arrive, axis)
-    if strategy == "tas":
-        # log-n pairwise exchange rounds on the shared status word
-        total = arrive
-        idx = jax.lax.axis_index(axis)
-        shift = 1
-        while shift < n:
-            perm = [(i, (i + shift) % n) for i in range(n)]
-            incoming = jax.lax.ppermute(total, axis, perm)
-            total = total + incoming
-            shift *= 2
-        # the log-rounds double-count; normalize back to the group size
-        return total * 0 + jax.lax.psum(arrive, axis)
-    if strategy == "sw":
-        # n serialized acquire turns: each contestant broadcasts in order
-        total = arrive
-        token = arrive * 0.0
-        for turn in range(n):
-            perm = [(i, (i + 1) % n) for i in range(n)]
-            token = jax.lax.ppermute(total + token * 0, axis, perm)
-            total, token = jax.lax.optimization_barrier((total, token))
-        return total * 0 + jax.lax.psum(arrive, axis)
-    raise ValueError(strategy)
+    from repro.sync import get_policy
+
+    return get_policy(strategy).chip_barrier(arrive, axis)
 
 
 def notifier(payload: jnp.ndarray, axis: str, target: int) -> jnp.ndarray:
@@ -69,8 +45,6 @@ def notifier(payload: jnp.ndarray, axis: str, target: int) -> jnp.ndarray:
     signaling); other devices receive zero -- matching the SCU notifier's
     per-core event delivery."""
     idx = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
-    perm = [(i, target) for i in range(n) if i != target]
     # route payloads to the target; everyone else gets nothing
     summed = jax.lax.psum(jnp.where(idx == target, 0.0, payload), axis)
     return jnp.where(idx == target, summed, jnp.zeros_like(summed))

@@ -37,7 +37,12 @@ from pathlib import Path  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.configs.base import SHAPES, input_specs, shape_applicable  # noqa: E402
+from repro.configs.base import (  # noqa: E402
+    SHAPES,
+    input_specs,
+    shape_applicable,
+    sync_policy_choices,
+)
 from repro.configs.registry import get_config, list_archs  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_num_chips  # noqa: E402
 
@@ -162,8 +167,6 @@ def build_cell(arch: str, shape_name: str, mesh, *, sync_strategy: str = "scu",
         step_fn, (in_sh, batch_sh_fn), out_sh, params_sds = make_train_step(
             cfg, tcfg, mesh
         )
-        from repro.core.sync.strategies import opt_state_specs
-        from jax.sharding import NamedSharding
 
         # abstract optimizer state
         opt_sds = {
@@ -316,7 +319,7 @@ def main() -> None:
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true", help="all archs x shapes")
-    ap.add_argument("--sync", default="scu", choices=["scu", "tas", "sw"])
+    ap.add_argument("--sync", default="scu", choices=list(sync_policy_choices()))
     ap.add_argument("--remat", default="full")
     ap.add_argument("--tag", default="")
     ap.add_argument("--variant", default="", help="e.g. ssdchunk128, moehints")

@@ -21,15 +21,15 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro.compat import make_axis_mesh
+
 __all__ = ["make_production_mesh", "make_host_mesh", "mesh_num_chips"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_axis_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None) -> Mesh:
@@ -38,14 +38,8 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: Optional[int] = None) -> 
     want = data * model * (pod or 1)
     assert n >= want, f"need {want} devices, have {n}"
     if pod:
-        return jax.make_mesh(
-            (pod, data, model),
-            ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+        return make_axis_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_axis_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_chips(mesh: Mesh) -> int:

@@ -14,6 +14,8 @@ import argparse
 
 
 def main() -> None:
+    from repro.configs.base import sync_policy_choices
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true", help="reduced config")
@@ -21,7 +23,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--sync", default="scu", choices=["scu", "tas", "sw"])
+    ap.add_argument("--sync", default="scu", choices=list(sync_policy_choices()))
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--mesh", default="host")

@@ -1,0 +1,39 @@
+"""``repro.sync`` -- the unified synchronization-policy API.
+
+    from repro.sync import get_policy, register_policy, available_policies
+
+    policy = get_policy("scu")            # case-insensitive; "SCU" works too
+    available_policies()                  # ('scu', 'tas', 'sw', 'tree')
+
+One :class:`SyncPolicy` carries the discipline's implementation at every
+layer of the repo: simulator fragments, chip-level collectives, and
+training-schedule hooks.  See :mod:`repro.sync.api` for the protocol and
+:mod:`repro.sync.tree` for a worked example of registering a new discipline.
+"""
+
+from repro.sync.api import (
+    LAYER_HOOKS,
+    PolicyDef,
+    SyncPolicy,
+    available_policies,
+    canonical_name,
+    get_policy,
+    register_policy,
+    unregister_policy,
+)
+
+# Importing the implementation modules registers the builtin policies
+# (the paper's triad first, then the tree extension).
+from repro.sync import policies as _policies  # noqa: F401
+from repro.sync import tree as _tree  # noqa: F401
+
+__all__ = [
+    "LAYER_HOOKS",
+    "PolicyDef",
+    "SyncPolicy",
+    "available_policies",
+    "canonical_name",
+    "get_policy",
+    "register_policy",
+    "unregister_policy",
+]

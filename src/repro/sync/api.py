@@ -1,0 +1,185 @@
+"""The ``repro.sync`` policy API: one registry for synchronization disciplines.
+
+The paper's core move is comparing one synchronization *semantics* under
+several *implementations* (Sec. 6.1: SW spin-lock, TAS idle-wait, hardware
+SCU).  This repo exercises that comparison at three independent layers:
+
+  (a) the cycle-accurate cluster simulator (``repro.core.scu``) -- barrier /
+      mutex generator *fragments* made of ``Compute``/``Mem``/``Scu`` ops,
+  (b) chip-level collectives (``repro.kernels.scu_barrier``) -- the barrier
+      discipline expressed with real JAX collectives inside ``shard_map``,
+  (c) the training schedule (``repro.train.step``) -- how gradients are
+      synchronized and how the optimizer state is sharded.
+
+A :class:`SyncPolicy` carries all three layers for one discipline, so a new
+discipline (a hierarchical tree barrier, a producer-consumer FIFO chain, ...)
+is registered *once* and is instantly benchmarkable everywhere: Table 1,
+Fig. 5, Table 2, the chip-level wall-clock sweep, the dry-run, and training.
+
+Layer hook signatures (see :class:`SyncPolicy`):
+
+  * ``make_sim_state(n_cores)``            -> per-run shared simulator state
+  * ``sim_barrier(cluster, cid, state, cost_model)``      -> op generator
+  * ``sim_mutex(cluster, cid, t_crit, state, cost_model)`` -> op generator
+  * ``chip_barrier(arrive, axis)``         -> arrival count (jnp array)
+  * ``shape_gradients(grads, params_shape, mesh, cfg)``   -> shaped grads
+  * ``opt_state_specs(params_shape, mesh, cfg)``          -> spec dict
+
+All disciplines must be *numerically identical* (same released count, same
+loss, same update); they may only differ in schedule / collective structure
+-- exactly like the paper's variants.  ``tests/test_sync_api.py`` enforces
+this cross-layer parity for every registered policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+__all__ = [
+    "SyncPolicy",
+    "PolicyDef",
+    "LAYER_HOOKS",
+    "register_policy",
+    "unregister_policy",
+    "get_policy",
+    "available_policies",
+    "canonical_name",
+]
+
+# Every registered policy must provide all of these (cross-layer parity).
+LAYER_HOOKS: Tuple[str, ...] = (
+    "make_sim_state",
+    "sim_barrier",
+    "sim_mutex",
+    "chip_barrier",
+    "shape_gradients",
+    "opt_state_specs",
+)
+
+
+@runtime_checkable
+class SyncPolicy(Protocol):
+    """Structural type of a synchronization policy (see module docstring)."""
+
+    name: str
+    description: str
+
+    def make_sim_state(self, n_cores: int) -> Any: ...
+
+    def sim_barrier(self, cluster, cid: int, state, cost_model=None): ...
+
+    def sim_mutex(self, cluster, cid: int, t_crit: int, state, cost_model=None): ...
+
+    def chip_barrier(self, arrive, axis: str): ...
+
+    def shape_gradients(self, grads, params_shape, mesh, cfg=None): ...
+
+    def opt_state_specs(self, params_shape, mesh, cfg=None): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDef:
+    """Concrete :class:`SyncPolicy`: one record, all three layers.
+
+    The hooks are plain callables (not bound methods), so their signatures
+    are exactly the layer-hook signatures above without ``self``.
+    """
+
+    name: str
+    description: str
+    make_sim_state: Callable[[int], Any]
+    sim_barrier: Callable[..., Any]
+    sim_mutex: Callable[..., Any]
+    chip_barrier: Callable[..., Any]
+    shape_gradients: Callable[..., Any]
+    opt_state_specs: Callable[..., Any]
+    aliases: Tuple[str, ...] = ()  # e.g. the legacy simulator spelling "SCU"
+
+
+# name (and alias) -> policy, in registration order (order is meaningful:
+# benchmarks print columns in it, with the paper's triad first).
+_REGISTRY: Dict[str, SyncPolicy] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_policy(policy: SyncPolicy, *, overwrite: bool = False) -> SyncPolicy:
+    """Register ``policy`` under its (case-insensitive) name and aliases.
+
+    Validates cross-layer completeness at registration time: a policy missing
+    any layer hook would otherwise fail deep inside a benchmark or a jitted
+    train step, far from the actual mistake.
+    """
+    missing = [
+        h for h in LAYER_HOOKS
+        if not callable(getattr(policy, h, None))
+    ]
+    if missing:
+        raise TypeError(
+            f"policy {getattr(policy, 'name', policy)!r} does not implement "
+            f"the full SyncPolicy protocol; missing/uncallable hooks: {missing}"
+        )
+    name = policy.name.lower()
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"sync policy {name!r} is already registered")
+    aliases = tuple(a.lower() for a in getattr(policy, "aliases", ()) or ())
+    for alias in aliases:
+        # an alias may never capture another policy's name or alias --
+        # resolution would silently hijack every existing call site
+        if alias != name and (
+            alias in _REGISTRY or _ALIASES.get(alias, name) != name
+        ):
+            raise ValueError(
+                f"alias {alias!r} of policy {name!r} collides with an "
+                f"already-registered policy name or alias"
+            )
+    if overwrite:
+        for alias, target in list(_ALIASES.items()):
+            if target == name:  # drop the replaced policy's stale aliases
+                del _ALIASES[alias]
+    _REGISTRY[name] = policy
+    for alias in aliases:
+        _ALIASES[alias] = name
+    return policy
+
+
+def unregister_policy(name: str) -> None:
+    """Remove a policy and its aliases.
+
+    Restoration is the caller's responsibility: ``repro.sync`` stays cached
+    in ``sys.modules``, so the builtin registrations do NOT re-run -- hold on
+    to the policy object and ``register_policy`` it back (see
+    ``tests/test_sync_api.py`` for the try/finally pattern).
+    """
+    cname = canonical_name(name)
+    del _REGISTRY[cname]
+    for alias, target in list(_ALIASES.items()):
+        if target == cname:
+            del _ALIASES[alias]
+
+
+def canonical_name(name: str) -> str:
+    """Resolve ``name`` (any case, alias allowed) to the registered name.
+
+    Registered names take precedence over aliases, so an alias can never
+    shadow a policy's own name.
+    """
+    key = str(name).lower()
+    if key not in _REGISTRY:
+        key = _ALIASES.get(key, key)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown sync policy {name!r}; available policies: "
+            f"{', '.join(available_policies())}"
+        )
+    return key
+
+
+def get_policy(name: str) -> SyncPolicy:
+    """Resolve a policy by name (case-insensitive, legacy aliases accepted)."""
+    return _REGISTRY[canonical_name(name)]
+
+
+def available_policies() -> Tuple[str, ...]:
+    """Registered policy names, in registration order (paper triad first)."""
+    return tuple(_REGISTRY)

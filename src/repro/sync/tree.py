@@ -1,0 +1,153 @@
+"""A fourth discipline: log-depth tree/hierarchical barrier (MemPool-style).
+
+Proves the ``repro.sync`` extension point: this policy is registered once
+and shows up with zero per-layer special-casing in Table 1, the Fig. 5
+sweep, Table 2, the chip-level wall-clock benchmark and the training path.
+
+The discipline follows the hierarchical barriers used by large shared-L1
+clusters (MemPool, arXiv 2303.17742): instead of all cores contending on
+one counter (the SW/TAS pattern) or dedicated hardware (SCU), arrivals are
+combined up a binary tournament tree -- O(log n) depth, and each shared
+flag word is only ever written by one core and read by one core, so the
+hot-spot bank traffic of the central-counter barrier disappears.
+
+  * simulator -- software tournament barrier with sense reversal: core
+    ``cid`` publishes its arrival at round ``r = lowest set bit of cid``
+    into its private flag word; winners wait for their partner's subtree,
+    the champion (core 0) broadcasts the release word.
+  * chip level -- butterfly (recursive-doubling) exchange: log2(n) pairwise
+    rounds; the released count is the sum of the exchanged values (blocks
+    are disjoint, so the sum is exact).  Non-power-of-two groups fall back
+    to the dissemination exchange, which is also log-depth and exact.
+  * training -- hierarchical bucketed reduce-scatter: numerically identical
+    to the ``scu`` fine-grain discipline (XLA lowers the collectives to
+    tree schedules); optimizer state is ZeRO-sharded the same way.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import axis_size
+
+from repro.core.scu.engine import Compute, Mem
+from repro.core.scu.primitives import DEFAULT_COSTS, sw_mutex_section
+from repro.sync.api import PolicyDef, register_policy
+from repro.sync.policies import (
+    tas_chip_barrier,
+    zero_opt_state_specs,
+    zero_shape_gradients,
+)
+
+__all__ = ["TREE", "TreeBarrierState", "tree_barrier", "tree_chip_barrier"]
+
+# TCDM layout: one arrival flag word per core + one release word, all in
+# distinct words (distinct banks under word interleaving), above the
+# central-barrier variables of core/scu/primitives.py.
+A_TREE_RELEASE = 0x1F0
+A_TREE_FLAG_BASE = 0x200
+
+
+def _flag_addr(cid: int) -> int:
+    return A_TREE_FLAG_BASE + 4 * cid
+
+
+class TreeBarrierState:
+    """Per-run tournament-barrier bookkeeping (local sense per core)."""
+
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        self.local_sense = [0] * n_cores
+
+
+def tree_barrier(cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS):
+    """Software tournament barrier: log-depth combining, sense reversal.
+
+    Each core loses at exactly one level (the lowest set bit of its id), so
+    a single flag word per core suffices; flags carry the sense value, which
+    makes the barrier reusable back-to-back without resets.
+    """
+    n = st.n_cores
+    sense = st.local_sense[cid] ^ 1
+    st.local_sense[cid] = sense
+    yield Compute(cm.call + cm.sense_setup)
+    level = 0
+    is_champion = True
+    while (1 << level) < n:
+        if cid & (1 << level):
+            # loser at this level: publish the subtree's arrival, then wait
+            # for the champion's release broadcast
+            yield Compute(1)  # flag address computation
+            yield Mem("sw", _flag_addr(cid), sense)
+            is_champion = False
+            break
+        partner = cid | (1 << level)
+        if partner < n:
+            # winner: wait for the subtree rooted at the partner
+            while True:
+                v = yield Mem("lw", _flag_addr(partner))
+                yield Compute(1 + cm.load_use)
+                if v == sense:
+                    break
+                yield Compute(cm.branch_taken)
+        level += 1
+    if is_champion:
+        # core 0 saw every subtree arrive: flip the shared release word
+        yield Mem("sw", A_TREE_RELEASE, sense)
+    else:
+        while True:
+            s = yield Mem("lw", A_TREE_RELEASE)
+            yield Compute(1 + cm.load_use)
+            if s == sense:
+                break
+            yield Compute(cm.branch_taken)
+    yield Compute(cm.ret)
+
+
+def _tree_sim_barrier(cluster, cid, state, cost_model=None):
+    yield from tree_barrier(cluster, cid, state, cost_model or DEFAULT_COSTS)
+
+
+def _tree_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
+    # The tree discipline restructures *barriers*; critical sections keep the
+    # plain spin-lock (a combining tree has no analogue for mutexes).
+    yield from sw_mutex_section(cluster, cid, t_crit, cost_model or DEFAULT_COSTS)
+
+
+def tree_chip_barrier(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Butterfly exchange: log2(n) pairwise rounds, partner = idx XOR 2**k.
+
+    At round k every device holds the sum of its 2**k-aligned block; the
+    XOR partner holds the disjoint sibling block, so adding the exchanged
+    value is exact -- the count derives entirely from the exchanged values.
+    """
+    n = axis_size(axis)
+    if n & (n - 1):
+        # butterfly pairing needs a power-of-two group; dissemination is the
+        # log-depth exchange that stays exact for any group size
+        return tas_chip_barrier(arrive, axis)
+    total = arrive
+    shift = 1
+    while shift < n:
+        perm = [(i, i ^ shift) for i in range(n)]
+        total = total + jax.lax.ppermute(total, axis, perm)
+        shift *= 2
+    return total
+
+
+TREE = register_policy(PolicyDef(
+    name="tree",
+    description=(
+        "log-depth hierarchical barrier (MemPool-style): simulator tournament "
+        "tree, chip-level butterfly exchange, training: hierarchical bucketed "
+        "reduce-scatter (numerically identical to scu)"
+    ),
+    aliases=("TREE",),
+    make_sim_state=TreeBarrierState,
+    sim_barrier=_tree_sim_barrier,
+    sim_mutex=_tree_sim_mutex,
+    chip_barrier=tree_chip_barrier,
+    shape_gradients=zero_shape_gradients,
+    opt_state_specs=zero_opt_state_specs,
+))

@@ -16,10 +16,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
-from repro.core.sync.strategies import opt_state_specs, shape_gradients
+from repro.configs.base import ModelConfig, validate_sync_policy
 from repro.models.lm import init_lm, lm_loss
 from repro.parallel.sharding import batch_spec, param_shardings, param_specs
+from repro.sync import SyncPolicy, get_policy
 from repro.train.optimizer import OptConfig, adamw_update, compress_decompress
 
 __all__ = ["TrainConfig", "make_train_step", "train_state_specs", "abstract_params"]
@@ -28,11 +28,22 @@ __all__ = ["TrainConfig", "make_train_step", "train_state_specs", "abstract_para
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     opt: OptConfig = OptConfig()
-    sync_strategy: str = "scu"  # scu | tas | sw (see core/sync/strategies.py)
+    sync_strategy: str = "scu"  # any registered repro.sync policy name
     remat_policy: str = "full"
     param_dtype: str = "bfloat16"
     sequence_parallel: bool = True  # shard the residual carry over "model"
     grad_accum: int = 1  # microbatches per step (activation-memory knob)
+
+    def __post_init__(self):
+        # canonicalize + fail fast on unknown policies (the error names the
+        # registered ones) instead of erroring deep inside a jitted step
+        object.__setattr__(
+            self, "sync_strategy", validate_sync_policy(self.sync_strategy)
+        )
+
+    @property
+    def sync_policy(self) -> SyncPolicy:
+        return get_policy(self.sync_strategy)
 
 
 def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Any:
@@ -49,7 +60,7 @@ def train_state_specs(
     """PartitionSpec trees for (params, opt_state, step)."""
     params_sds = abstract_params(cfg, jnp.dtype(tcfg.param_dtype))
     pspecs = param_specs(params_sds, mesh, cfg=cfg)
-    ospecs = opt_state_specs(tcfg.sync_strategy, params_sds, mesh, cfg=cfg)
+    ospecs = tcfg.sync_policy.opt_state_specs(params_sds, mesh, cfg=cfg)
     return {"params": pspecs, "opt": ospecs, "step": P()}
 
 
@@ -58,8 +69,9 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
 
     ``step_fn(params, opt_state, step, batch) -> (params, opt_state, step,
     metrics)``.  All sharding is communicated via in/out shardings; the
-    gradient path is shaped by the configured SyncEngine strategy.
+    gradient path is shaped by the configured ``repro.sync`` policy.
     """
+    policy = tcfg.sync_policy
     param_dtype = jnp.dtype(tcfg.param_dtype)
     params_sds = abstract_params(cfg, param_dtype)
     specs = train_state_specs(cfg, tcfg, mesh)
@@ -112,9 +124,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
     def step_fn(params, opt_state, step, batch):
         if accum == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            grads = shape_gradients(
-                tcfg.sync_strategy, grads, params_sds, mesh, cfg=cfg
-            )
+            grads = policy.shape_gradients(grads, params_sds, mesh, cfg=cfg)
         else:
             # gradient accumulation: scan over microbatches; the f32
             # accumulators live on the ZeRO/FSDP shards (constrained per
@@ -127,9 +137,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
             def mb(carry, mbatch):
                 gsum, lsum = carry
                 l, g = jax.value_and_grad(loss_fn)(params, mbatch)
-                g = shape_gradients(
-                    tcfg.sync_strategy, g, params_sds, mesh, cfg=cfg
-                )
+                g = policy.shape_gradients(g, params_sds, mesh, cfg=cfg)
                 gsum = jax.tree.map(
                     lambda a, b_: a + b_.astype(jnp.float32), gsum, g
                 )
@@ -138,8 +146,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
             g0 = jax.tree.map(
                 lambda p_: jnp.zeros(p_.shape, jnp.float32), params
             )
-            g0 = shape_gradients("scu" if tcfg.sync_strategy == "scu" else
-                                 tcfg.sync_strategy, g0, params_sds, mesh, cfg=cfg)
+            g0 = policy.shape_gradients(g0, params_sds, mesh, cfg=cfg)
             (gsum, lsum), _ = jax.lax.scan(
                 mb, (g0, jnp.zeros((), jnp.float32)), micro
             )

@@ -1,0 +1,152 @@
+"""Deterministic fallback for ``hypothesis`` in offline environments.
+
+The tier-1 suite uses a small subset of hypothesis (``given``/``settings``
+with integer / sampled-from / list strategies).  When the real package is
+unavailable (this container cannot pip install), ``tests/conftest.py``
+installs this module into ``sys.modules['hypothesis']`` *before* collection,
+so the test files' ``from hypothesis import given, settings`` imports keep
+working unchanged.  When hypothesis IS importable, conftest leaves it alone
+and this module is never used.
+
+The fallback draws a fixed number of examples per test from a PRNG seeded
+with the test name: deterministic across runs, different across tests, and
+it always includes the strategy's boundary examples first (min/max for
+integers, first/last for sampled_from) -- a cheap stand-in for hypothesis's
+shrinking-toward-simple behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A deterministic example source mirroring hypothesis's SearchStrategy."""
+
+    def __init__(self, boundary: Callable[[], List[Any]], draw: Callable[[random.Random], Any]):
+        self._boundary = boundary
+        self._draw = draw
+
+    def boundary_examples(self) -> List[Any]:
+        return self._boundary()
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+    return _Strategy(
+        lambda: [min_value, max_value],
+        lambda rng: rng.randint(min_value, max_value),
+    )
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(
+        lambda: [opts[0], opts[-1]],
+        lambda rng: rng.choice(opts),
+    )
+
+
+def booleans() -> _Strategy:
+    return sampled_from([False, True])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_: Any) -> _Strategy:
+    return _Strategy(
+        lambda: [min_value, max_value],
+        lambda rng: rng.uniform(min_value, max_value),
+    )
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def boundary():
+        return [
+            [b] * max(min_size, 1) if min_size else []
+            for b in elements.boundary_examples()
+        ][:2]
+
+    def draw(rng: random.Random):
+        size = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(size)]
+
+    return _Strategy(boundary, draw)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda: [value], lambda rng: value)
+
+
+strategies = SimpleNamespace(
+    integers=integers,
+    sampled_from=sampled_from,
+    booleans=booleans,
+    floats=floats,
+    lists=lists,
+    just=just,
+)
+
+
+def given(**param_strategies: _Strategy):
+    """Run the test once per drawn example set (boundary draws first)."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            names = list(param_strategies)
+            # boundary pass: every strategy pinned to its simplest extremes
+            boundary_sets = []
+            for i in range(2):
+                drawn = {}
+                for n in names:
+                    ex = param_strategies[n].boundary_examples()
+                    drawn[n] = ex[i % len(ex)]
+                boundary_sets.append(drawn)
+            random_sets = [
+                {n: param_strategies[n].example(rng) for n in names}
+                for _ in range(max(0, max_examples - len(boundary_sets)))
+            ]
+            for drawn in boundary_sets + random_sets:
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 - re-raise with context
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {drawn!r}"
+                    ) from e
+
+        wrapper._is_hypothesis_fallback = True
+        # hide the drawn parameters from pytest's fixture resolution (the
+        # real hypothesis does the same); remaining params stay fixtures
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in param_strategies
+            ]
+        )
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_: Any):
+    """Record ``max_examples`` on the (possibly not-yet-)given-wrapped test.
+
+    Mirrors hypothesis's decorator order tolerance: ``@settings`` may sit
+    above or below ``@given``.
+    """
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

@@ -4,6 +4,7 @@ NOTE: this deliberately requests 4 (not 512) devices -- the 512-device
 production mesh exists only inside ``repro.launch.dryrun`` (per assignment).
 """
 
+import importlib.util
 import os
 import sys
 from pathlib import Path
@@ -12,3 +13,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 # repo root on sys.path so `import benchmarks` works under pytest
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+# Offline fallback: when the real hypothesis isn't installed (this container
+# cannot pip install), alias the deterministic shim in before collection so
+# `from hypothesis import given, settings` in the test modules keeps working.
+if importlib.util.find_spec("hypothesis") is None:
+    from tests import _hypothesis_compat
+
+    sys.modules["hypothesis"] = _hypothesis_compat
+    sys.modules["hypothesis.strategies"] = _hypothesis_compat.strategies

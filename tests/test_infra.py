@@ -60,7 +60,9 @@ def test_hlo_analyzer_sees_collectives():
         pytest.skip("needs >= 2 devices")
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((2,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_axis_mesh
+
+    mesh = make_axis_mesh((2,), ("x",))
     sh = NamedSharding(mesh, P(None, "x"))
     rep = NamedSharding(mesh, P(None, None))
     x = jax.device_put(jnp.ones((64, 64), jnp.float32), sh)

@@ -14,6 +14,7 @@ from repro.kernels.scu_barrier.ops import barrier, ref_barrier_count
 from repro.kernels.scu_barrier.ref import self_signal_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.sync import available_policies
 
 KEY = jax.random.PRNGKey(7)
 
@@ -130,20 +131,22 @@ def test_scu_self_signal_semantics():
     np.testing.assert_allclose(np.asarray(out), np.asarray(self_signal_ref(x)))
 
 
-@pytest.mark.parametrize("strategy", ["scu", "tas", "sw"])
+@pytest.mark.parametrize("strategy", available_policies())
 def test_barrier_strategies_equivalent(strategy):
-    """All three disciplines release with the same arrival count."""
+    """Every registered discipline releases with the same arrival count."""
     n = min(4, jax.device_count())
     if n < 2:
         pytest.skip("needs >= 2 devices")
-    mesh = jax.make_mesh((n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_axis_mesh, shard_map
+
+    mesh = make_axis_mesh((n,), ("x",))
     from jax.sharding import PartitionSpec as P
 
     arrive = jnp.ones((n,), jnp.float32)
 
     @jax.jit
     def run(a):
-        return jax.shard_map(
+        return shard_map(
             lambda v: barrier(v, "x", strategy),
             mesh=mesh,
             in_specs=P("x"),

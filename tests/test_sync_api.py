@@ -1,0 +1,280 @@
+"""The unified ``repro.sync`` policy API: registry, cross-layer parity,
+and the tree-barrier extension policy."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_axis_mesh, shard_map
+from repro.core.scu import SCU, Cluster, Compute
+from repro.kernels.scu_barrier.ops import ref_barrier_count
+from repro.sync import (
+    LAYER_HOOKS,
+    PolicyDef,
+    SyncPolicy,
+    available_policies,
+    canonical_name,
+    get_policy,
+    register_policy,
+    unregister_policy,
+)
+
+BUILTINS = ("scu", "tas", "sw", "tree")
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered_in_order():
+    names = available_policies()
+    assert names[:3] == ("scu", "tas", "sw")  # the paper's triad first
+    assert "tree" in names
+
+
+def _dummy_policy(name="dummy"):
+    scu = get_policy("scu")
+    return dataclasses.replace(scu, name=name, aliases=(name.upper(),))
+
+
+def test_register_resolve_list_roundtrip():
+    policy = _dummy_policy()
+    try:
+        register_policy(policy)
+        assert "dummy" in available_policies()
+        assert get_policy("dummy") is policy
+        assert get_policy("DUMMY") is policy  # alias + case-insensitivity
+        assert canonical_name("Dummy") == "dummy"
+    finally:
+        unregister_policy("dummy")
+    assert "dummy" not in available_policies()
+
+
+def test_double_registration_rejected():
+    policy = _dummy_policy()
+    try:
+        register_policy(policy)
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(policy)
+        register_policy(policy, overwrite=True)  # explicit overwrite allowed
+    finally:
+        unregister_policy("dummy")
+
+
+def test_alias_cannot_hijack_existing_policy():
+    """An alias capturing another policy's name/alias must be rejected --
+    otherwise get_policy('scu') would silently return the newcomer."""
+    hijacker = dataclasses.replace(_dummy_policy("ring"), aliases=("scu",))
+    with pytest.raises(ValueError, match="collides"):
+        register_policy(hijacker)
+    legacy_hijacker = dataclasses.replace(_dummy_policy("ring"), aliases=("SW",))
+    with pytest.raises(ValueError, match="collides"):
+        register_policy(legacy_hijacker)
+    assert get_policy("scu").name == "scu"
+    assert "ring" not in available_policies()
+
+
+def test_overwrite_drops_stale_aliases():
+    policy = dataclasses.replace(_dummy_policy(), aliases=("DUMMY", "DMY"))
+    try:
+        register_policy(policy)
+        replacement = dataclasses.replace(policy, aliases=("DUMMY",))
+        register_policy(replacement, overwrite=True)
+        assert get_policy("dummy") is replacement
+        with pytest.raises(KeyError):
+            get_policy("dmy")  # stale alias of the replaced policy is gone
+    finally:
+        unregister_policy("dummy")
+
+
+def test_unknown_policy_error_names_available():
+    with pytest.raises(KeyError) as e:
+        get_policy("bogus")
+    msg = str(e.value)
+    for name in BUILTINS:
+        assert name in msg, f"error should name available policy {name!r}: {msg}"
+
+
+def test_incomplete_policy_rejected():
+    incomplete = dataclasses.replace(_dummy_policy("broken"), chip_barrier=None)
+    with pytest.raises(TypeError, match="chip_barrier"):
+        register_policy(incomplete)
+
+
+def test_legacy_spellings_resolve():
+    # the pre-registry simulator/benchmark spellings keep working via aliases
+    for legacy in ("SCU", "TAS", "SW"):
+        assert get_policy(legacy).name == legacy.lower()
+
+
+def test_legacy_shim_imports_resolve():
+    from repro.core.scu.primitives import VARIANTS
+    from repro.core.sync.strategies import STRATEGIES, opt_state_specs, shape_gradients
+
+    assert VARIANTS == ("SCU", "TAS", "SW")
+    assert STRATEGIES == ("scu", "tas", "sw")
+    assert callable(shape_gradients) and callable(opt_state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer parity: every policy provides every hook, and the barriers
+# release with the full participant count at both granularities
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+def test_policy_implements_protocol(name):
+    policy = get_policy(name)
+    assert isinstance(policy, SyncPolicy)
+    for hook in LAYER_HOOKS:
+        assert callable(getattr(policy, hook)), f"{name} missing {hook}"
+    assert policy.description
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_sim_barrier_releases_full_group(name, n):
+    """No core passes the simulator barrier before the last one arrives."""
+    policy = get_policy(name)
+    cl = Cluster(n_cores=n, scu=SCU(n_cores=n))
+    state = policy.make_sim_state(n)
+    passed = []
+    delays = [1 + 9 * i for i in range(n)]
+
+    def prog(delay):
+        def p(cluster, cid):
+            yield Compute(delay)
+            yield from policy.sim_barrier(cluster, cid, state, None)
+            passed.append((cid, cluster.cycle))
+
+        return p
+
+    cl.load([prog(d) for d in delays])
+    cl.run(max_cycles=1_000_000)
+    assert len(passed) == n, f"{name}: only {len(passed)}/{n} cores released"
+    last_arrival = max(delays)
+    for cid, cyc in passed:
+        assert cyc >= last_arrival, f"{name}: core {cid} escaped early"
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+def test_sim_mutex_mutual_exclusion(name):
+    policy = get_policy(name)
+    n = 4
+    cl = Cluster(n_cores=n, scu=SCU(n_cores=n))
+    state = policy.make_sim_state(n)
+    done = []
+
+    def prog(cluster, cid):
+        for _ in range(3):
+            yield from policy.sim_mutex(cluster, cid, 5, state, None)
+        done.append(cid)
+
+    cl.load([prog] * n)
+    cl.run(max_cycles=2_000_000)
+    assert sorted(done) == list(range(n)), f"{name}: mutex liveness violated"
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+def test_chip_barrier_matches_psum_oracle(name):
+    """Every discipline's released count == the psum oracle (exchanged
+    values must actually produce the full participant count)."""
+    policy = get_policy(name)
+    n = min(4, jax.device_count())
+    if n < 2:
+        pytest.skip("needs >= 2 devices")
+    mesh = make_axis_mesh((n,), ("x",))
+    arrive = jnp.ones((n,), jnp.float32)
+
+    @jax.jit
+    def run(a):
+        return shard_map(
+            lambda v: (policy.chip_barrier(v, "x"), ref_barrier_count(v, "x")),
+            mesh=mesh,
+            in_specs=P("x"),
+            out_specs=P("x"),
+        )(a)
+
+    got, oracle = run(arrive)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle))
+    np.testing.assert_allclose(np.asarray(got), np.full((n,), float(n)))
+
+
+# ---------------------------------------------------------------------------
+# Training layer: the tree policy is numerically identical to scu
+# ---------------------------------------------------------------------------
+
+
+def _toy_grads(seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return {
+        "embed": {"table": jax.random.normal(k1, (16, 8))},
+        "blocks": {"wq": jax.random.normal(k2, (4, 8, 8))},
+        "norm": jax.random.normal(k3, (8,)),
+    }
+
+
+def test_tree_shape_gradients_matches_scu():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices")
+    mesh = make_axis_mesh((2, 2), ("data", "model"))
+    grads = _toy_grads()
+    shaped = {}
+    for name in ("scu", "tree"):
+        policy = get_policy(name)
+        fn = jax.jit(lambda g: policy.shape_gradients(g, grads, mesh))
+        shaped[name] = fn(grads)
+    for (ka, a), (kb, b) in zip(
+        jax.tree_util.tree_leaves_with_path(shaped["scu"]),
+        jax.tree_util.tree_leaves_with_path(shaped["tree"]),
+    ):
+        assert ka == kb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the discipline must not change the values, only the schedule
+    for a, b in zip(jax.tree.leaves(shaped["tree"]), jax.tree.leaves(grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tree_opt_state_specs_match_scu():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices")
+    mesh = make_axis_mesh((2, 2), ("data", "model"))
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _toy_grads()
+    )
+    scu_specs = get_policy("scu").opt_state_specs(shapes, mesh)
+    tree_specs = get_policy("tree").opt_state_specs(shapes, mesh)
+    assert jax.tree.all(
+        jax.tree.map(
+            lambda a, b: a == b, scu_specs, tree_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+
+def test_train_config_validates_and_canonicalizes():
+    from repro.train.step import TrainConfig
+
+    assert TrainConfig(sync_strategy="TREE").sync_strategy == "tree"
+    assert TrainConfig().sync_policy.name == "scu"
+    with pytest.raises(KeyError, match="available policies"):
+        TrainConfig(sync_strategy="bogus")
+
+
+def test_config_base_choices_track_registry():
+    from repro.configs.base import sync_policy_choices, validate_sync_policy
+
+    assert sync_policy_choices() == available_policies()
+    assert validate_sync_policy("SW") == "sw"

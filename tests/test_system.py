@@ -13,8 +13,8 @@ def test_paper_headline_sfr_reduction():
     from benchmarks.fig5_overhead import run
 
     result = run(n_cores=8, iters=8, verbose=False)
-    scu = result["SCU"]["min_sfr_energy_10pct"]
-    sw = result["SW"]["min_sfr_energy_10pct"]
+    scu = result["scu"]["min_sfr_energy_10pct"]
+    sw = result["sw"]["min_sfr_energy_10pct"]
     assert scu < 100, f"SCU min SFR {scu} should be tens of cycles"
     assert sw / scu > 25, f"reduction {sw/scu:.1f}x (paper: 41x)"
 
