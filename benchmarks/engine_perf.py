@@ -1,0 +1,117 @@
+"""Engine throughput: simulated cycles per second, lockstep vs fastforward.
+
+Times the Fig. 5 barrier sweep (SFR >= 1000, every registered ``repro.sync``
+policy) under both engine modes of :class:`repro.core.scu.engine.Cluster`
+and reports per-config and aggregate simulated-cycles-per-second.  The two
+modes are asserted cycle-exact on every config while we are at it -- this
+benchmark doubles as a coarse parity check (the fine-grained one lives in
+``tests/test_scu_simulator.py``).
+
+    PYTHONPATH=src python -m benchmarks.engine_perf [--json PATH]
+
+The aggregate speedup is the headline number for the event-driven engine:
+the quiescent spans it skips (SFR compute runs, clock-gated idle waits)
+dominate realistic workloads, so the fast path is what makes 64-core
+clusters and dense SFR grids sweepable at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional, Sequence
+
+from repro.core.scu.programs import run_barrier_bench
+from repro.sync import available_policies
+
+MODES = ("lockstep", "fastforward")
+
+# the Fig. 5 sweep restricted to SFR >= 1000 (where skipping pays off most;
+# smaller SFRs are spin-dominated and bound by the per-cycle reference path)
+SFRS = (1000, 1600, 2500, 4000)
+
+
+def run(
+    n_cores: int = 8,
+    sfrs: Sequence[int] = SFRS,
+    iters: int = 8,
+    policies: Optional[Sequence[str]] = None,
+    verbose: bool = True,
+) -> Dict:
+    policies = tuple(policies) if policies else available_policies()
+    rows = []
+    totals = {m: {"cycles": 0, "wall_s": 0.0} for m in MODES}
+    for policy in policies:
+        for sfr in sfrs:
+            per_mode = {}
+            for mode in MODES:
+                t0 = time.perf_counter()
+                r = run_barrier_bench(
+                    policy, n_cores, sfr=sfr, iters=iters, mode=mode
+                )
+                wall = time.perf_counter() - t0
+                per_mode[mode] = {
+                    "cycles": r.cycles_total,
+                    "wall_s": wall,
+                    "cycles_per_sec": r.cycles_total / max(wall, 1e-9),
+                }
+                totals[mode]["cycles"] += r.cycles_total
+                totals[mode]["wall_s"] += wall
+            if per_mode["lockstep"]["cycles"] != per_mode["fastforward"]["cycles"]:
+                raise AssertionError(
+                    f"engine modes diverged on {policy} @ sfr={sfr}: "
+                    f"{per_mode['lockstep']['cycles']} vs "
+                    f"{per_mode['fastforward']['cycles']} cycles"
+                )
+            rows.append({"policy": policy, "sfr": sfr, **{
+                m: per_mode[m] for m in MODES
+            }})
+
+    throughput = {
+        m: totals[m]["cycles"] / max(totals[m]["wall_s"], 1e-9) for m in MODES
+    }
+    speedup = throughput["fastforward"] / max(throughput["lockstep"], 1e-9)
+    result = {
+        "n_cores": n_cores,
+        "sfrs": list(sfrs),
+        "iters": iters,
+        "policies": list(policies),
+        "rows": rows,
+        "cycles_per_sec": throughput,
+        "speedup": speedup,
+    }
+
+    if verbose:
+        print(f"\n== Engine throughput ({n_cores} cores, SFR sweep >= 1000) ==")
+        print(f"{'policy':7s} {'sfr':>5s} | {'lockstep c/s':>13s} {'fastfwd c/s':>13s} {'speedup':>8s}")
+        for row in rows:
+            ls = row["lockstep"]["cycles_per_sec"]
+            ff = row["fastforward"]["cycles_per_sec"]
+            print(
+                f"{row['policy']:7s} {row['sfr']:5d} | {ls:13,.0f} {ff:13,.0f} "
+                f"{ff / max(ls, 1e-9):7.1f}x"
+            )
+        print(
+            f"\naggregate: lockstep {throughput['lockstep']:,.0f} cyc/s, "
+            f"fastforward {throughput['fastforward']:,.0f} cyc/s "
+            f"-> {speedup:.1f}x"
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", help="write results as JSON")
+    ap.add_argument("--n-cores", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=8)
+    args = ap.parse_args()
+    result = run(n_cores=args.n_cores, iters=args.iters)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,17 @@ below 10% -- the paper's headline: SCU 42 cycles vs TAS 1622 / SW 1771
 (energy, 8 cores), a >41x reduction.
 
 Every registered ``repro.sync`` policy is swept (the paper's triad plus
-extensions such as the log-depth ``tree`` barrier).
+extensions such as the log-depth ``tree`` barrier).  Two grids are provided:
+the paper-matching ``SFRS`` and the ~2x finer ``SFRS_DENSE`` that the
+event-driven engine makes affordable (pass ``sfrs=SFRS_DENSE`` or
+``dense=True``); :func:`run_scaling` repeats the sweep on 16/32/64-core
+clusters, where the minimum viable SFR of the software disciplines grows
+with the core count while the SCU's stays put.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
 from repro.core.scu.programs import run_barrier_bench
@@ -20,6 +25,11 @@ from repro.sync import available_policies
 PAPER_MIN_SFR_ENERGY_8 = {"scu": 42.0, "tas": 1622.0, "sw": 1771.0}
 
 SFRS = [8, 16, 32, 42, 64, 100, 160, 250, 400, 640, 1000, 1600, 2500, 4000]
+# ~2x denser log-spaced grid: sharper min-SFR interpolation, same range
+SFRS_DENSE = [
+    8, 12, 16, 24, 32, 42, 56, 64, 80, 100, 128, 160, 200, 250, 320, 400,
+    500, 640, 800, 1000, 1300, 1600, 2000, 2500, 3200, 4000,
+]
 
 
 def _overheads(variant: str, n: int, sfr: int, iters: int) -> Tuple[float, float]:
@@ -50,12 +60,19 @@ def min_sfr_at(threshold: float, curve: List[Tuple[int, float]]) -> float:
     return float("inf")
 
 
-def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
+def run(
+    n_cores: int = 8,
+    iters: int = 16,
+    verbose: bool = True,
+    sfrs: Optional[Sequence[int]] = None,
+    dense: bool = False,
+) -> Dict:
+    sfrs = list(sfrs) if sfrs is not None else (SFRS_DENSE if dense else SFRS)
     variants = available_policies()
     curves = {}
     for variant in variants:
         cyc_curve, en_curve = [], []
-        for sfr in SFRS:
+        for sfr in sfrs:
             c, e = _overheads(variant, n_cores, sfr, iters)
             cyc_curve.append((sfr, c))
             en_curve.append((sfr, e))
@@ -72,7 +89,7 @@ def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
 
     if verbose:
         print(f"\n== Fig. 5: overhead vs SFR size ({n_cores} cores) ==")
-        hdr = "SFR:       " + "".join(f"{s:>8d}" for s in SFRS)
+        hdr = "SFR:       " + "".join(f"{s:>8d}" for s in sfrs)
         print(hdr)
         for variant in variants:
             row = curves[variant]["energy"]
@@ -93,5 +110,44 @@ def run(n_cores: int = 8, iters: int = 16, verbose: bool = True) -> Dict:
     return result
 
 
+# SFR grid for the multi-core sweep: spin-heavy small-SFR points get very
+# expensive at 64 cores, so the scaling sweep samples the decades sparsely;
+# the top end stretches past the 8-core grid because the software
+# disciplines' minimum viable SFR grows with the core count.
+SFRS_SCALE = [64, 160, 400, 1000, 2500, 6400, 16000]
+
+
+def run_scaling(
+    core_counts=(16, 32, 64),
+    iters: int = 8,
+    sfrs: Optional[Sequence[int]] = None,
+    verbose: bool = True,
+) -> Dict[int, Dict]:
+    """The Fig. 5 sweep on 16/32/64-core clusters (every policy).
+
+    Reports how the minimum SFR for <=10% energy overhead scales with the
+    core count: the software disciplines need ever-larger synchronization-
+    free regions, the SCU's stays flat -- the paper's argument, extended to
+    MemPool-scale clusters.
+    """
+    sfrs = list(sfrs) if sfrs is not None else SFRS_SCALE
+    results: Dict[int, Dict] = {}
+    for n in core_counts:
+        results[n] = run(n_cores=n, iters=iters, verbose=False, sfrs=sfrs)
+    if verbose:
+        variants = available_policies()
+        counts = "/".join(str(n) for n in core_counts)
+        print(f"\n== Fig. 5 (scaling): min SFR @ 10% energy overhead, {counts} cores ==")
+        print("policy " + "".join(f"{n:>10d}" for n in core_counts))
+        for v in variants:
+            vals = []
+            for n in core_counts:
+                m = results[n][v]["min_sfr_energy_10pct"]
+                vals.append(f"{m:10.0f}" if m != float("inf") else f"{'>max':>10s}")
+            print(f"{v:6s}" + "".join(vals))
+    return results
+
+
 if __name__ == "__main__":
     run()
+    run_scaling()

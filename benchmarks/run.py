@@ -1,35 +1,138 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
-Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), then the
+Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2) plus the
+16/32/64-core scaling sweeps and the engine-throughput benchmark, then the
 Tier-2 roofline read-out from the dry-run artifacts.  The chip-level
 barrier timing benchmark needs its own process with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and is invoked as a
-subprocess (device count is locked at jax init).
+subprocess (device count is locked at jax init); its failure propagates to
+this process's exit code so CI actually gates on it.
+
+``--json`` writes the machine-readable key numbers (Table-1/Fig-5 rows,
+scaling rows, engine throughput per mode) -- the seed of the performance
+trajectory tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import os
 import subprocess
 import sys
 
 
-def main() -> None:
+def _jsonable(obj):
+    """Recursively convert benchmark results to strict-JSON-safe values."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, (int, str, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+def _table1_json(rows):
+    return [
+        {
+            "primitive": prim,
+            "policy": policy,
+            "cycles": meas_c,
+            "paper_cycles": list(pc) if pc else None,
+            "energy_nj": meas_e,
+            "paper_energy_nj": list(pe) if pe else None,
+        }
+        for prim, policy, meas_c, pc, meas_e, pe in rows
+    ]
+
+
+def _table1_scaling_json(rows):
+    return [
+        {
+            "primitive": prim,
+            "policy": policy,
+            "core_counts": counts,
+            "cycles": meas_c,
+            "energy_nj": meas_e,
+        }
+        for prim, policy, counts, meas_c, meas_e in rows
+    ]
+
+
+def _fig5_json(result):
+    return {
+        variant: {
+            "min_sfr_cycles_10pct": r["min_sfr_cycles_10pct"],
+            "min_sfr_energy_10pct": r["min_sfr_energy_10pct"],
+            "paper_min_sfr_energy": r["paper_min_sfr_energy"],
+        }
+        for variant, r in result.items()
+    }
+
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the slow PCA app")
+    ap.add_argument(
+        "--json", metavar="PATH",
+        help="write Table-1/Fig-5/scaling/engine-perf key numbers as JSON",
+    )
     args = ap.parse_args()
 
-    from benchmarks import fig5_overhead, roofline, table1_primitives, table2_apps
+    from benchmarks import (
+        engine_perf,
+        fig5_overhead,
+        roofline,
+        table1_primitives,
+        table2_apps,
+    )
+
+    results = {}
+    rc = 0
 
     print("#" * 72)
     print("# Tier 1 -- paper-faithful reproduction (cycle-accurate simulator)")
     print("#" * 72)
-    table1_primitives.run()
-    fig5_overhead.run()
-    table2_apps.run(include_slow=not args.fast)
+    results["table1"] = _table1_json(table1_primitives.run())
+    results["fig5"] = _fig5_json(fig5_overhead.run(dense=not args.fast))
+    results["table2"] = table2_apps.run(include_slow=not args.fast)
+
+    print("\n" + "#" * 72)
+    print("# Tier 1 -- scaling sweeps (event-driven engine: 16/32/64 cores)")
+    print("#" * 72)
+    # --fast (the CI smoke) stops at 32 cores: the 64-core software-discipline
+    # rows are spin-bound (per-cycle path) and dominate the sweep's wall time
+    scale_counts = (16, 32) if args.fast else (16, 32, 64)
+    results["table1_scaling"] = _table1_scaling_json(
+        table1_primitives.run_scaling(core_counts=scale_counts)
+    )
+    fig5_scaling = fig5_overhead.run_scaling(core_counts=scale_counts)
+    results["fig5_scaling"] = {
+        n: _fig5_json(r) for n, r in fig5_scaling.items()
+    }
+
+    print("\n" + "#" * 72)
+    print("# Engine throughput -- lockstep vs event-driven fast-forward")
+    print("#" * 72)
+    # reduced sweep under --fast: the lockstep side is the slow half, and the
+    # dedicated CI perf-smoke job already runs the full benchmark
+    perf = (
+        engine_perf.run(sfrs=(1000, 2500), iters=4)
+        if args.fast
+        else engine_perf.run()
+    )
+    results["engine_perf"] = {
+        "cycles_per_sec": perf["cycles_per_sec"],
+        "speedup": perf["speedup"],
+        "n_cores": perf["n_cores"],
+        "sfrs": perf["sfrs"],
+    }
 
     print("\n" + "#" * 72)
     print("# Tier 2 -- chip-level barrier disciplines (8 host devices)")
@@ -45,14 +148,25 @@ def main() -> None:
         timeout=1200,
     )
     print(r.stdout)
+    results["jax_barriers_ok"] = r.returncode == 0
     if r.returncode != 0:
         print("[jax_barriers] failed:", r.stderr[-2000:])
+        rc = 1
 
     print("\n" + "#" * 72)
     print("# Tier 2 -- roofline from the multi-pod dry-run artifacts")
     print("#" * 72)
     roofline.run()
 
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_jsonable(results), f, indent=2)
+        print(f"\nwrote {args.json}")
+
+    if rc:
+        print("\nbenchmarks FAILED (jax_barriers subprocess)", file=sys.stderr)
+    return rc
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -7,6 +7,11 @@ calibrated model.  Prints measured vs paper values and relative error.
 The variant list comes from the ``repro.sync`` policy registry, so every
 registered discipline is measured -- the paper's triad against its Table 1
 numbers, extensions (e.g. ``tree``) as new rows without paper references.
+
+:func:`run_scaling` extends the table beyond the paper's 8-core cluster to
+MemPool-scale 16/32/64-core clusters (Riedel et al., 2023) -- affordable
+because the event-driven engine skips quiescent cycles (see
+``benchmarks/engine_perf.py``).
 """
 
 from __future__ import annotations
@@ -82,5 +87,48 @@ def run(iters: int = 64, verbose: bool = True):
     return rows
 
 
+def run_scaling(
+    core_counts=(16, 32, 64), iters: int = 8, verbose: bool = True
+):
+    """Table-1 rows beyond the paper: 16/32/64-core clusters, every policy.
+
+    The paper's SCU supports up to 16 cores; these rows extrapolate its
+    design point to MemPool-scale clusters, where the hardware barrier's
+    O(1) cost versus the central-counter barriers' superlinear growth (and
+    the tournament tree's log depth) is the whole argument.
+    """
+    rows = []
+    for prim in PRIMITIVES:
+        t_crit = 10 if prim.endswith("t10") else 0
+        for policy in available_policies():
+            meas_c, meas_e = [], []
+            for n in core_counts:
+                if prim == "barrier":
+                    r = run_barrier_bench(policy, n, sfr=0, iters=iters)
+                else:
+                    r = run_mutex_bench(policy, n, t_crit=t_crit, iters=iters)
+                meas_c.append(r.prim_cycles)
+                meas_e.append(_energy_nj(r, n, t_crit))
+            rows.append((prim, policy, list(core_counts), meas_c, meas_e))
+
+    if verbose:
+        counts = "/".join(str(n) for n in core_counts)
+        print(f"\n== Table 1 (scaling): primitive costs @ {counts} cores ==")
+        print(f"{'prim':10s} {'var':5s} | cycles {counts:24s} | energy nJ")
+        for prim, var, _, mc, me in rows:
+            cyc = "  ".join(f"{m:8.1f}" for m in mc)
+            en = "  ".join(f"{m:6.2f}" for m in me)
+            print(f"{prim:10s} {var:5s} | {cyc} | {en}")
+        nmax = core_counts[-1]
+        scu = next(r for r in rows if r[0] == "barrier" and r[1] == "scu")
+        sw = next(r for r in rows if r[0] == "barrier" and r[1] == "sw")
+        print(
+            f"\nSCU vs SW barrier @{nmax} cores: {sw[3][-1]/scu[3][-1]:.0f}x "
+            f"cycles, {sw[4][-1]/scu[4][-1]:.0f}x energy (paper @8: 29x/41x)"
+        )
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_scaling()

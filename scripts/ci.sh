@@ -16,8 +16,10 @@ echo "== tier-1 verify: pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--tests" ]]; then
-    echo "== benchmark smoke: benchmarks/run.py --fast =="
-    python -m benchmarks.run --fast
+    echo "== benchmark smoke: benchmarks/run.py --fast --json BENCH_tier1.json =="
+    # --json seeds the perf trajectory (Table-1/Fig-5 key numbers + engine
+    # throughput per mode); a jax_barriers subprocess failure exits nonzero.
+    python -m benchmarks.run --fast --json BENCH_tier1.json
 fi
 
 echo "== ci.sh: all green =="

@@ -100,15 +100,17 @@ def run_app(
     n_cores: int = 8,
     seed: int = 0,
     energy_model: EnergyModel = DEFAULT_ENERGY,
+    mode: str = "fastforward",
 ) -> AppResult:
     """Run one application skeleton under one synchronization variant
-    (any registered ``repro.sync`` policy)."""
+    (any registered ``repro.sync`` policy).  ``mode`` selects the engine
+    (event-driven fast path by default; ``"lockstep"`` for the reference)."""
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
 
     policy = get_policy(variant)
     sections = _section_lengths(app, n_cores, seed)
     scu = SCU(n_cores=n_cores)
-    cl = Cluster(n_cores=n_cores, scu=scu)
+    cl = Cluster(n_cores=n_cores, scu=scu, mode=mode)
     sync_state = policy.make_sim_state(n_cores)
 
     # Track per-core sync cycles by sampling core state inside primitives.

@@ -18,12 +18,35 @@ The cluster consists of
     :mod:`repro.core.scu.extensions`.
 
 Programs are Python generators that yield micro-ops (:class:`Compute`,
-:class:`Mem`, :class:`Scu`); the engine advances one clock cycle at a time and
-resolves arbitration, SCU event generation, sleep/wake-up sequencing and
-clock gating exactly as described in Sec. 4/5 and Fig. 4 of the paper.
+:class:`Mem`, :class:`Scu`); the engine resolves arbitration, SCU event
+generation, sleep/wake-up sequencing and clock gating exactly as described in
+Sec. 4/5 and Fig. 4 of the paper.
 
 Accounting distinguishes *active* core cycles (clock enabled) from *gated*
 cycles -- the quantity behind the paper's energy results.
+
+Two execution modes produce bit-exact identical :class:`ClusterStats`:
+
+``mode="lockstep"``
+    The reference model: :meth:`Cluster.step` advances the whole cluster one
+    clock cycle at a time, evaluating every phase every cycle.
+
+``mode="fastforward"`` (default)
+    Event-driven fast path.  Between steps the scheduler computes
+    :meth:`Cluster.next_event_bound` -- a provably-safe number of cycles
+    during which *nothing observable can happen*: every core is either
+    burning a :class:`Compute` span (``busy`` countdown), clock-gated asleep
+    with no buffered wake event, or inside its wake countdown, and no SCU
+    extension comparator can fire without a new core transaction
+    (:meth:`repro.core.scu.scu_unit.SCU.next_event_bound`).  The engine then
+    jumps the clock by that whole span, accounting per-core stats in
+    O(n_cores) per span instead of O(n_cores) per cycle.  Quiescent regions
+    (large SFRs, clock-gated waits under the SCU) dominate realistic
+    workloads, so this is orders of magnitude faster; any cycle in which an
+    arbiter, SCU grant, or comparator could act is executed through the same
+    :meth:`Cluster.step` as lockstep mode, so the two modes agree cycle-for-
+    cycle (enforced by ``tests/test_scu_simulator.py`` golden + cross-check
+    tests).
 """
 
 from __future__ import annotations
@@ -151,7 +174,16 @@ class ClusterStats:
 
 
 class _Core:
-    """Execution context of one PE."""
+    """Execution context of one PE, including its scheduler state.
+
+    The countdown fields (``busy``, ``wake_countdown``, ``sleep_entry``) are
+    the *explicit scheduler state* of the core: between steps they fully
+    determine how many cycles the core can advance without interacting with
+    any shared resource.  :meth:`quiescent_bound` derives that number and
+    :meth:`fast_forward` applies a whole span of it at once (span-based
+    accounting); the lockstep path consumes the same state one cycle at a
+    time through :meth:`Cluster._issue`.
+    """
 
     __slots__ = (
         "cid",
@@ -178,6 +210,57 @@ class _Core:
         self.stats = CoreStats()
         self.elw_issued = False  # extension trigger-once guard (Sec. 5)
 
+    # ------------------------------------------------------------ scheduler
+    def quiescent_bound(self, scu) -> Optional[int]:
+        """Cycles this core is guaranteed to spend without any observable
+        interaction, or ``None`` for "indefinitely many" (needs an external
+        stimulus to make progress).  0 means the core must be stepped.
+
+        Safe bounds per state (mirrors one lockstep :meth:`Cluster._issue`):
+
+        * ``ACTIVE`` with ``busy=k>0`` -- k pure countdown cycles; the
+          generator advance happens on the following step.
+        * ``WAKING`` with ``wake_countdown=w>1`` -- w-1 countdown cycles; the
+          step where the countdown reaches 0 resumes the generator.
+        * ``SLEEP`` -- indefinite, unless the waited-on event is already
+          buffered (then the phase-4 poll would grant *this* cycle).
+        * everything else (``STALL_MEM`` arbitration, ``STALL_SCU`` grant /
+          sleep-entry windows, ``busy==0`` advances) -- 0: these transients
+          touch shared resources and must run through the full step.
+        """
+        state = self.state
+        if state is CoreState.DONE:
+            return None
+        if state is CoreState.ACTIVE:
+            return self.busy if self.busy > 0 else 0
+        if state is CoreState.WAKING:
+            return self.wake_countdown - 1 if self.wake_countdown > 1 else 0
+        if state is CoreState.SLEEP:
+            if self.pending is None or scu is None:  # pragma: no cover
+                return 0
+            return 0 if scu.elw_would_grant(self.cid, self.pending.addr) else None
+        return 0
+
+    def fast_forward(self, span: int) -> None:
+        """Advance this core ``span`` quiescent cycles in one O(1) update.
+
+        Only the three states with a positive/indefinite quiescent bound can
+        appear here; the stats written are exactly what ``span`` iterations
+        of the lockstep phase-5 accounting would have written.
+        """
+        state = self.state
+        if state is CoreState.ACTIVE:
+            self.busy -= span
+            self.stats.active_cycles += span
+            self.stats.comp_cycles += span
+        elif state is CoreState.WAKING:
+            self.wake_countdown -= span
+            self.stats.active_cycles += span
+            self.stats.wait_cycles += span
+        elif state is CoreState.SLEEP:
+            self.stats.gated_cycles += span
+        # DONE: no clock, no accounting
+
 
 class Cluster:
     """The cycle-accurate cluster model.
@@ -192,7 +275,14 @@ class Cluster:
         An :class:`repro.core.scu.scu_unit.SCU` instance (constructed by the
         caller so extensions are configurable).  May be ``None`` for purely
         software experiments.
+    mode:
+        ``"fastforward"`` (default) -- event-driven engine that skips
+        quiescent cycles in O(n_cores) spans; ``"lockstep"`` -- the
+        cycle-by-cycle reference model.  Both produce bit-exact identical
+        :class:`ClusterStats` (see module docstring).
     """
+
+    MODES = ("fastforward", "lockstep")
 
     TAS_CYCLES = 3  # Sec. 4.1: "TAS transactions take just three cycles"
     # Fig. 4 timing: elw issue -> busy release -> clock gate takes 2 cycles on
@@ -203,34 +293,60 @@ class Cluster:
     SLEEP_ENTRY_CYCLES = 1
     WAKE_CYCLES = 4
 
-    def __init__(self, n_cores: int, scu=None, banking_factor: int = 2):
+    def __init__(
+        self,
+        n_cores: int,
+        scu=None,
+        banking_factor: int = 2,
+        mode: str = "fastforward",
+    ):
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
         self.n_cores = n_cores
         self.n_banks = banking_factor * n_cores
         self.scu = scu
+        self.mode = mode
         if scu is not None:
             scu.attach(self)
         self.tcdm: Dict[int, int] = {}
         self._bank_locked_until = [0] * self.n_banks  # TAS write-back lockout
         self._rr = [0] * self.n_banks  # per-bank round-robin pointers
         self.cores: List[_Core] = []
+        self._n_done = 0
         self.cycle = 0
         self.stats = ClusterStats()
         self._trace: List[Tuple[int, int, str]] = []
         self.trace_enabled = False
+        # fast-forward diagnostics (engine-internal; never part of
+        # ClusterStats so the two modes stay bit-exact comparable)
+        self.ff_spans = 0  # number of multi-cycle jumps taken
+        self.ff_cycles = 0  # cycles covered by those jumps
 
     # ------------------------------------------------------------------ api
     def load(self, programs: List[Program]) -> None:
         assert len(programs) == self.n_cores
         self.cores = [_Core(i, prog(self, i)) for i, prog in enumerate(programs)]
         self.stats = ClusterStats(cores=[c.stats for c in self.cores])
+        self._n_done = 0
 
     def run(self, max_cycles: int = 10_000_000) -> ClusterStats:
-        while not all(c.state is CoreState.DONE for c in self.cores):
+        fast = self.mode == "fastforward"
+        while self._n_done < self.n_cores:
             if self.cycle >= max_cycles:
                 raise RuntimeError(
                     f"cluster did not finish within {max_cycles} cycles "
                     f"(states: {[c.state.name for c in self.cores]})"
                 )
+            if fast:
+                bound = self.next_event_bound()
+                if bound is None:
+                    # deadlock: every core is gated with no wake event in
+                    # sight -- burn to the cap so the failure mode (and the
+                    # cycle count it reports) matches lockstep exactly
+                    bound = max_cycles - self.cycle
+                if bound > 0:
+                    self.fast_forward(min(bound, max_cycles - self.cycle))
+                    continue
             self.step()
         self.stats.cycles = self.cycle
         return self.stats
@@ -276,6 +392,49 @@ class Cluster:
                         core.stats.stall_cycles += 1
         self.cycle += 1
 
+    # ----------------------------------------------------- fast-forward path
+    def next_event_bound(self) -> Optional[int]:
+        """Number of cycles that can be skipped before anything observable
+        can happen; 0 forces a full :meth:`step`, ``None`` means no internal
+        event is ever due (every core gated/done and no comparator armed).
+
+        The bound is the min over the per-core countdown bounds
+        (:meth:`_Core.quiescent_bound`) and the SCU extension bound
+        (:meth:`repro.core.scu.scu_unit.SCU.next_event_bound`): extensions
+        are pure comparators over state written by core transactions, so if
+        none can fire now and no core acts, none can fire during the span.
+        """
+        # cores first: during contention phases the first stalled core
+        # short-circuits the scan before any extension comparator is touched
+        bound: Optional[int] = None
+        scu = self.scu
+        for core in self.cores:
+            b = core.quiescent_bound(scu)
+            if b is None:
+                continue
+            if b <= 0:
+                return 0
+            if bound is None or b < bound:
+                bound = b
+        if scu is not None:
+            b = scu.next_event_bound()
+            if b is not None:
+                if b <= 0:
+                    return 0
+                if bound is None or b < bound:
+                    bound = b
+        return bound
+
+    def fast_forward(self, span: int) -> None:
+        """Jump ``span`` quiescent cycles: counters and stats advance in one
+        O(n_cores) span-based update, no arbitration / SCU phases run (the
+        scheduler proved none could act -- see :meth:`next_event_bound`)."""
+        for core in self.cores:
+            core.fast_forward(span)
+        self.cycle += span
+        self.ff_spans += 1
+        self.ff_cycles += span
+
     # ------------------------------------------------------------ internals
     def _advance(self, core: _Core, value: int = 0) -> None:
         """Feed ``value`` into the program generator and fetch the next op."""
@@ -285,6 +444,7 @@ class Cluster:
             core.state = CoreState.DONE
             core.stats.finished_at = self.cycle
             core.pending = None
+            self._n_done += 1
             return
         core.stats.instructions += 1
         if isinstance(op, Compute):

@@ -4,6 +4,18 @@ Extensions are shared blocks that generate *per-core* events; the per-core
 events of all instances of one extension type are OR-combined onto a single
 event line per type (Sec. 4.3, last paragraph) -- lines ``EV.BARRIER`` /
 ``EV.MUTEX`` / ``EV.FIFO`` / ``EV.NOTIFIER0..7``.
+
+Fast-forward contract: every extension with an ``evaluate`` comparator also
+implements ``next_event_bound() -> Optional[int]`` -- the number of cycles
+until ``evaluate`` could generate an event *assuming no new core transaction
+arrives*.  ``0`` means "could fire this cycle" (the engine must run a full
+lockstep step), a positive ``k`` means "fires in exactly k cycles regardless
+of core activity" (for timed comparators), and ``None`` means "cannot fire
+until some core transaction re-arms it".  The bound must exactly mirror the
+``evaluate`` firing condition, otherwise the event-driven engine would skip
+over a comparator edge; ``tests/test_scu_simulator.py`` cross-checks the two
+engine modes cycle-for-cycle.  New extensions must implement this hook to be
+safe under ``Cluster(mode="fastforward")``.
 """
 
 from __future__ import annotations
@@ -60,6 +72,13 @@ class Barrier:
     def arrive(self, cid: int, base_units) -> None:
         self.status |= 1 << cid
 
+    def next_event_bound(self) -> Optional[int]:
+        """0 while the arrival pattern is complete (fires now), else None:
+        only a new arrival (a core transaction) can complete it."""
+        if self.worker_mask and (self.status & self.worker_mask) == self.worker_mask:
+            return 0
+        return None
+
     def evaluate(self, base_units) -> int:
         if self.worker_mask and (self.status & self.worker_mask) == self.worker_mask:
             n = 0
@@ -97,6 +116,11 @@ class Mutex:
             self.owner = None
             self.message = message
 
+    def next_event_bound(self) -> Optional[int]:
+        """0 while an election is possible (free + contenders), else None:
+        progress needs an unlock or a new try_lock transaction."""
+        return 0 if self.owner is None and self.pending else None
+
     def evaluate(self, base_units) -> int:
         if self.owner is None and self.pending:
             elected = self.pending.popleft()
@@ -123,6 +147,11 @@ class EventFifo:
 
     def pop(self) -> Optional[int]:
         return self.fifo.popleft() if self.fifo else None
+
+    def next_event_bound(self) -> Optional[int]:
+        """0 while queued external events exist (the non-empty level is
+        re-asserted every cycle), else None until the next push."""
+        return 0 if self.fifo else None
 
     def evaluate(self, base_units) -> int:
         if self.fifo:

@@ -36,8 +36,8 @@ class MicrobenchResult:
     stats: ClusterStats
 
 
-def _make_cluster(n_cores: int) -> Cluster:
-    return Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores))
+def _make_cluster(n_cores: int, mode: str = "fastforward") -> Cluster:
+    return Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores), mode=mode)
 
 
 def _collect(
@@ -70,17 +70,20 @@ def _collect(
 
 
 def run_barrier_bench(
-    variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None
+    variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None,
+    mode: str = "fastforward",
 ) -> MicrobenchResult:
     """Loop of ``iters`` (SFR-compute + barrier) on every core.
 
     ``variant`` is any registered ``repro.sync`` policy name (legacy
-    uppercase spellings like ``"SCU"`` resolve via aliases).
+    uppercase spellings like ``"SCU"`` resolve via aliases).  ``mode``
+    selects the engine (``"fastforward"`` skips quiescent cycles;
+    ``"lockstep"`` is the cycle-by-cycle reference -- identical stats).
     """
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
 
     policy = get_policy(variant)
-    cl = _make_cluster(n_cores)
+    cl = _make_cluster(n_cores, mode)
     state = policy.make_sim_state(n_cores)
     cm = cost_model or DEFAULT_COSTS
 
@@ -96,7 +99,7 @@ def run_barrier_bench(
 
 def run_mutex_bench(
     variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
-    cost_model=None,
+    cost_model=None, mode: str = "fastforward",
 ) -> MicrobenchResult:
     """Loop of (SFR-compute + critical section) on every core.
 
@@ -107,7 +110,7 @@ def run_mutex_bench(
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
 
     policy = get_policy(variant)
-    cl = _make_cluster(n_cores)
+    cl = _make_cluster(n_cores, mode)
     state = policy.make_sim_state(n_cores)
     cm = cost_model or DEFAULT_COSTS
 
@@ -122,10 +125,12 @@ def run_mutex_bench(
     return _collect(variant, f"mutex_t{t_crit}", cl, n_cores, sfr, iters, ideal)
 
 
-def run_nop_bench(n_cores: int, cycles: int = 512) -> ClusterStats:
+def run_nop_bench(
+    n_cores: int, cycles: int = 512, mode: str = "fastforward"
+) -> ClusterStats:
     """``cycles`` of straight-line compute on every core (the paper's 512-nop
     run used to normalize power, Sec. 6.3)."""
-    cl = _make_cluster(n_cores)
+    cl = _make_cluster(n_cores, mode)
 
     def program(cluster, cid):
         yield Compute(cycles)

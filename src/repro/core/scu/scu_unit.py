@@ -176,6 +176,15 @@ class SCU:
             return self.base[cid].event_mask or 0xFFFFFFFF
         raise ValueError(addr)
 
+    def elw_would_grant(self, cid: int, addr: Any) -> bool:
+        """Side-effect-free preview of :meth:`elw_poll`'s grant decision.
+
+        Used by the fast-forward scheduler: a sleeping core whose waited-on
+        event is not buffered cannot wake during a quiescent span (events are
+        only generated by core transactions or armed comparators, both of
+        which force a full step)."""
+        return bool(self.base[cid].event_buffer & self._wait_mask(cid, addr))
+
     def elw_poll(self, cid: int, addr: Any) -> Tuple[bool, int]:
         """Grant decision for a pending elw; returns (granted, response)."""
         unit = self.base[cid]
@@ -204,6 +213,23 @@ class SCU:
             n += m.evaluate(self.base)
         n += self.fifo.evaluate(self.base)
         return n
+
+    def next_event_bound(self) -> Optional[int]:
+        """Min over the extensions' ``next_event_bound`` hooks (see
+        :mod:`repro.core.scu.extensions` for the contract): cycles until any
+        comparator could generate an event absent new core transactions.
+        0 forces the engine to take a full lockstep step; ``None`` means
+        every comparator is disarmed until a core acts."""
+        bound: Optional[int] = None
+        for ext in (*self.barriers, *self.mutexes, self.fifo):
+            b = ext.next_event_bound()
+            if b is None:
+                continue
+            if b <= 0:
+                return 0
+            if bound is None or b < bound:
+                bound = b
+        return bound
 
     # ------------------------------------------------------------- external
     def push_external_event(self, event_id: int) -> None:

@@ -26,6 +26,7 @@ from repro.sync.api import (
 # (the paper's triad first, then the tree extension).
 from repro.sync import policies as _policies  # noqa: F401
 from repro.sync import tree as _tree  # noqa: F401
+from repro.sync.tree import make_tree_policy
 
 __all__ = [
     "LAYER_HOOKS",
@@ -34,6 +35,7 @@ __all__ = [
     "available_policies",
     "canonical_name",
     "get_policy",
+    "make_tree_policy",
     "register_policy",
     "unregister_policy",
 ]

@@ -12,9 +12,13 @@ flag word is only ever written by one core and read by one core, so the
 hot-spot bank traffic of the central-counter barrier disappears.
 
   * simulator -- software tournament barrier with sense reversal: core
-    ``cid`` publishes its arrival at round ``r = lowest set bit of cid``
-    into its private flag word; winners wait for their partner's subtree,
-    the champion (core 0) broadcasts the release word.
+    ``cid`` publishes its arrival at the first level where its base-``radix``
+    digit is non-zero into its private flag word; block representatives wait
+    for their ``radix - 1`` partners' subtrees, the champion (core 0)
+    broadcasts the release word.  ``radix`` is a policy parameter
+    (:func:`make_tree_policy`): depth is ``ceil(log_radix n)``, so radix 4
+    halves the tree depth of the default radix-2 tournament on 16-core
+    clusters at the cost of wider fan-in spins per level.
   * chip level -- butterfly (recursive-doubling) exchange: log2(n) pairwise
     rounds; the released count is the sum of the exchanged values (blocks
     are disjoint, so the sum is exact).  Non-power-of-two groups fall back
@@ -25,6 +29,8 @@ hot-spot bank traffic of the central-counter barrier disappears.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +46,13 @@ from repro.sync.policies import (
     zero_shape_gradients,
 )
 
-__all__ = ["TREE", "TreeBarrierState", "tree_barrier", "tree_chip_barrier"]
+__all__ = [
+    "TREE",
+    "TreeBarrierState",
+    "make_tree_policy",
+    "tree_barrier",
+    "tree_chip_barrier",
+]
 
 # TCDM layout: one arrival flag word per core + one release word, all in
 # distinct words (distinct banks under word interleaving), above the
@@ -56,42 +68,50 @@ def _flag_addr(cid: int) -> int:
 class TreeBarrierState:
     """Per-run tournament-barrier bookkeeping (local sense per core)."""
 
-    def __init__(self, n_cores: int):
+    def __init__(self, n_cores: int, radix: int = 2):
+        if radix < 2:
+            raise ValueError(f"tree barrier radix must be >= 2, got {radix}")
         self.n_cores = n_cores
+        self.radix = radix
         self.local_sense = [0] * n_cores
 
 
 def tree_barrier(cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS):
-    """Software tournament barrier: log-depth combining, sense reversal.
+    """Software radix-k tournament barrier: log_k-depth combining, sense
+    reversal.
 
-    Each core loses at exactly one level (the lowest set bit of its id), so
-    a single flag word per core suffices; flags carry the sense value, which
-    makes the barrier reusable back-to-back without resets.
+    Each core loses at exactly one level (the first where its base-``radix``
+    digit is non-zero), so a single flag word per core suffices; flags carry
+    the sense value, which makes the barrier reusable back-to-back without
+    resets.  ``radix=2`` reproduces the classic binary tournament op-for-op.
     """
     n = st.n_cores
+    radix = st.radix
     sense = st.local_sense[cid] ^ 1
     st.local_sense[cid] = sense
     yield Compute(cm.call + cm.sense_setup)
-    level = 0
+    stride = 1
     is_champion = True
-    while (1 << level) < n:
-        if cid & (1 << level):
+    while stride < n:
+        if (cid // stride) % radix:
             # loser at this level: publish the subtree's arrival, then wait
             # for the champion's release broadcast
             yield Compute(1)  # flag address computation
             yield Mem("sw", _flag_addr(cid), sense)
             is_champion = False
             break
-        partner = cid | (1 << level)
-        if partner < n:
-            # winner: wait for the subtree rooted at the partner
+        # block representative: wait for every partner subtree in the block
+        for m in range(1, radix):
+            partner = cid + m * stride
+            if partner >= n:
+                break
             while True:
                 v = yield Mem("lw", _flag_addr(partner))
                 yield Compute(1 + cm.load_use)
                 if v == sense:
                     break
                 yield Compute(cm.branch_taken)
-        level += 1
+        stride *= radix
     if is_champion:
         # core 0 saw every subtree arrive: flip the shared release word
         yield Mem("sw", A_TREE_RELEASE, sense)
@@ -115,6 +135,40 @@ def _tree_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
     yield from sw_mutex_section(cluster, cid, t_crit, cost_model or DEFAULT_COSTS)
 
 
+def make_tree_policy(radix: int = 2, name: Optional[str] = None) -> PolicyDef:
+    """Build a tournament-barrier policy with the given ``radix``.
+
+    ``radix=2`` is the registered builtin ``tree``; higher radices trade
+    per-level fan-in for depth (``ceil(log_radix n)`` levels -- radix 4
+    halves the depth on 16-core clusters).  The returned policy is not
+    registered; call :func:`repro.sync.register_policy` to add e.g. a
+    ``tree4`` row to every benchmark.
+    """
+    name = name or ("tree" if radix == 2 else f"tree{radix}")
+
+    def _state(n_cores: int) -> TreeBarrierState:
+        return TreeBarrierState(n_cores, radix=radix)
+
+    return PolicyDef(
+        name=name,
+        description=(
+            f"log-depth hierarchical barrier (MemPool-style), radix {radix}: "
+            "simulator tournament tree, chip-level butterfly exchange, "
+            "training: hierarchical bucketed reduce-scatter (numerically "
+            "identical to scu)"
+        ),
+        aliases=(name.upper(),),
+        make_sim_state=_state,
+        sim_barrier=_tree_sim_barrier,
+        sim_mutex=_tree_sim_mutex,
+        # the chip-level exchange stays the radix-2 butterfly: XLA owns the
+        # physical schedule there, the radix only shapes the simulator tree
+        chip_barrier=tree_chip_barrier,
+        shape_gradients=zero_shape_gradients,
+        opt_state_specs=zero_opt_state_specs,
+    )
+
+
 def tree_chip_barrier(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Butterfly exchange: log2(n) pairwise rounds, partner = idx XOR 2**k.
 
@@ -136,18 +190,4 @@ def tree_chip_barrier(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
     return total
 
 
-TREE = register_policy(PolicyDef(
-    name="tree",
-    description=(
-        "log-depth hierarchical barrier (MemPool-style): simulator tournament "
-        "tree, chip-level butterfly exchange, training: hierarchical bucketed "
-        "reduce-scatter (numerically identical to scu)"
-    ),
-    aliases=("TREE",),
-    make_sim_state=TreeBarrierState,
-    sim_barrier=_tree_sim_barrier,
-    sim_mutex=_tree_sim_mutex,
-    chip_barrier=tree_chip_barrier,
-    shape_gradients=zero_shape_gradients,
-    opt_state_specs=zero_opt_state_specs,
-))
+TREE = register_policy(make_tree_policy(radix=2, name="tree"))

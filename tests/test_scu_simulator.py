@@ -1,5 +1,6 @@
 """Unit + property tests for the Tier-1 cycle-accurate SCU simulator."""
 
+import random
 import sys
 
 import pytest
@@ -16,7 +17,9 @@ from repro.core.scu import (
     run_barrier_bench,
     run_mutex_bench,
 )
+from repro.core.scu.engine import CoreState
 from repro.core.scu.primitives import (
+    DEFAULT_COSTS,
     scu_barrier,
     scu_mutex_section,
     sw_barrier,
@@ -25,9 +28,12 @@ from repro.core.scu.primitives import (
     tas_mutex_section,
 )
 
+POLICIES = ("scu", "tas", "sw", "tree")
+MODES = ("lockstep", "fastforward")
 
-def make_cluster(n):
-    return Cluster(n_cores=n, scu=SCU(n_cores=n))
+
+def make_cluster(n, mode="fastforward"):
+    return Cluster(n_cores=n, scu=SCU(n_cores=n), mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -334,3 +340,162 @@ def test_scu_barrier_six_active_cycles_per_core():
     r = run_barrier_bench("SCU", 8, sfr=0, iters=32)
     per_core = r.active_core_cycles_per_iter / 8
     assert abs(per_core - 6.0) <= 0.5  # Fig. 4: six active core cycles
+
+
+# ---------------------------------------------------------------------------
+# Engine modes: golden cycle counts + lockstep-vs-fastforward bit-exactness
+# ---------------------------------------------------------------------------
+
+# cycles_per_iter measured on the seed (pre-fast-forward) lockstep engine at
+# iters=16 -- the engine rewrite must not move ANY of these by even a cycle.
+GOLDEN_BARRIER = {  # policy: (2, 4, 8 cores), sfr=0
+    "scu": (6.0625, 6.0625, 6.0625),
+    "tas": (51.5000, 89.6250, 169.9375),
+    "sw": (49.1875, 88.1250, 172.5000),
+    "tree": (20.4375, 29.3750, 44.1250),
+}
+GOLDEN_MUTEX_T10 = {  # policy: (2, 4, 8 cores), t_crit=10
+    "scu": (30.1875, 60.1875, 120.1875),
+    "tas": (32.4375, 65.1875, 131.1875),
+    "sw": (30.1250, 63.8125, 129.1875),
+    "tree": (30.1250, 63.8125, 129.1875),
+}
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_golden_cycles_locked(policy, mode):
+    """Both engine modes reproduce the seed engine's exact cycle counts."""
+    for i, n in enumerate((2, 4, 8)):
+        rb = run_barrier_bench(policy, n, sfr=0, iters=16, mode=mode)
+        assert rb.cycles_per_iter == pytest.approx(
+            GOLDEN_BARRIER[policy][i], abs=1e-9
+        ), f"{policy} barrier @{n} cores ({mode})"
+        rm = run_mutex_bench(policy, n, t_crit=10, iters=16, mode=mode)
+        assert rm.cycles_per_iter == pytest.approx(
+            GOLDEN_MUTEX_T10[policy][i], abs=1e-9
+        ), f"{policy} mutex @{n} cores ({mode})"
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engine_modes_bit_exact_on_microbenches(policy):
+    """Full ClusterStats equality (cycles, per-core active/comp/wait/gated/
+    stall, tcdm/tas/scu counts) between the two modes on the Table-1
+    program shapes, including nonzero SFR and critical sections."""
+    for n in (2, 4, 8):
+        a = run_barrier_bench(policy, n, sfr=37, iters=8, mode="lockstep")
+        b = run_barrier_bench(policy, n, sfr=37, iters=8, mode="fastforward")
+        assert a.stats == b.stats, f"{policy} barrier @{n}: stats diverged"
+        a = run_mutex_bench(
+            policy, n, t_crit=10, sfr=11, iters=8, mode="lockstep"
+        )
+        b = run_mutex_bench(
+            policy, n, t_crit=10, sfr=11, iters=8, mode="fastforward"
+        )
+        assert a.stats == b.stats, f"{policy} mutex @{n}: stats diverged"
+
+
+@pytest.mark.parametrize("app_name", ["fft", "dwt", "livermore2"])
+def test_engine_modes_bit_exact_on_apps(app_name):
+    """Table-2 app skeletons: every AppResult field derived from the stats
+    (cycles, energy, power, sync shares) agrees between the modes."""
+    from repro.core.scu.apps import APPS, run_app
+
+    for policy in ("scu", "sw"):
+        a = run_app(APPS[app_name], policy, mode="lockstep")
+        b = run_app(APPS[app_name], policy, mode="fastforward")
+        assert a == b, f"{app_name}/{policy}: app results diverged"
+
+
+def _run_random_mix(seed: int, policy_name: str, n: int, mode: str):
+    """Random program mix: per-core compute skew, shared-policy barriers,
+    critical sections, and raw TCDM traffic -- all parameters drawn up
+    front so both engine modes replay the identical program."""
+    from repro.sync import get_policy
+
+    rng = random.Random(seed)
+    rounds = 3
+    delays = [[rng.randint(1, 80) for _ in range(rounds)] for _ in range(n)]
+    tcrits = [rng.randint(0, 12) for _ in range(rounds)]
+    mem_ops = [
+        [
+            (rng.choice(("lw", "sw")), 0x400 + 4 * rng.randint(0, 15))
+            for _ in range(rng.randint(0, 4))
+        ]
+        for _ in range(n)
+    ]
+    policy = get_policy(policy_name)
+    cl = make_cluster(n, mode=mode)
+    state = policy.make_sim_state(n)
+
+    def make_prog(cid):
+        def prog(cluster, _cid):
+            for r in range(rounds):
+                yield Compute(delays[cid][r])
+                for kind, addr in mem_ops[cid]:
+                    yield Mem(kind, addr, cid)
+                yield from policy.sim_barrier(cluster, _cid, state, DEFAULT_COSTS)
+                yield from policy.sim_mutex(
+                    cluster, _cid, tcrits[r], state, DEFAULT_COSTS
+                )
+        return prog
+
+    cl.load([make_prog(cid) for cid in range(n)])
+    return cl.run(max_cycles=2_000_000)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=9999),
+    policy=st.sampled_from(list(POLICIES)),
+    n=st.sampled_from([2, 4, 8]),
+)
+def test_fastforward_matches_lockstep_on_random_programs(seed, policy, n):
+    """Cross-check: randomized programs produce bit-identical ClusterStats
+    under the event-driven engine and the lockstep reference."""
+    lock = _run_random_mix(seed, policy, n, "lockstep")
+    fast = _run_random_mix(seed, policy, n, "fastforward")
+    assert lock == fast, (
+        f"engines diverged (policy={policy}, n={n}, seed={seed}): "
+        f"{lock.cycles} vs {fast.cycles} cycles"
+    )
+
+
+def test_fastforward_actually_skips():
+    """Guard against the fast path silently degrading to lockstep: an
+    SFR-dominated program must be covered almost entirely by span jumps."""
+    cl = make_cluster(4, mode="fastforward")
+
+    def prog(cluster, cid):
+        for _ in range(4):
+            yield Compute(500)
+            yield from scu_barrier(cluster, cid)
+
+    cl.load([prog] * 4)
+    st_ = cl.run()
+    assert cl.ff_spans > 0
+    assert cl.ff_cycles > 0.9 * st_.cycles
+
+
+def test_invalid_engine_mode_rejected():
+    with pytest.raises(ValueError, match="mode"):
+        Cluster(n_cores=2, mode="warp")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_deadlock_raises_at_same_cycle(mode):
+    """A core sleeping on an event that never comes must hit max_cycles in
+    both modes -- the fast path may jump there, but not past it."""
+    cl = make_cluster(2, mode=mode)
+
+    def sleeper(cluster, cid):
+        yield Scu("elw", ("notifier", 5, "wait"))
+
+    def finisher(cluster, cid):
+        yield Compute(3)
+
+    cl.load([sleeper, finisher])
+    with pytest.raises(RuntimeError, match="did not finish"):
+        cl.run(max_cycles=4096)
+    assert cl.cycle == 4096
+    assert cl.cores[0].state is CoreState.SLEEP

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_axis_mesh, shard_map
-from repro.core.scu import SCU, Cluster, Compute
+from repro.core.scu import SCU, Cluster, Compute, run_barrier_bench
 from repro.kernels.scu_barrier.ops import ref_barrier_count
 from repro.sync import (
     LAYER_HOOKS,
@@ -20,6 +20,7 @@ from repro.sync import (
     available_policies,
     canonical_name,
     get_policy,
+    make_tree_policy,
     register_policy,
     unregister_policy,
 )
@@ -204,6 +205,62 @@ def test_chip_barrier_matches_psum_oracle(name):
     got, oracle = run(arrive)
     np.testing.assert_allclose(np.asarray(got), np.asarray(oracle))
     np.testing.assert_allclose(np.asarray(got), np.full((n,), float(n)))
+
+
+# ---------------------------------------------------------------------------
+# Tree-policy radix parametrization (radix-k tournament)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("radix", [2, 3, 4])
+@pytest.mark.parametrize("n", [8, 16])
+def test_tree_radix_barrier_releases_full_group(radix, n):
+    """Radix-k tournament parity: no core escapes before the last arrival,
+    for non-power-of-radix group sizes too."""
+    policy = make_tree_policy(radix=radix)
+    cl = Cluster(n_cores=n, scu=SCU(n_cores=n))
+    state = policy.make_sim_state(n)
+    assert state.radix == radix
+    passed = []
+    delays = [1 + 9 * i for i in range(n)]
+
+    def prog(delay):
+        def p(cluster, cid):
+            yield Compute(delay)
+            yield from policy.sim_barrier(cluster, cid, state, None)
+            passed.append((cid, cluster.cycle))
+
+        return p
+
+    cl.load([prog(d) for d in delays])
+    cl.run(max_cycles=1_000_000)
+    assert len(passed) == n, f"radix {radix}: only {len(passed)}/{n} released"
+    last_arrival = max(delays)
+    for cid, cyc in passed:
+        assert cyc >= last_arrival, f"radix {radix}: core {cid} escaped early"
+
+
+def test_tree_radix4_halves_depth_on_16_cores():
+    """Radix 4 -> 2 tournament levels instead of 4 on a 16-core cluster:
+    the barrier must get measurably cheaper, and registering the policy
+    makes it benchmarkable everywhere like any other discipline."""
+    t4 = register_policy(make_tree_policy(radix=4))
+    try:
+        assert t4.name == "tree4"
+        assert get_policy("TREE4") is t4  # alias round-trip
+        r2 = run_barrier_bench("tree", 16, sfr=0, iters=8)
+        r4 = run_barrier_bench("tree4", 16, sfr=0, iters=8)
+        assert r4.cycles_per_iter < r2.cycles_per_iter, (
+            f"radix-4 tournament ({r4.cycles_per_iter}) should beat radix-2 "
+            f"({r2.cycles_per_iter}) at 16 cores"
+        )
+    finally:
+        unregister_policy("tree4")
+    assert "tree4" not in available_policies()
+
+
+def test_tree_default_radix_is_binary():
+    assert get_policy("tree").make_sim_state(8).radix == 2
 
 
 # ---------------------------------------------------------------------------
