@@ -1,0 +1,154 @@
+"""Pipelined producer-consumer chain microbenchmark (stages x SFR x depth).
+
+The vertical-slice benchmark for the ``fifo`` discipline (paper Sec. 4.3:
+the SCU event FIFO exists for fine-grain producer-consumer chains that pure
+barriers serve poorly).  ``iters`` items stream through ``n_cores`` pipeline
+stages; every registered ``repro.sync`` policy runs the same chain -- the
+``fifo`` policy natively (credit-bounded per-link event queues, clock-gated
+pops), every other policy through the barrier-synchronous emulation where
+the whole cluster meets at a global barrier each pipeline tick.
+
+Three read-outs:
+
+  * the per-item cost vs SFR per policy (Table-1-style rows),
+  * the ``fifo`` credit-depth sweep (how much in-flight buffering the chain
+    needs before stages fully overlap -- the tunable-depth knob),
+  * the pipelined variant of a Table-2 app skeleton (mfcc: audio frames
+    through per-core stages), where per-stage imbalance makes the global
+    barrier pay the cluster-wide maximum each tick while the FIFO chain only
+    couples neighbors.
+
+    PYTHONPATH=src python -m benchmarks.chain_pipeline
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.scu.apps import APPS, PIPELINED_APPS, run_app_pipelined
+from repro.core.scu.energy import DEFAULT_ENERGY, Activity
+from repro.core.scu.programs import run_chain_bench
+from repro.sync import available_policies
+
+SFRS = (50, 200, 800)
+DEPTHS = (1, 2, 4, 8, 16)
+
+
+def _energy_nj_per_item(r) -> float:
+    return DEFAULT_ENERGY.energy_nj(Activity.per_iter(r.stats, r.iters))
+
+
+def run(
+    n_cores: int = 8,
+    iters: int = 32,
+    depth: int = 8,
+    sfrs: Optional[Sequence[int]] = None,
+    verbose: bool = True,
+) -> Dict:
+    """Chain sweep over every policy + the fifo depth sweep + pipelined app."""
+    sfrs = list(sfrs) if sfrs is not None else list(SFRS)
+    policies = available_policies()
+    rows: List[Dict] = []
+    for policy in policies:
+        for sfr in sfrs:
+            r = run_chain_bench(policy, n_cores, sfr=sfr, iters=iters, depth=depth)
+            rows.append({
+                "policy": policy,
+                "n_cores": n_cores,
+                "sfr": sfr,
+                "depth": depth,
+                "cycles_per_item": r.cycles_per_iter,
+                "overhead_cycles": r.prim_cycles,
+                "energy_nj_per_item": _energy_nj_per_item(r),
+                "gated_per_item": r.gated_core_cycles_per_iter,
+            })
+
+    depth_rows: List[Dict] = []
+    for d in DEPTHS:
+        r = run_chain_bench("fifo", n_cores, sfr=sfrs[0], iters=iters, depth=d)
+        depth_rows.append({
+            "depth": d,
+            "sfr": sfrs[0],
+            "cycles_per_item": r.cycles_per_iter,
+        })
+
+    app_rows: List[Dict] = []
+    for name in PIPELINED_APPS:
+        per_policy = {
+            p: run_app_pipelined(APPS[name], p, n_cores=n_cores, depth=depth)
+            for p in policies
+        }
+        app_rows.append({
+            "app": name,
+            "cycles": {p: r.cycles for p, r in per_policy.items()},
+            "energy_uj": {p: round(r.energy_uj, 2) for p, r in per_policy.items()},
+        })
+
+    results = {
+        "n_cores": n_cores,
+        "iters": iters,
+        "depth": depth,
+        "rows": rows,
+        "depth_sweep": depth_rows,
+        "apps": app_rows,
+    }
+
+    if verbose:
+        print(f"\n== Pipelined chain: {n_cores} stages, {iters} items ==")
+        print(f"{'policy':7s}" + "".join(f"  sfr={s:<6d}" for s in sfrs)
+              + "(cycles/item; ideal = sfr)")
+        for policy in policies:
+            vals = [r for r in rows if r["policy"] == policy]
+            print(f"{policy:7s}" + "".join(
+                f"  {v['cycles_per_item']:8.1f}" for v in vals))
+        print(f"\nfifo credit-depth sweep (sfr={sfrs[0]}):")
+        print("  " + "  ".join(
+            f"d={d['depth']}: {d['cycles_per_item']:.1f}" for d in depth_rows))
+        for a in app_rows:
+            fifo_c = a["cycles"]["fifo"]
+            best_bar = min(c for p, c in a["cycles"].items() if p != "fifo")
+            print(
+                f"\npipelined {a['app']}: fifo {fifo_c} cycles vs best "
+                f"barrier-sync {best_bar} ({best_bar / fifo_c - 1:+.1%})"
+            )
+    return results
+
+
+def run_scaling(
+    core_counts=(16, 32, 64),
+    iters: int = 8,
+    sfr: int = 200,
+    depth: int = 8,
+    verbose: bool = True,
+) -> List[Dict]:
+    """The chain on MemPool-scale clusters: deeper pipelines, same per-stage
+    SFR.  The FIFO chain's per-item cost stays put as stages are added (only
+    neighbors couple); the barrier-synchronous emulation pays the growing
+    global barrier every tick."""
+    rows: List[Dict] = []
+    t0 = time.perf_counter()
+    for n in core_counts:
+        for policy in available_policies():
+            r = run_chain_bench(policy, n, sfr=sfr, iters=iters, depth=depth)
+            rows.append({
+                "policy": policy,
+                "n_cores": n,
+                "sfr": sfr,
+                "depth": depth,
+                "cycles_per_item": r.cycles_per_iter,
+            })
+    if verbose:
+        counts = "/".join(str(n) for n in core_counts)
+        print(f"\n== Chain (scaling): cycles/item @ {counts} stages, sfr={sfr} ==")
+        print("policy " + "".join(f"{n:>10d}" for n in core_counts))
+        for policy in available_policies():
+            vals = [r["cycles_per_item"] for r in rows if r["policy"] == policy]
+            print(f"{policy:6s}" + "".join(f"{v:10.1f}" for v in vals))
+        print(f"[chain scaling] {time.perf_counter() - t0:.1f}s wall")
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run_scaling()

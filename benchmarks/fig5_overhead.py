@@ -35,11 +35,7 @@ SFRS_DENSE = [
 def _overheads(variant: str, n: int, sfr: int, iters: int) -> Tuple[float, float]:
     r = run_barrier_bench(variant, n, sfr=sfr, iters=iters)
     cyc_overhead = (r.cycles_per_iter - sfr) / sfr
-    st, it = r.stats, r.iters
-    act = Activity(
-        comp=st.total_comp / it, wait=st.total_wait / it, gated=st.total_gated / it,
-        tcdm=st.total_tcdm / it, scu=st.total_scu / it, cycles=st.cycles / it,
-    )
+    act = Activity.per_iter(r.stats, r.iters)
     e_total = DEFAULT_ENERGY.energy_pj(act)
     e_ideal = sfr * DEFAULT_ENERGY.nop_power_per_cycle_pj(n)
     return cyc_overhead, (e_total - e_ideal) / e_ideal

@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
-Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2) plus the
-16/32/64-core scaling sweeps and the engine-throughput benchmark, then the
-Tier-2 roofline read-out from the dry-run artifacts.  The chip-level
+Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), the pipelined
+producer-consumer chain microbenchmark (SCU event FIFO), the 16/32/64-core
+scaling sweeps and the engine-throughput benchmark, then the Tier-2 roofline
+read-out from the dry-run artifacts.  The chip-level
 barrier timing benchmark needs its own process with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and is invoked as a
 subprocess (device count is locked at jax init); its failure propagates to
@@ -86,6 +87,7 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (
+        chain_pipeline,
         engine_perf,
         fig5_overhead,
         roofline,
@@ -104,6 +106,11 @@ def main() -> int:
     results["table2"] = table2_apps.run(include_slow=not args.fast)
 
     print("\n" + "#" * 72)
+    print("# Tier 1 -- pipelined producer-consumer chains (SCU event FIFO)")
+    print("#" * 72)
+    results["chain"] = chain_pipeline.run()
+
+    print("\n" + "#" * 72)
     print("# Tier 1 -- scaling sweeps (event-driven engine: 16/32/64 cores)")
     print("#" * 72)
     # --fast (the CI smoke) stops at 32 cores: the 64-core software-discipline
@@ -116,6 +123,9 @@ def main() -> int:
     results["fig5_scaling"] = {
         n: _fig5_json(r) for n, r in fig5_scaling.items()
     }
+    results["chain_scaling"] = chain_pipeline.run_scaling(
+        core_counts=scale_counts
+    )
 
     print("\n" + "#" * 72)
     print("# Engine throughput -- lockstep vs event-driven fast-forward")

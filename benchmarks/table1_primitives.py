@@ -37,14 +37,8 @@ PRIMITIVES = ("barrier", "mutex_t0", "mutex_t10")
 
 
 def _energy_nj(r, n, t_crit):
-    st, it = r.stats, r.iters
-    act = Activity(
-        comp=st.total_comp / it - n * t_crit,
-        wait=st.total_wait / it,
-        gated=st.total_gated / it,
-        tcdm=st.total_tcdm / it,
-        scu=st.total_scu / it,
-        cycles=st.cycles / it - n * t_crit,
+    act = Activity.per_iter(
+        r.stats, r.iters, comp_offset=n * t_crit, cycles_offset=n * t_crit
     )
     return DEFAULT_ENERGY.energy_nj(act)
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_smoke_config, list_archs
 from repro.launch.mesh import make_host_mesh
-from repro.models.lm import init_lm, lm_forward, lm_loss
+from repro.models.lm import init_lm, lm_forward
 from repro.train.data import SyntheticLM
 from repro.train.loop import TrainerConfig, train
 from repro.train.optimizer import OptConfig

@@ -1,0 +1,265 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a ``benchmarks/run.py --json`` artifact
+against the committed golden baseline.
+
+    python scripts/bench_compare.py BASELINE CURRENT [--threshold 0.02]
+
+The simulator is cycle-exact and fully deterministic (seeded RNG, no
+wall-clock inputs), so the key numbers -- Table-1 primitive cycles, Fig-5
+minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain cost, and
+their 16/32/64-core scaling rows -- must reproduce bit-for-bit on any
+machine.  A current value more than ``threshold`` above the baseline fails
+the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
+timings) are deliberately *not* compared.  Improvements are reported but
+never fail; refresh the baseline in the same PR that moves the numbers:
+
+    PYTHONPATH=src python -m benchmarks.run --fast --json \
+        benchmarks/golden/BENCH_baseline.json
+
+Also exposes :func:`validate_schema` -- the machine-readable contract of the
+``--json`` artifact, shared with ``tests/test_bench_schema.py`` so the
+schema cannot drift silently out from under this gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# Every metric compared here is lower-is-better and cycle-derived (hence
+# deterministic).  ``None`` encodes infinity (json.dump of float("inf") is
+# not strict JSON; benchmarks/run.py maps non-finite values to null).
+Metrics = Dict[str, Optional[float]]
+
+FIG5_KEYS = ("min_sfr_cycles_10pct", "min_sfr_energy_10pct")
+
+
+def _num(v) -> Optional[float]:
+    return None if v is None else float(v)
+
+
+def extract_metrics(results: Dict) -> Metrics:
+    """Flatten the deterministic key numbers of a benchmark artifact."""
+    m: Metrics = {}
+    for row in results.get("table1", []):
+        for n, v in zip((2, 4, 8), row["cycles"]):
+            m[f"table1/{row['primitive']}/{row['policy']}/cycles@{n}"] = _num(v)
+    for row in results.get("table1_scaling", []):
+        for n, v in zip(row["core_counts"], row["cycles"]):
+            key = f"table1_scaling/{row['primitive']}/{row['policy']}/cycles@{n}"
+            m[key] = _num(v)
+    for policy, r in results.get("fig5", {}).items():
+        for k in FIG5_KEYS:
+            m[f"fig5/{policy}/{k}"] = _num(r[k])
+    for n, per_policy in results.get("fig5_scaling", {}).items():
+        for policy, r in per_policy.items():
+            for k in FIG5_KEYS:
+                m[f"fig5_scaling@{n}/{policy}/{k}"] = _num(r[k])
+    for row in results.get("table2", []):
+        for policy, cycles in row["cycles"].items():
+            m[f"table2/{row['app']}/{policy}/cycles"] = _num(cycles)
+    chain = results.get("chain", {})
+    for row in chain.get("rows", []):
+        key = f"chain/{row['policy']}/sfr{row['sfr']}/cycles_per_item"
+        m[key] = _num(row["cycles_per_item"])
+    for row in chain.get("depth_sweep", []):
+        m[f"chain/fifo/depth{row['depth']}/cycles_per_item"] = _num(
+            row["cycles_per_item"]
+        )
+    for row in chain.get("apps", []):
+        for policy, cycles in row["cycles"].items():
+            m[f"chain_app/{row['app']}/{policy}/cycles"] = _num(cycles)
+    for row in results.get("chain_scaling", []):
+        key = f"chain_scaling/{row['policy']}@{row['n_cores']}/cycles_per_item"
+        m[key] = _num(row["cycles_per_item"])
+    return m
+
+
+def compare(
+    baseline: Dict, current: Dict, threshold: float = 0.02
+) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes).  A regression is a compared metric more
+    than ``threshold`` above baseline, newly infinite, or missing."""
+    base_m = extract_metrics(baseline)
+    cur_m = extract_metrics(current)
+    regressions: List[str] = []
+    notes: List[str] = []
+    for key, base in sorted(base_m.items()):
+        if key not in cur_m:
+            regressions.append(f"{key}: metric disappeared from the artifact")
+            continue
+        cur = cur_m[key]
+        if base is None:
+            if cur is not None:
+                notes.append(f"{key}: inf -> {cur:.2f} (improved)")
+            continue
+        if cur is None:
+            regressions.append(f"{key}: {base:.2f} -> inf")
+            continue
+        if cur > base * (1.0 + threshold) + 1e-12:
+            regressions.append(
+                f"{key}: {base:.2f} -> {cur:.2f} (+{cur / base - 1:.1%})"
+            )
+        elif cur < base * (1.0 - threshold):
+            notes.append(f"{key}: {base:.2f} -> {cur:.2f} ({cur / base - 1:.1%})")
+    new = sorted(set(cur_m) - set(base_m))
+    if new:
+        notes.append(f"{len(new)} new metric(s) not in baseline (not gated)")
+    return regressions, notes
+
+
+# --------------------------------------------------------------------------
+# --json artifact schema (shared with tests/test_bench_schema.py)
+# --------------------------------------------------------------------------
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def _is_num_or_null(v) -> bool:
+    return v is None or _is_num(v)
+
+
+def validate_schema(results: Dict) -> List[str]:
+    """Validate the ``benchmarks/run.py --json`` artifact structure.
+
+    Returns a list of human-readable errors (empty = valid).  This is the
+    contract both this gate and the perf-smoke artifact consumers rely on.
+    """
+    errors: List[str] = []
+
+    def need(cond: bool, msg: str) -> bool:
+        if not cond:
+            errors.append(msg)
+        return cond
+
+    for key in ("table1", "table1_scaling", "table2", "chain_scaling"):
+        need(isinstance(results.get(key), list), f"{key}: missing or not a list")
+    for key in ("fig5", "fig5_scaling", "chain", "engine_perf"):
+        need(isinstance(results.get(key), dict), f"{key}: missing or not a dict")
+    need(isinstance(results.get("jax_barriers_ok"), bool),
+         "jax_barriers_ok: missing or not a bool")
+
+    for i, row in enumerate(results.get("table1") or []):
+        ctx = f"table1[{i}]"
+        if not need(isinstance(row, dict), f"{ctx}: not a dict"):
+            continue
+        need(isinstance(row.get("primitive"), str), f"{ctx}.primitive: not a str")
+        need(isinstance(row.get("policy"), str), f"{ctx}.policy: not a str")
+        for field in ("cycles", "energy_nj"):
+            vals = row.get(field)
+            ok = isinstance(vals, list) and len(vals) == 3 and all(
+                _is_num(v) for v in vals
+            )
+            need(ok, f"{ctx}.{field}: expected 3 finite numbers")
+
+    for i, row in enumerate(results.get("table1_scaling") or []):
+        ctx = f"table1_scaling[{i}]"
+        if not need(isinstance(row, dict), f"{ctx}: not a dict"):
+            continue
+        counts = row.get("core_counts")
+        need(isinstance(counts, list) and all(isinstance(n, int) for n in counts),
+             f"{ctx}.core_counts: expected ints")
+        for field in ("cycles", "energy_nj"):
+            vals = row.get(field)
+            ok = (isinstance(vals, list) and isinstance(counts, list)
+                  and len(vals) == len(counts) and all(_is_num(v) for v in vals))
+            need(ok, f"{ctx}.{field}: expected {field} per core count")
+
+    for scope, fig5 in (
+        ("fig5", results.get("fig5") or {}),
+        *(
+            (f"fig5_scaling@{n}", r)
+            for n, r in (results.get("fig5_scaling") or {}).items()
+        ),
+    ):
+        for policy, r in fig5.items():
+            ctx = f"{scope}/{policy}"
+            if not need(isinstance(r, dict), f"{ctx}: not a dict"):
+                continue
+            for k in FIG5_KEYS:
+                need(_is_num_or_null(r.get(k, "missing")),
+                     f"{ctx}.{k}: expected number or null")
+
+    for i, row in enumerate(results.get("table2") or []):
+        ctx = f"table2[{i}]"
+        if not need(isinstance(row, dict), f"{ctx}: not a dict"):
+            continue
+        need(isinstance(row.get("app"), str), f"{ctx}.app: not a str")
+        cyc = row.get("cycles")
+        need(isinstance(cyc, dict) and cyc
+             and all(_is_num(v) for v in cyc.values()),
+             f"{ctx}.cycles: expected policy->cycles dict")
+
+    chain = results.get("chain") or {}
+    for key in ("rows", "depth_sweep", "apps"):
+        need(isinstance(chain.get(key), list), f"chain.{key}: missing or not a list")
+    for i, row in enumerate(chain.get("rows") or []):
+        ctx = f"chain.rows[{i}]"
+        if not need(isinstance(row, dict), f"{ctx}: not a dict"):
+            continue
+        need(isinstance(row.get("policy"), str), f"{ctx}.policy: not a str")
+        for field in ("sfr", "depth", "cycles_per_item", "energy_nj_per_item"):
+            need(_is_num(row.get(field)), f"{ctx}.{field}: expected finite number")
+
+    perf = results.get("engine_perf") or {}
+    cps = perf.get("cycles_per_sec")
+    if need(isinstance(cps, dict), "engine_perf.cycles_per_sec: not a dict"):
+        for mode in ("lockstep", "fastforward"):
+            need(_is_num(cps.get(mode)),
+                 f"engine_perf.cycles_per_sec.{mode}: expected finite number")
+    need(_is_num(perf.get("speedup")), "engine_perf.speedup: expected finite number")
+    return errors
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="golden baseline JSON (committed)")
+    ap.add_argument("current", help="freshly produced benchmark JSON")
+    ap.add_argument(
+        "--threshold", type=float, default=0.02,
+        help="relative regression tolerance on cycle-exact keys (default 2%%)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.current) as f:
+            current = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[bench_compare] cannot load artifacts: {e}", file=sys.stderr)
+        return 2
+
+    schema_errors = validate_schema(current)
+    if schema_errors:
+        print("[bench_compare] current artifact violates the --json schema:")
+        for err in schema_errors:
+            print(f"  SCHEMA {err}")
+        return 2
+
+    regressions, notes = compare(baseline, current, threshold=args.threshold)
+    n_compared = len(extract_metrics(baseline))
+    for note in notes:
+        print(f"  note  {note}")
+    if regressions:
+        print(
+            f"[bench_compare] {len(regressions)} regression(s) over "
+            f"{args.threshold:.0%} on {n_compared} gated metrics:"
+        )
+        for r in regressions:
+            print(f"  FAIL  {r}")
+        return 1
+    print(
+        f"[bench_compare] OK: {n_compared} cycle-exact metrics within "
+        f"{args.threshold:.0%} of baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,14 @@ if [[ "${1:-}" != "--tests" ]]; then
     # --json seeds the perf trajectory (Table-1/Fig-5 key numbers + engine
     # throughput per mode); a jax_barriers subprocess failure exits nonzero.
     python -m benchmarks.run --fast --json BENCH_tier1.json
+
+    echo "== benchmark regression gate: bench_compare vs committed baseline =="
+    # The simulator is deterministic, so the cycle-exact key numbers must
+    # reproduce; >2% above benchmarks/golden/BENCH_baseline.json fails.
+    # Refresh the baseline in the PR that intentionally moves the numbers:
+    #   python -m benchmarks.run --fast --json benchmarks/golden/BENCH_baseline.json
+    python scripts/bench_compare.py \
+        benchmarks/golden/BENCH_baseline.json BENCH_tier1.json
 fi
 
 echo "== ci.sh: all green =="

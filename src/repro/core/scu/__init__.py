@@ -16,12 +16,21 @@ from .primitives import (
 )
 from .programs import (
     MicrobenchResult,
+    barrier_pipeline_programs,
     run_barrier_bench,
+    run_chain_bench,
     run_mutex_bench,
     run_nop_bench,
 )
 from .scu_unit import EV, SCU, BaseUnit
-from .apps import APPS, AppModel, AppResult, run_app
+from .apps import (
+    APPS,
+    PIPELINED_APPS,
+    AppModel,
+    AppResult,
+    run_app,
+    run_app_pipelined,
+)
 
 __all__ = [
     "APPS",
@@ -45,11 +54,15 @@ __all__ = [
     "MicrobenchResult",
     "Mutex",
     "Notifier",
+    "PIPELINED_APPS",
     "SCU",
     "Scu",
+    "barrier_pipeline_programs",
     "calibrate",
     "run_app",
+    "run_app_pipelined",
     "run_barrier_bench",
+    "run_chain_bench",
     "run_mutex_bench",
     "run_nop_bench",
     "scu_barrier",

@@ -28,7 +28,7 @@ from .engine import Cluster, Compute
 from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
-__all__ = ["AppModel", "APPS", "run_app", "AppResult"]
+__all__ = ["AppModel", "APPS", "PIPELINED_APPS", "run_app", "run_app_pipelined", "AppResult"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,13 +128,22 @@ def run_app(
     cl.load([program] * n_cores)
     st = cl.run(max_cycles=200_000_000)
 
-    act = Activity.from_stats(st)
     actives = np.array([c.active_cycles for c in st.cores], dtype=np.float64)
     sync_total = float(np.mean([sum(t for t, _ in m) for m in sync_marks]))
     sync_active = float(np.mean([sum(a for _, a in m) for m in sync_marks]))
+    return _make_app_result(
+        app, variant, st, actives, sync_total, sync_active,
+        float(sections.sum()), energy_model,
+    )
+
+
+def _make_app_result(
+    app: AppModel, variant: str, st, actives, sync_total, sync_active,
+    app_comp_cycles: float, energy_model: EnergyModel,
+) -> AppResult:
     # The compute sections are DSP work (MAC/SIMD + memory traffic), not the
     # nop/spin mix the base coefficients describe -- charge the difference.
-    app_comp_cycles = float(sections.sum())
+    act = Activity.from_stats(st)
     adj_pj = energy_model.app_energy_adjustment_pj(app_comp_cycles)
     energy_pj = energy_model.energy_pj(act) + adj_pj
     breakdown = energy_model.breakdown_pj(act)
@@ -150,4 +159,54 @@ def run_app(
         sync_total=sync_total,
         sync_active=sync_active,
         breakdown=breakdown,
+    )
+
+
+# Apps whose structure is a natural stage pipeline (streaming items through
+# per-core processing stages) -- the shape the SCU's event FIFO targets.
+# mfcc is the canonical one: audio frames stream through framing / FFT /
+# mel-filterbank / DCT stages.
+PIPELINED_APPS = ("mfcc",)
+
+
+def run_app_pipelined(
+    app: AppModel,
+    variant: str,
+    n_cores: int = 8,
+    seed: int = 0,
+    depth: int = 8,
+    energy_model: EnergyModel = DEFAULT_ENERGY,
+    mode: str = "fastforward",
+) -> AppResult:
+    """Pipelined variant of an application skeleton (one stage per core).
+
+    The app's per-barrier-interval work matrix is reinterpreted as ``items x
+    stages``: interval ``b``'s per-core workloads become the per-stage costs
+    of item ``b`` flowing through the pipeline.  Policies with a native
+    ``make_pipeline_programs`` hook (the ``fifo`` discipline) overlap the
+    stages through credit-bounded event queues; every other policy runs the
+    barrier-synchronous emulation, paying one global barrier per pipeline
+    tick.  ``sync_total``/``sync_active`` report the per-core overhead over
+    the pure per-stage work (everything that is not the item's compute).
+    """
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    from .programs import make_pipeline_programs
+
+    policy = get_policy(variant)
+    sections = _section_lengths(app, n_cores, seed)
+    cl = Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores), mode=mode)
+    state = policy.make_sim_state(n_cores)
+    cl.load(make_pipeline_programs(
+        policy, cl, n_cores, sections.tolist(), state, DEFAULT_COSTS, depth
+    ))
+    st = cl.run(max_cycles=200_000_000)
+
+    actives = np.array([c.active_cycles for c in st.cores], dtype=np.float64)
+    stage_work = sections.sum(axis=0).astype(np.float64)  # per-core item work
+    sync_total = float(np.mean(st.cycles - stage_work))
+    sync_active = float(np.mean(actives - stage_work))
+    return _make_app_result(
+        app, variant, st, actives, sync_total, sync_active,
+        float(sections.sum()), energy_model,
     )

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 from .engine import ClusterStats
 
@@ -57,6 +57,32 @@ class Activity:
             tcdm=st.total_tcdm,
             scu=st.total_scu,
             cycles=st.cycles,
+        )
+
+    @staticmethod
+    def per_iter(
+        st: ClusterStats,
+        iters: int,
+        comp_offset: float = 0.0,
+        cycles_offset: float = 0.0,
+    ) -> "Activity":
+        """Per-iteration activity of an ``iters``-iteration benchmark loop.
+
+        ``comp_offset``/``cycles_offset`` subtract the ideal (paper-style)
+        work per iteration so the remainder is the primitive's own activity
+        -- e.g. ``n_cores * t_crit`` for the mutex benchmarks, where the
+        critical sections themselves are not synchronization cost.  Used by
+        the Table-1 / Fig-5 / chain benchmarks; FIFO pushes and pops are SCU
+        transactions and land in ``scu`` like every other private-link
+        access.
+        """
+        return Activity(
+            comp=st.total_comp / iters - comp_offset,
+            wait=st.total_wait / iters,
+            gated=st.total_gated / iters,
+            tcdm=st.total_tcdm / iters,
+            scu=st.total_scu / iters,
+            cycles=st.cycles / iters - cycles_offset,
         )
 
     def vector(self) -> Tuple[float, ...]:

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, Optional
 
 __all__ = ["Notifier", "Barrier", "Mutex", "EventFifo"]
 
@@ -132,11 +132,34 @@ class Mutex:
 
 @dataclasses.dataclass
 class EventFifo:
-    """Up to 256 cluster-external events over an async 8-bit event bus."""
+    """Event queue over the async 8-bit event bus (paper Sec. 4.3).
 
+    The paper's FIFO extension queues up to 256 cluster-external events; we
+    generalize it to the core-facing producer-consumer discipline the FIFO
+    exists to enable (Sec. 4.3 names fine-grain producer-consumer chains as
+    the use case barriers serve poorly):
+
+      * *producers* push an 8-bit event over a plain SCU write
+        (``("fifo", i, "push")``) or :meth:`SCU.push_external_event`,
+      * *consumers* issue an elw pop (``("fifo", i, "pop")``) which registers
+        them as a pending popper; the grant is withheld -- clock-gating the
+        consumer -- until an event is matched to them,
+      * :meth:`evaluate` drains one event per cycle (the event-bus rate) to
+        the oldest pending popper, Mutex-style: the event value is latched
+        into :attr:`messages` and delivered over the elw response channel.
+
+    A push to a full FIFO is dropped and counted (the hardware NACKs); the
+    sync policy built on top keeps occupancy bounded by construction
+    (credit flow), so a nonzero :attr:`dropped` indicates a program bug.
+    """
+
+    index: int = 0
     depth: int = 16
     fifo: Deque[int] = dataclasses.field(default_factory=deque)
+    poppers: Deque[int] = dataclasses.field(default_factory=deque)
+    messages: Dict[int, int] = dataclasses.field(default_factory=dict)
     dropped: int = 0
+    pushed: int = 0
 
     def push(self, event_id: int) -> None:
         assert 0 <= event_id < 256
@@ -144,18 +167,31 @@ class EventFifo:
             self.dropped += 1
             return
         self.fifo.append(event_id)
+        self.pushed += 1
 
     def pop(self) -> Optional[int]:
+        """Direct (non-elw) drain, e.g. an external agent emptying the queue."""
         return self.fifo.popleft() if self.fifo else None
 
+    def register_popper(self, cid: int) -> None:
+        """elw-trigger hook: queue ``cid`` for the next available event."""
+        if cid not in self.poppers and cid not in self.messages:
+            self.poppers.append(cid)
+
+    def take_message(self, cid: int) -> int:
+        """elw-grant hook: consume the event value latched for ``cid``."""
+        return self.messages.pop(cid)
+
     def next_event_bound(self) -> Optional[int]:
-        """0 while queued external events exist (the non-empty level is
-        re-asserted every cycle), else None until the next push."""
-        return 0 if self.fifo else None
+        """0 while a queued event can be matched to a pending popper (the
+        comparator fires every cycle until one side drains), else None: only
+        a core transaction (push / pop registration) can re-arm it."""
+        return 0 if (self.fifo and self.poppers) else None
 
     def evaluate(self, base_units) -> int:
-        if self.fifo:
-            for u in base_units:
-                u.buffer_set(_EV_FIFO)
+        if self.fifo and self.poppers:
+            cid = self.poppers.popleft()
+            self.messages[cid] = self.fifo.popleft()
+            base_units[cid].buffer_set(_EV_FIFO)
             return 1
         return 0

@@ -16,7 +16,14 @@ from .engine import Cluster, ClusterStats, Compute
 from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
-__all__ = ["MicrobenchResult", "run_barrier_bench", "run_mutex_bench", "run_nop_bench"]
+__all__ = [
+    "MicrobenchResult",
+    "barrier_pipeline_programs",
+    "run_barrier_bench",
+    "run_chain_bench",
+    "run_mutex_bench",
+    "run_nop_bench",
+]
 
 
 @dataclasses.dataclass
@@ -123,6 +130,88 @@ def run_mutex_bench(
     cl.load([program] * n_cores)
     ideal = float(n_cores * t_crit + sfr)
     return _collect(variant, f"mutex_t{t_crit}", cl, n_cores, sfr, iters, ideal)
+
+
+def barrier_pipeline_programs(policy, n_cores: int, work, state, cost_model=None):
+    """Barrier-synchronous pipeline emulation (the non-FIFO baseline).
+
+    The classic way to run a stage pipeline with only barriers: the whole
+    cluster advances in lockstep ticks; at tick ``t`` stage ``s`` works on
+    item ``t - s`` (if in range), then everybody meets at a global barrier.
+    Stages that have nothing to do this tick still pay the barrier -- the
+    exact cost the SCU's event FIFO removes (Sec. 4.3), which is what
+    :func:`run_chain_bench` measures.
+    """
+    cm = cost_model or DEFAULT_COSTS
+    items = len(work)
+
+    def make(cid):
+        def prog(cluster, _cid):
+            for tick in range(items + n_cores - 1):
+                item = tick - _cid
+                if 0 <= item < items:
+                    w = int(work[item][_cid])
+                    if w > 0:
+                        yield Compute(w)
+                yield from policy.sim_barrier(cluster, _cid, state, cm)
+
+        return prog
+
+    return [make(c) for c in range(n_cores)]
+
+
+def make_pipeline_programs(
+    policy, cl: Cluster, n_cores: int, work, state, cost_model=None,
+    depth: int = 8,
+):
+    """Pipeline-program dispatch shared by the chain bench and the
+    pipelined apps: the policy's native ``make_pipeline_programs`` hook when
+    it has one (validated against the actual SCU FIFO capacity -- a deeper
+    credit window than the queues hold would drop events and deadlock),
+    else the barrier-synchronous emulation."""
+    cm = cost_model or DEFAULT_COSTS
+    maker = getattr(policy, "make_pipeline_programs", None)
+    if maker is None:
+        return barrier_pipeline_programs(policy, n_cores, work, state, cm)
+    if cl.scu is not None and depth > cl.scu.fifo.depth:
+        raise ValueError(
+            f"pipeline depth {depth} exceeds the SCU FIFO depth "
+            f"{cl.scu.fifo.depth}; deepen the FIFOs or lower the bound"
+        )
+    return maker(n_cores, work, state, cm, depth)
+
+
+def run_chain_bench(
+    variant: str,
+    n_cores: int,
+    sfr: int = 100,
+    iters: int = 32,
+    depth: int = 8,
+    cost_model=None,
+    mode: str = "fastforward",
+) -> MicrobenchResult:
+    """Pipelined producer-consumer chain: ``n_cores`` stages, ``iters`` items.
+
+    Every item costs ``sfr`` compute cycles at every stage, so the ideal
+    steady-state cost is one item per ``sfr`` cycles (stages fully
+    overlapped); ``prim_cycles`` is the per-item overhead over that ideal.
+    Policies with a native ``make_pipeline_programs`` hook (the ``fifo``
+    discipline's credit-bounded chain, bounded to ``depth`` in-flight items)
+    run it; everything else falls back to the barrier-synchronous emulation
+    -- the baseline the paper's FIFO extension exists to beat.
+    """
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
+    cl = _make_cluster(n_cores, mode)
+    state = policy.make_sim_state(n_cores)
+    work = [[sfr] * n_cores for _ in range(iters)]
+    cl.load(make_pipeline_programs(
+        policy, cl, n_cores, work, state, cost_model, depth
+    ))
+    return _collect(
+        variant, f"chain_d{depth}", cl, n_cores, sfr, iters, float(sfr)
+    )
 
 
 def run_nop_bench(

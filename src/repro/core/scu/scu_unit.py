@@ -20,6 +20,10 @@ private links.  We model addresses symbolically as tuples, e.g.::
     ("mutex", 0, "unlock")          write: release, wake next waiter
     ("notifier", 3, "trigger")      write: send event 3 to mask in data
     ("notifier", 3, "wait")         elw: sleep until notifier event 3
+    ("fifo", 2, "push")             write: push event (data) into FIFO 2
+    ("fifo", 2, "pop")              elw: sleep until an event is matched,
+                                    response carries the popped value
+    ("fifo", 2, "level")            read: current FIFO occupancy
     ("event", "wait_any")           elw: sleep until any masked event
     ("mask", "event")               write: set event mask
     ("buffer", "clear")             write: clear event buffer bits in data
@@ -88,10 +92,18 @@ class SCU:
         n_cores: int,
         n_barriers: Optional[int] = None,
         n_mutexes: int = 1,
-        fifo_depth: int = 16,
+        fifo_depth: Optional[int] = None,
+        n_fifos: Optional[int] = None,
     ):
         self.n_cores = n_cores
         n_barriers = max(1, n_cores // 2) if n_barriers is None else n_barriers
+        # FIFO defaults scale with the cluster so the producer-consumer
+        # discipline (per-core release queues + per-link chain queues, see
+        # repro/sync/fifo.py) fits without per-benchmark tuning.
+        if fifo_depth is None:
+            fifo_depth = max(16, 2 * n_cores)
+        if n_fifos is None:
+            n_fifos = 2 * n_cores + 8
         self.base: List[BaseUnit] = [BaseUnit(cid=i) for i in range(n_cores)]
         self.barriers: List[Barrier] = [
             Barrier(index=i, n_cores=n_cores) for i in range(n_barriers)
@@ -100,7 +112,17 @@ class SCU:
             Mutex(index=i, n_cores=n_cores) for i in range(n_mutexes)
         ]
         self.notifier = Notifier(n_cores=n_cores)
-        self.fifo = EventFifo(depth=fifo_depth)
+        self.fifos: List[EventFifo] = [
+            EventFifo(index=i, depth=fifo_depth) for i in range(n_fifos)
+        ]
+        # instance 0 doubles as the legacy cluster-external event queue
+        self.fifo = self.fifos[0]
+        # FIFO instances whose comparator is armed (queued event AND pending
+        # popper).  Maintained at the mutation points (push / pop
+        # registration / delivery) so the per-cycle evaluate and the
+        # fast-forward bound scan touch only armed instances instead of all
+        # 2*n_cores+8 -- the engine hot loop must not pay for idle FIFOs.
+        self._armed_fifos: set = set()
         self.cluster = None
         # response data latched per core for the in-flight elw (Fig. 4: the
         # read response carries the event buffer or extension data).
@@ -137,6 +159,10 @@ class SCU:
                 elif addr[2] == "arrive_only":
                     # non-blocking arrival (producer that does not wait)
                     b.arrive(cid, self.base)
+            elif tag == "fifo":
+                if addr[2] == "push":
+                    self.fifos[addr[1]].push(data)
+                    self._fifo_touched(addr[1])
             elif tag == "target_reg":
                 unit.notifier_target_mask = data
             return None
@@ -147,6 +173,8 @@ class SCU:
                 return self.barriers[addr[1]].status
             if tag == "mutex":
                 return 1 if self.mutexes[addr[1]].owner is not None else 0
+            if tag == "fifo":
+                return len(self.fifos[addr[1]].fifo)  # occupancy level
             return 0
 
     # ------------------------------------------------------------------ elw
@@ -159,6 +187,11 @@ class SCU:
             # addr[2] == "wait": pure target wait, no arrival
         elif tag == "mutex":
             self.mutexes[addr[1]].try_lock(cid, self.base)
+        elif tag == "fifo":
+            # blocking pop: queue as a popper; the FIFO comparator matches
+            # queued events to poppers one per cycle (extensions.EventFifo)
+            self.fifos[addr[1]].register_popper(cid)
+            self._fifo_touched(addr[1])
         elif tag == "notifier" and addr[2] == "trigger_wait":
             # read-triggered notify using the per-core target register
             self.notifier.trigger(addr[1], self.base[cid].notifier_target_mask, self.base)
@@ -170,6 +203,8 @@ class SCU:
             return 1 << EV.BARRIER
         if tag == "mutex":
             return 1 << EV.MUTEX
+        if tag == "fifo":
+            return 1 << EV.FIFO
         if tag == "notifier":
             return 1 << (EV.NOTIFIER0 + addr[1])
         if tag == "event":
@@ -193,9 +228,12 @@ class SCU:
         if not hit:
             return False, 0
         # Response channel data (Sec. 5): mutex passes the 32-bit message of
-        # the unlocking core; otherwise the event buffer content is returned.
+        # the unlocking core, a FIFO pop returns the matched event value;
+        # otherwise the event buffer content is returned.
         if addr[0] == "mutex":
             value = self.mutexes[addr[1]].message
+        elif addr[0] == "fifo":
+            value = self.fifos[addr[1]].take_message(cid)
         else:
             value = unit.event_buffer
         # Auto-clear (address-controlled in hardware; we always auto-clear the
@@ -211,7 +249,10 @@ class SCU:
             n += b.evaluate(self.base)
         for m in self.mutexes:
             n += m.evaluate(self.base)
-        n += self.fifo.evaluate(self.base)
+        if self._armed_fifos:
+            for idx in sorted(self._armed_fifos):
+                n += self.fifos[idx].evaluate(self.base)
+                self._fifo_touched(idx)
         return n
 
     def next_event_bound(self) -> Optional[int]:
@@ -220,8 +261,12 @@ class SCU:
         comparator could generate an event absent new core transactions.
         0 forces the engine to take a full lockstep step; ``None`` means
         every comparator is disarmed until a core acts."""
+        if self._armed_fifos:
+            # an armed FIFO comparator fires next cycle (EventFifo's bound
+            # contract: 0 while an event can be matched to a popper)
+            return 0
         bound: Optional[int] = None
-        for ext in (*self.barriers, *self.mutexes, self.fifo):
+        for ext in (*self.barriers, *self.mutexes):
             b = ext.next_event_bound()
             if b is None:
                 continue
@@ -231,6 +276,15 @@ class SCU:
                 bound = b
         return bound
 
+    def _fifo_touched(self, idx: int) -> None:
+        """Re-derive instance ``idx``'s armed state after a mutation."""
+        f = self.fifos[idx]
+        if f.fifo and f.poppers:
+            self._armed_fifos.add(idx)
+        else:
+            self._armed_fifos.discard(idx)
+
     # ------------------------------------------------------------- external
     def push_external_event(self, event_id: int) -> None:
         self.fifo.push(event_id)
+        self._fifo_touched(0)

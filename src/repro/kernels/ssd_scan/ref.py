@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.layers.ssm import ssd_chunked
 

@@ -16,7 +16,7 @@ of the paper's single-cluster focus (DESIGN.md Sec. 6.3).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -17,7 +17,6 @@ kernel, and the memory-safe attention used by training and prefill.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

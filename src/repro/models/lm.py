@@ -12,7 +12,6 @@ recomputes the rest, the standard memory/compute trade for long sequences.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import jax

@@ -21,15 +21,14 @@ is distributed flash-decode expressed in pure jnp + sharding constraints.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.models.blocks import group_pattern, prelude_layers
 from repro.models.layers.attention import attention_qkv
 from repro.models.layers.basics import apply_norm, dense, embed, mlp_apply, unembed

@@ -3,7 +3,7 @@
     from repro.sync import get_policy, register_policy, available_policies
 
     policy = get_policy("scu")            # case-insensitive; "SCU" works too
-    available_policies()                  # ('scu', 'tas', 'sw', 'tree')
+    available_policies()         # ('scu', 'tas', 'sw', 'tree', 'tree4', 'fifo')
 
 One :class:`SyncPolicy` carries the discipline's implementation at every
 layer of the repo: simulator fragments, chip-level collectives, and
@@ -23,10 +23,13 @@ from repro.sync.api import (
 )
 
 # Importing the implementation modules registers the builtin policies
-# (the paper's triad first, then the tree extension).
+# (the paper's triad first, then the tree/tree4 tournaments, then the
+# producer-consumer event-FIFO discipline).
 from repro.sync import policies as _policies  # noqa: F401
 from repro.sync import tree as _tree  # noqa: F401
+from repro.sync import fifo as _fifo  # noqa: F401
 from repro.sync.tree import make_tree_policy
+from repro.sync.fifo import fifo_pipeline_programs
 
 __all__ = [
     "LAYER_HOOKS",
@@ -34,6 +37,7 @@ __all__ = [
     "SyncPolicy",
     "available_policies",
     "canonical_name",
+    "fifo_pipeline_programs",
     "get_policy",
     "make_tree_policy",
     "register_policy",

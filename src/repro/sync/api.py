@@ -95,6 +95,13 @@ class PolicyDef:
     shape_gradients: Callable[..., Any]
     opt_state_specs: Callable[..., Any]
     aliases: Tuple[str, ...] = ()  # e.g. the legacy simulator spelling "SCU"
+    # Optional simulator hook: native pipelined-chain support.  Signature
+    # ``(n_cores, work, state, cost_model, depth) -> List[Program]`` where
+    # ``work[item][stage]`` is the Compute-cycle cost of ``item`` at stage
+    # ``stage`` (one stage per core).  Policies without it fall back to the
+    # barrier-synchronous pipeline emulation in ``core/scu/programs.py`` --
+    # the baseline the paper's FIFO extension exists to beat.
+    make_pipeline_programs: Optional[Callable[..., Any]] = None
 
 
 # name (and alias) -> policy, in registration order (order is meaningful:

@@ -1,0 +1,310 @@
+"""The producer-consumer event-FIFO discipline (paper Sec. 4.3, SCU FIFO).
+
+The SCU's event FIFO exists precisely for the fine-grain producer-consumer
+chains that pure barriers serve poorly: a producer pushes an 8-bit event the
+moment a datum is ready and the consumer sleeps clock-gated until its pop is
+matched -- no core spins, no core waits for unrelated peers.  MemPool
+(Riedel et al., 2023) runs the same pattern at 256 cores, which is why the
+scaling sweeps carry this policy to 16/32/64-core clusters.
+
+Registered once as the ``fifo`` :class:`~repro.sync.api.PolicyDef`, the
+discipline shows up at every layer:
+
+  * simulator -- producers ``Scu("write", ("fifo", i, "push"), v)``,
+    consumers ``Scu("elw", ("fifo", i, "pop"))`` (clock-gated until the FIFO
+    comparator matches an event to them).  The barrier is a gather/release
+    over FIFOs (arrivals stream into core 0's gather queue; the release is
+    one token into each consumer's private queue, so back-to-back barriers
+    cannot steal each other's tokens); the mutex passes a single ownership
+    token through one queue (pop = acquire, push = release, FIFO-fair).
+    :func:`fifo_pipeline_programs` is the native pipelined-chain builder:
+    per-link data queues plus a credit queue from the last stage back to the
+    first bound the in-flight items to ``depth`` (classic credit flow), so
+    stages overlap instead of meeting at a global barrier every tick.
+  * chip level -- a point-to-point pipelined chain: the arrival word is
+    accumulated along a neighbor send-recv chain (device i adds its word to
+    the partial from i-1), then the total streams back along the reverse
+    chain -- 2(n-1) pairwise hops, no all-to-all collective.
+  * training -- a pipeline-style stage schedule: gradients reduce-scatter
+    onto the ZeRO shards exactly like ``scu`` (numerically identical), but
+    the tensors are grouped into pipeline stages chained by optimization
+    barriers, so XLA schedules the collectives as staged hand-offs rather
+    than one unordered wave.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import axis_size
+
+from repro.core.scu.engine import Compute, Scu
+from repro.core.scu.primitives import DEFAULT_COSTS
+from repro.sync.api import PolicyDef, register_policy
+from repro.sync.policies import zero_opt_state_specs, zero_shape_gradients
+
+__all__ = [
+    "FIFO",
+    "FIFO_PIPELINE_STAGES",
+    "FifoState",
+    "fifo_barrier",
+    "fifo_chip_barrier",
+    "fifo_mutex_section",
+    "fifo_pipeline_programs",
+    "fifo_shape_gradients",
+    "chain_fifo_span",
+]
+
+# SCU FIFO instance allocation (instance 0 stays the legacy cluster-external
+# event queue; SCU(...) provisions 2*n_cores+8 instances by default):
+#   1                      barrier gather queue (arrivals -> core 0)
+#   2                      mutex ownership-token queue
+#   3 .. 3+n-1             per-core barrier release queues
+#   3+n .. 3+2n-2          chain link queues (stage i -> i+1 at 3+n+i)
+#   3+2n-1                 chain credit queue (last stage -> stage 0)
+F_GATHER = 1
+F_MUTEX = 2
+F_RELEASE_BASE = 3
+
+
+def _release_addr(cid: int) -> int:
+    return F_RELEASE_BASE + cid
+
+
+def _link_addr(n_cores: int, link: int) -> int:
+    return F_RELEASE_BASE + n_cores + link
+
+
+def _credit_addr(n_cores: int) -> int:
+    return F_RELEASE_BASE + 2 * n_cores - 1
+
+
+def chain_fifo_span(n_cores: int) -> int:
+    """Number of SCU FIFO instances the chain programs address (for sizing)."""
+    return F_RELEASE_BASE + 2 * n_cores
+
+
+class FifoState:
+    """Per-run FIFO-discipline bookkeeping shared by all cores."""
+
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        self.mutex_seeded = False  # the single ownership token, pushed once
+
+
+# ---------------------------------------------------------------------------
+# Layer (a): simulator fragments
+# ---------------------------------------------------------------------------
+
+
+def fifo_barrier(cl, cid: int, st: FifoState, cm=DEFAULT_COSTS):
+    """Gather/release barrier over event FIFOs.
+
+    Arrivals stream into core 0's gather queue (producers push and move on to
+    their private release pop); core 0 pops ``n-1`` arrival events -- asleep,
+    clock-gated, between them -- then pushes one release token into *each*
+    consumer's private queue.  Private release queues (rather than one shared
+    queue) make back-to-back barriers safe: a fast core re-entering the next
+    barrier can only ever pop its own queue, which holds at most its own
+    token.
+    """
+    n = st.n_cores
+    yield Compute(cm.call)
+    if n == 1:
+        yield Compute(cm.ret)
+        return
+    if cid == 0:
+        for _ in range(n - 1):
+            yield Compute(1)  # pop address setup
+            yield Scu("elw", ("fifo", F_GATHER, "pop"))
+        for peer in range(1, n):
+            yield Compute(1)  # release address setup
+            yield Scu("write", ("fifo", _release_addr(peer), "push"), 1)
+    else:
+        yield Compute(1)  # push address setup
+        yield Scu("write", ("fifo", F_GATHER, "push"), cid % 256)
+        yield Compute(1)  # pop address setup
+        yield Scu("elw", ("fifo", _release_addr(cid), "pop"))
+    yield Compute(cm.ret)
+
+
+def fifo_mutex_section(cl, cid: int, t_crit: int, st: FifoState, cm=DEFAULT_COSTS):
+    """Token-passing mutex: one ownership token circulates through a queue.
+
+    Acquire = pop (clock-gated until the token is matched to this core),
+    release = push.  The FIFO's popper queue makes the lock FIFO-fair; the
+    single token makes it mutually exclusive.  The first core to run the
+    section seeds the token (shared Python-side state, so exactly one push).
+    """
+    if not st.mutex_seeded:
+        st.mutex_seeded = True
+        yield Scu("write", ("fifo", F_MUTEX, "push"), 1)
+    yield Compute(1)  # pop address setup
+    yield Scu("elw", ("fifo", F_MUTEX, "pop"))
+    if t_crit > 0:
+        yield Compute(t_crit)
+    yield Compute(1)  # push address setup
+    yield Scu("write", ("fifo", F_MUTEX, "push"), 1)
+
+
+def _fifo_sim_barrier(cluster, cid, state, cost_model=None):
+    yield from fifo_barrier(cluster, cid, state, cost_model or DEFAULT_COSTS)
+
+
+def _fifo_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
+    yield from fifo_mutex_section(
+        cluster, cid, t_crit, state, cost_model or DEFAULT_COSTS
+    )
+
+
+def fifo_pipeline_programs(
+    n_cores: int, work, state, cost_model=None, depth: int = 8
+):
+    """Native pipelined chain: one stage per core, credit-bounded in flight.
+
+    ``work[item][stage]`` is the Compute cost of ``item`` at ``stage``.
+    Stage ``s`` pops its input event from link ``s-1``, works, and pushes the
+    completion event into link ``s``; the last stage returns a credit to
+    stage 0, which stops injecting more than ``depth`` items ahead of the
+    tail.  Every wait is a clock-gated elw pop -- no spinning, no barrier:
+    stages overlap whenever the work is there, which is the whole point of
+    the FIFO discipline.
+
+    The credit flow bounds every link queue's occupancy to ``depth``, so
+    ``depth`` is additionally clamped to the SCU's guaranteed FIFO capacity
+    (``max(16, 2*n_cores)``, the ``SCU(...)`` default): a deeper request
+    would overflow the queues, drop events, and deadlock the chain.  The
+    programs re-check the actual SCU's provisioning (instance count and
+    queue depth) when they start, so a custom under-provisioned SCU fails
+    loudly instead of dropping events.  ``cost_model`` is unused: like the
+    ``scu`` hardware fragments, the chain is address setup + SCU
+    transactions, with no software primitive for the cost model to price.
+    """
+    items = len(work)
+    capacity = max(16, 2 * n_cores)
+    depth = max(1, min(int(depth) if depth else items, items, capacity))
+
+    def make(cid):
+        def prog(cluster, _cid):
+            scu = cluster.scu
+            if (
+                scu is None
+                or len(scu.fifos) < chain_fifo_span(n_cores)
+                or scu.fifo.depth < depth
+            ):
+                raise RuntimeError(
+                    f"SCU FIFO provisioning too small for a {n_cores}-stage "
+                    f"chain at depth {depth}: need >= "
+                    f"{chain_fifo_span(n_cores)} instances of depth >= "
+                    f"{depth} (see repro.sync.fifo's instance allocation)"
+                )
+            for item in range(items):
+                if _cid == 0:
+                    if item >= depth:  # credit flow bounds in-flight items
+                        yield Compute(1)
+                        yield Scu("elw", ("fifo", _credit_addr(n_cores), "pop"))
+                else:
+                    yield Compute(1)
+                    yield Scu("elw", ("fifo", _link_addr(n_cores, _cid - 1), "pop"))
+                w = int(work[item][_cid])
+                if w > 0:
+                    yield Compute(w)
+                yield Compute(1)
+                if _cid < n_cores - 1:
+                    yield Scu(
+                        "write", ("fifo", _link_addr(n_cores, _cid), "push"),
+                        item % 256,
+                    )
+                else:
+                    yield Scu("write", ("fifo", _credit_addr(n_cores), "push"), 1)
+
+        return prog
+
+    return [make(c) for c in range(n_cores)]
+
+
+# ---------------------------------------------------------------------------
+# Layer (b): chip-level point-to-point pipelined chain
+# ---------------------------------------------------------------------------
+
+
+def fifo_chip_barrier(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Point-to-point pipelined chain: gather along the ring, stream back.
+
+    Forward phase (n-1 neighbor hops): device i adds its arrival word to the
+    partial received from i-1, so after hop k device i holds the sum over
+    devices [max(0, i-k) .. i] and the tail ends with the full count.
+    Backward phase (n-1 hops): the total streams back down the chain
+    (``maximum`` keeps it sticky; counts are non-negative and everyone else
+    holds zero).  2(n-1) pairwise sends, no all-to-all -- the chip analogue
+    of the simulator's per-link event queues, exact for any group size.
+    """
+    n = axis_size(axis)
+    if n == 1:
+        return arrive
+    idx = jax.lax.axis_index(axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    token = arrive
+    for _ in range(n - 1):
+        incoming = jax.lax.ppermute(token, axis, fwd)
+        # device 0 is the head of the chain: the wrap-around hop carries the
+        # tail's partial, which must not re-enter the accumulation
+        token = arrive + jnp.where(idx >= 1, incoming, jnp.zeros_like(incoming))
+    total = jnp.where(idx == n - 1, token, jnp.zeros_like(token))
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    for _ in range(n - 1):
+        total = jnp.maximum(total, jax.lax.ppermute(total, axis, bwd))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Layer (c): training -- pipeline-style stage schedule over ZeRO shards
+# ---------------------------------------------------------------------------
+
+FIFO_PIPELINE_STAGES = 4  # gradient tensors are grouped into this many stages
+
+
+def fifo_shape_gradients(grads, params_shape, mesh, cfg=None):
+    """Staged hand-off schedule, numerically identical to ``scu``.
+
+    Gradients reduce-scatter onto the ZeRO shards exactly like the ``scu``
+    policy; the tensors are then grouped into ``FIFO_PIPELINE_STAGES``
+    contiguous stages chained by optimization barriers -- each stage's
+    collectives may overlap internally but hand off to the next stage in
+    order, the XLA-schedule analogue of the simulator's credit-bounded
+    producer-consumer chain (finer than ``tas``'s single sync point, coarser
+    than ``sw``'s per-tensor chain).
+    """
+    shaped = zero_shape_gradients(grads, params_shape, mesh, cfg=cfg)
+    leaves, treedef = jax.tree.flatten(shaped)
+    if not leaves:
+        return shaped
+    n_stages = min(FIFO_PIPELINE_STAGES, len(leaves))
+    size = -(-len(leaves) // n_stages)  # ceil division
+    token = jnp.zeros((), jnp.float32)
+    out = []
+    for s in range(0, len(leaves), size):
+        tied = jax.lax.optimization_barrier(tuple(leaves[s:s + size]) + (token,))
+        out.extend(tied[:-1])
+        token = tied[-1] + 0.0  # keep the stage hand-off explicit
+    return jax.tree.unflatten(treedef, out)
+
+
+FIFO = register_policy(PolicyDef(
+    name="fifo",
+    description=(
+        "producer-consumer event-FIFO chains (SCU FIFO extension): clock-"
+        "gated push/pop fragments + credit-bounded pipelined chains; chip: "
+        "point-to-point neighbor chain collective; training: staged pipeline "
+        "reduce-scatter (numerically identical to scu)"
+    ),
+    aliases=("FIFO",),
+    make_sim_state=FifoState,
+    sim_barrier=_fifo_sim_barrier,
+    sim_mutex=_fifo_sim_mutex,
+    chip_barrier=fifo_chip_barrier,
+    shape_gradients=fifo_shape_gradients,
+    opt_state_specs=zero_opt_state_specs,
+    make_pipeline_programs=fifo_pipeline_programs,
+))

@@ -48,6 +48,7 @@ from repro.sync.policies import (
 
 __all__ = [
     "TREE",
+    "TREE4",
     "TreeBarrierState",
     "make_tree_policy",
     "tree_barrier",
@@ -191,3 +192,7 @@ def tree_chip_barrier(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
 
 
 TREE = register_policy(make_tree_policy(radix=2, name="tree"))
+# Radix-4 tournament: half the tree depth on 16-core clusters, registered as
+# a builtin so every benchmark (Table 1, Fig. 5, scaling sweeps, Table 2,
+# chip-level, chain) carries a dedicated ``tree4`` row.
+TREE4 = register_policy(make_tree_policy(radix=4))

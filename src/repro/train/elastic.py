@@ -24,9 +24,8 @@ At thousand-node scale, failures are routine.  The framework's contract:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-import jax
 
 __all__ = ["HealthState", "shrink_mesh", "rescale_batch", "plan_recovery"]
 

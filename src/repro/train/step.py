@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, validate_sync_policy
 from repro.models.lm import init_lm, lm_loss
-from repro.parallel.sharding import batch_spec, param_shardings, param_specs
+from repro.parallel.sharding import batch_spec, param_specs
 from repro.sync import SyncPolicy, get_policy
 from repro.train.optimizer import OptConfig, adamw_update, compress_decompress
 

@@ -1,0 +1,161 @@
+"""The ``benchmarks/run.py --json`` artifact contract + the regression gate.
+
+Two consumers depend on the artifact's shape staying put: the perf-smoke CI
+artifact (cross-PR trajectory) and ``scripts/bench_compare.py`` (the gating
+benchmark-regression check).  These tests pin the schema via the committed
+golden baseline and prove the gate actually fails on an injected cycle-count
+regression -- the property the CI job relies on.
+"""
+
+import copy
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+GOLDEN = REPO / "benchmarks" / "golden" / "BENCH_baseline.json"
+
+# scripts/ is not a package; load the gate module by path
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", REPO / "scripts" / "bench_compare.py"
+)
+bench_compare = importlib.util.module_from_spec(_spec)
+sys.modules.setdefault("bench_compare", bench_compare)
+_spec.loader.exec_module(bench_compare)
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Schema: the committed baseline must satisfy the contract, and the
+# validator must actually catch drift
+# ---------------------------------------------------------------------------
+
+
+def test_golden_baseline_satisfies_schema(baseline):
+    assert bench_compare.validate_schema(baseline) == []
+
+
+def test_schema_requires_every_section(baseline):
+    for key in (
+        "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
+        "chain", "chain_scaling", "engine_perf", "jax_barriers_ok",
+    ):
+        broken = {k: v for k, v in baseline.items() if k != key}
+        errors = bench_compare.validate_schema(broken)
+        assert any(key in e for e in errors), f"dropping {key!r} not caught"
+
+
+def test_schema_catches_type_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    broken["table1"][0]["cycles"] = "fast"  # a string is not a cycle count
+    assert any("cycles" in e for e in bench_compare.validate_schema(broken))
+
+    broken = copy.deepcopy(baseline)
+    del broken["table1"][0]["policy"]
+    assert any("policy" in e for e in bench_compare.validate_schema(broken))
+
+    broken = copy.deepcopy(baseline)
+    broken["engine_perf"]["cycles_per_sec"].pop("fastforward")
+    assert any(
+        "fastforward" in e for e in bench_compare.validate_schema(broken)
+    )
+
+
+def test_schema_catches_chain_row_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    del broken["chain"]["rows"][0]["cycles_per_item"]
+    assert any(
+        "cycles_per_item" in e for e in bench_compare.validate_schema(broken)
+    )
+
+
+def test_artifact_carries_every_registered_policy(baseline):
+    """Table-1/Fig-5/chain rows exist for every registered policy, including
+    the tree4 and fifo extensions -- the per-discipline benchmark surface."""
+    from repro.sync import available_policies
+
+    table1_policies = {r["policy"] for r in baseline["table1"]}
+    fig5_policies = set(baseline["fig5"])
+    chain_policies = {r["policy"] for r in baseline["chain"]["rows"]}
+    for policy in available_policies():
+        assert policy in table1_policies, f"{policy}: no Table-1 row"
+        assert policy in fig5_policies, f"{policy}: no Fig-5 row"
+        assert policy in chain_policies, f"{policy}: no chain row"
+
+
+# ---------------------------------------------------------------------------
+# The regression gate
+# ---------------------------------------------------------------------------
+
+
+def test_gate_passes_on_identical_artifact(baseline):
+    regressions, _ = bench_compare.compare(baseline, baseline)
+    assert regressions == []
+    assert len(bench_compare.extract_metrics(baseline)) > 100
+
+
+def test_gate_fails_on_injected_cycle_regression(baseline):
+    """The property CI relies on: a cycle-count regression > threshold on a
+    gated key number must fail the comparison."""
+    doctored = copy.deepcopy(baseline)
+    row = doctored["table1"][0]
+    row["cycles"] = [c * 1.05 for c in row["cycles"]]  # +5% > 2% threshold
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert regressions, "a +5% cycle regression must trip the gate"
+    assert any(row["primitive"] in r and row["policy"] in r for r in regressions)
+
+
+def test_gate_tolerates_sub_threshold_jitter(baseline):
+    doctored = copy.deepcopy(baseline)
+    row = doctored["table1"][0]
+    row["cycles"] = [c * 1.01 for c in row["cycles"]]  # below the 2% gate
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert regressions == []
+
+
+def test_gate_fails_on_disappearing_metric(baseline):
+    doctored = copy.deepcopy(baseline)
+    doctored["table1"] = doctored["table1"][1:]  # a gated row vanished
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("disappeared" in r for r in regressions)
+
+
+def test_gate_fails_on_min_sfr_regression(baseline):
+    doctored = copy.deepcopy(baseline)
+    policy = next(iter(doctored["fig5"]))
+    entry = doctored["fig5"][policy]
+    entry["min_sfr_energy_10pct"] = entry["min_sfr_energy_10pct"] * 1.10
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("min_sfr_energy_10pct" in r for r in regressions)
+
+
+def test_main_exit_codes(tmp_path, baseline):
+    """End-to-end: the CLI exits 0 on parity, 1 on regression, 2 on schema
+    violations -- the contract scripts/ci.sh gates on."""
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(baseline))
+
+    assert bench_compare.main([str(base_p), str(base_p)]) == 0
+
+    doctored = copy.deepcopy(baseline)
+    doctored["table2"][0]["cycles"] = {
+        k: v * 2 for k, v in doctored["table2"][0]["cycles"].items()
+    }
+    cur_p = tmp_path / "regressed.json"
+    cur_p.write_text(json.dumps(doctored))
+    assert bench_compare.main([str(base_p), str(cur_p)]) == 1
+
+    invalid = {k: v for k, v in baseline.items() if k != "chain"}
+    bad_p = tmp_path / "invalid.json"
+    bad_p.write_text(json.dumps(invalid))
+    assert bench_compare.main([str(base_p), str(bad_p)]) == 2
+
+    assert bench_compare.main([str(base_p), str(tmp_path / "missing.json")]) == 2

@@ -1,7 +1,6 @@
 """Unit + property tests for the Tier-1 cycle-accurate SCU simulator."""
 
 import random
-import sys
 
 import pytest
 from hypothesis import given, settings
@@ -21,14 +20,11 @@ from repro.core.scu.engine import CoreState
 from repro.core.scu.primitives import (
     DEFAULT_COSTS,
     scu_barrier,
-    scu_mutex_section,
     sw_barrier,
-    sw_mutex_section,
     tas_barrier,
-    tas_mutex_section,
 )
 
-POLICIES = ("scu", "tas", "sw", "tree")
+POLICIES = ("scu", "tas", "sw", "tree", "tree4", "fifo")
 MODES = ("lockstep", "fastforward")
 
 
@@ -310,6 +306,155 @@ def test_notifier_broadcast_on_zero_mask():
 
 
 # ---------------------------------------------------------------------------
+# Event-FIFO extension: producer-consumer push/pop over the SCU (Sec. 4.3)
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_consumer_sleeps_clock_gated_until_push():
+    """A pop on an empty FIFO clock-gates the consumer until the producer's
+    push is matched to it -- the FIFO analogue of the elw barrier wait."""
+    cl = make_cluster(2)
+    got = {}
+
+    def producer(cluster, cid):
+        yield Compute(30)
+        yield Scu("write", ("fifo", 1, "push"), 42)
+
+    def consumer(cluster, cid):
+        v = yield Scu("elw", ("fifo", 1, "pop"))
+        got["v"] = v
+
+    cl.load([producer, consumer])
+    st = cl.run(max_cycles=10_000)
+    assert got["v"] == 42
+    assert st.cores[1].gated_cycles >= 25  # slept through the producer's SFR
+
+
+def test_fifo_events_delivered_in_order():
+    """Queued events reach the consumer in push order, one per pop."""
+    cl = make_cluster(2)
+    got = []
+
+    def producer(cluster, cid):
+        for v in (7, 11, 13):
+            yield Scu("write", ("fifo", 1, "push"), v)
+            yield Compute(5)
+
+    def consumer(cluster, cid):
+        for _ in range(3):
+            v = yield Scu("elw", ("fifo", 1, "pop"))
+            got.append(v)
+
+    cl.load([producer, consumer])
+    cl.run(max_cycles=10_000)
+    assert got == [7, 11, 13]
+
+
+def test_fifo_event_latched_when_pushed_before_pop():
+    """An event pushed long before the pop must still be matched (queue
+    semantics, not edge semantics); the consumer never needs to sleep."""
+    cl = make_cluster(2)
+    got = {}
+
+    def producer(cluster, cid):
+        yield Scu("write", ("fifo", 1, "push"), 99)
+
+    def consumer(cluster, cid):
+        yield Compute(20)
+        v = yield Scu("elw", ("fifo", 1, "pop"))
+        got["v"] = v
+
+    cl.load([producer, consumer])
+    st = cl.run(max_cycles=10_000)
+    assert got["v"] == 99
+    assert st.cores[1].gated_cycles == 0
+
+
+def test_fifo_multi_consumer_each_matched_one_event():
+    """Two consumers on one queue: the comparator matches one queued event
+    per pending popper; nobody pops twice, nobody starves."""
+    n = 3
+    cl = make_cluster(n)
+    got = {}
+
+    def producer(cluster, cid):
+        yield Compute(10)
+        yield Scu("write", ("fifo", 1, "push"), 1)
+        yield Compute(10)
+        yield Scu("write", ("fifo", 1, "push"), 2)
+
+    def consumer(cluster, cid):
+        v = yield Scu("elw", ("fifo", 1, "pop"))
+        got[cid] = v
+
+    cl.load([producer, consumer, consumer])
+    cl.run(max_cycles=10_000)
+    assert sorted(got) == [1, 2]
+    assert sorted(got.values()) == [1, 2]
+
+
+def test_fifo_overflow_drops_and_counts():
+    scu = SCU(n_cores=2, fifo_depth=2)
+    cl = Cluster(n_cores=2, scu=scu)
+
+    def producer(cluster, cid):
+        for v in range(4):  # two more than the queue holds
+            yield Scu("write", ("fifo", 1, "push"), v)
+
+    def idle(cluster, cid):
+        yield Compute(1)
+
+    cl.load([producer, idle])
+    cl.run(max_cycles=10_000)
+    assert scu.fifos[1].dropped == 2
+    assert list(scu.fifos[1].fifo) == [0, 1]
+
+
+def test_fifo_level_read_nonblocking():
+    cl = make_cluster(2)
+    got = {}
+
+    def producer(cluster, cid):
+        yield Scu("write", ("fifo", 1, "push"), 5)
+        yield Scu("write", ("fifo", 1, "push"), 6)
+        lvl = yield Scu("read", ("fifo", 1, "level"))
+        got["level"] = lvl
+
+    def idle(cluster, cid):
+        yield Compute(1)
+
+    cl.load([producer, idle])
+    cl.run(max_cycles=10_000)
+    assert got["level"] == 2
+
+
+def test_fifo_barrier_back_to_back_no_token_theft():
+    """Private release queues: a fast core re-entering the next barrier must
+    not be released by a leftover token of the previous one."""
+    from repro.sync import get_policy
+
+    policy = get_policy("fifo")
+    n = 8
+    cl = make_cluster(n)
+    state = policy.make_sim_state(n)
+    passes = [[] for _ in range(n)]
+
+    def prog(cluster, cid):
+        for k in range(6):
+            # core n-1 is persistently slow: fast cores lap it into the next
+            # barrier while its release tokens are still being delivered
+            yield Compute(200 if cid == n - 1 else 1)
+            yield from policy.sim_barrier(cluster, cid, state, None)
+            passes[cid].append(cluster.cycle)
+
+    cl.load([prog] * n)
+    cl.run(max_cycles=1_000_000)
+    for k in range(5):
+        # nobody may pass barrier k+1 before everyone has passed barrier k
+        assert min(p[k + 1] for p in passes) >= max(p[k] for p in passes)
+
+
+# ---------------------------------------------------------------------------
 # Paper validation: Table 1 (cycles)
 # ---------------------------------------------------------------------------
 
@@ -348,17 +493,23 @@ def test_scu_barrier_six_active_cycles_per_core():
 
 # cycles_per_iter measured on the seed (pre-fast-forward) lockstep engine at
 # iters=16 -- the engine rewrite must not move ANY of these by even a cycle.
+# (tree4/fifo rows were recorded when those policies landed, same protocol:
+# lockstep reference first, fastforward asserted identical.)
 GOLDEN_BARRIER = {  # policy: (2, 4, 8 cores), sfr=0
     "scu": (6.0625, 6.0625, 6.0625),
     "tas": (51.5000, 89.6250, 169.9375),
     "sw": (49.1875, 88.1250, 172.5000),
     "tree": (20.4375, 29.3750, 44.1250),
+    "tree4": (20.4375, 25.5000, 42.4375),
+    "fifo": (17.0625, 29.3125, 61.3125),
 }
 GOLDEN_MUTEX_T10 = {  # policy: (2, 4, 8 cores), t_crit=10
     "scu": (30.1875, 60.1875, 120.1875),
     "tas": (32.4375, 65.1875, 131.1875),
     "sw": (30.1250, 63.8125, 129.1875),
     "tree": (30.1250, 63.8125, 129.1875),
+    "tree4": (30.1250, 63.8125, 129.1875),
+    "fifo": (32.1875, 64.1875, 128.1875),
 }
 
 
@@ -459,6 +610,79 @@ def test_fastforward_matches_lockstep_on_random_programs(seed, policy, n):
         f"engines diverged (policy={policy}, n={n}, seed={seed}): "
         f"{lock.cycles} vs {fast.cycles} cycles"
     )
+
+
+def _run_random_chain(seed: int, policy_name: str, n: int, mode: str):
+    """Random pipelined chain: per-(item, stage) work and a random credit
+    depth, drawn up front so both engine modes replay the same program.
+    Exercises the FIFO fast path (clock-gated pops between spans) for the
+    ``fifo`` policy and the barrier-synchronous emulation for the rest."""
+    from repro.core.scu.programs import barrier_pipeline_programs
+    from repro.sync import get_policy
+
+    rng = random.Random(seed)
+    items = rng.randint(2, 9)
+    work = [[rng.randint(1, 120) for _ in range(n)] for _ in range(items)]
+    depth = rng.choice((1, 2, 4, 8))
+    policy = get_policy(policy_name)
+    cl = make_cluster(n, mode=mode)
+    state = policy.make_sim_state(n)
+    maker = getattr(policy, "make_pipeline_programs", None)
+    if maker is not None:
+        programs = maker(n, work, state, DEFAULT_COSTS, depth)
+    else:
+        programs = barrier_pipeline_programs(policy, n, work, state, DEFAULT_COSTS)
+    cl.load(programs)
+    return cl.run(max_cycles=2_000_000)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=9999),
+    policy=st.sampled_from(["fifo", "scu", "sw"]),
+    n=st.sampled_from([2, 4, 8]),
+)
+def test_fastforward_matches_lockstep_on_random_chains(seed, policy, n):
+    """FIFO workloads: randomized pipelined chains produce bit-identical
+    ClusterStats under the event-driven engine and the lockstep reference."""
+    lock = _run_random_chain(seed, policy, n, "lockstep")
+    fast = _run_random_chain(seed, policy, n, "fastforward")
+    assert lock == fast, (
+        f"engines diverged on chain (policy={policy}, n={n}, seed={seed}): "
+        f"{lock.cycles} vs {fast.cycles} cycles"
+    )
+
+
+def test_chain_bench_modes_bit_exact():
+    """run_chain_bench: full ClusterStats equality between the two engine
+    modes, including the Table-2 pipelined app variant."""
+    from repro.core.scu.apps import APPS, run_app_pipelined
+    from repro.core.scu.programs import run_chain_bench
+
+    for policy in ("fifo", "scu"):
+        a = run_chain_bench(policy, 8, sfr=37, iters=8, depth=4, mode="lockstep")
+        b = run_chain_bench(policy, 8, sfr=37, iters=8, depth=4, mode="fastforward")
+        assert a.stats == b.stats, f"{policy} chain: stats diverged"
+    a = run_app_pipelined(APPS["livermore2"], "fifo", mode="lockstep")
+    b = run_app_pipelined(APPS["livermore2"], "fifo", mode="fastforward")
+    assert a == b, "pipelined app results diverged"
+
+
+def test_fifo_chain_fastforward_skips_quiescent_spans():
+    """The FIFO fast path must stay event-driven: an SFR-dominated chain is
+    covered almost entirely by span jumps (clock-gated pops between spans
+    must not degrade the engine to lockstep)."""
+    from repro.sync import get_policy
+
+    policy = get_policy("fifo")
+    n = 4
+    cl = make_cluster(n, mode="fastforward")
+    state = policy.make_sim_state(n)
+    work = [[400] * n for _ in range(6)]
+    cl.load(policy.make_pipeline_programs(n, work, state, DEFAULT_COSTS, 4))
+    st_ = cl.run()
+    assert cl.ff_spans > 0
+    assert cl.ff_cycles > 0.8 * st_.cycles
 
 
 def test_fastforward_actually_skips():

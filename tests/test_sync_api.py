@@ -15,7 +15,6 @@ from repro.core.scu import SCU, Cluster, Compute, run_barrier_bench
 from repro.kernels.scu_barrier.ops import ref_barrier_count
 from repro.sync import (
     LAYER_HOOKS,
-    PolicyDef,
     SyncPolicy,
     available_policies,
     canonical_name,
@@ -25,7 +24,7 @@ from repro.sync import (
     unregister_policy,
 )
 
-BUILTINS = ("scu", "tas", "sw", "tree")
+BUILTINS = ("scu", "tas", "sw", "tree", "tree4", "fifo")
 
 
 # ---------------------------------------------------------------------------
@@ -36,7 +35,8 @@ BUILTINS = ("scu", "tas", "sw", "tree")
 def test_builtins_registered_in_order():
     names = available_policies()
     assert names[:3] == ("scu", "tas", "sw")  # the paper's triad first
-    assert "tree" in names
+    for ext in ("tree", "tree4", "fifo"):  # the registered extensions
+        assert ext in names
 
 
 def _dummy_policy(name="dummy"):
@@ -240,23 +240,25 @@ def test_tree_radix_barrier_releases_full_group(radix, n):
         assert cyc >= last_arrival, f"radix {radix}: core {cid} escaped early"
 
 
+def test_tree4_is_a_registered_builtin():
+    """The radix-4 tournament is a builtin with a dedicated benchmark row:
+    registered, alias-resolvable, and actually radix 4."""
+    t4 = get_policy("tree4")
+    assert t4.name == "tree4"
+    assert get_policy("TREE4") is t4  # alias round-trip
+    assert "tree4" in available_policies()
+    assert t4.make_sim_state(16).radix == 4
+
+
 def test_tree_radix4_halves_depth_on_16_cores():
     """Radix 4 -> 2 tournament levels instead of 4 on a 16-core cluster:
-    the barrier must get measurably cheaper, and registering the policy
-    makes it benchmarkable everywhere like any other discipline."""
-    t4 = register_policy(make_tree_policy(radix=4))
-    try:
-        assert t4.name == "tree4"
-        assert get_policy("TREE4") is t4  # alias round-trip
-        r2 = run_barrier_bench("tree", 16, sfr=0, iters=8)
-        r4 = run_barrier_bench("tree4", 16, sfr=0, iters=8)
-        assert r4.cycles_per_iter < r2.cycles_per_iter, (
-            f"radix-4 tournament ({r4.cycles_per_iter}) should beat radix-2 "
-            f"({r2.cycles_per_iter}) at 16 cores"
-        )
-    finally:
-        unregister_policy("tree4")
-    assert "tree4" not in available_policies()
+    the builtin tree4 barrier must be measurably cheaper than tree."""
+    r2 = run_barrier_bench("tree", 16, sfr=0, iters=8)
+    r4 = run_barrier_bench("tree4", 16, sfr=0, iters=8)
+    assert r4.cycles_per_iter < r2.cycles_per_iter, (
+        f"radix-4 tournament ({r4.cycles_per_iter}) should beat radix-2 "
+        f"({r2.cycles_per_iter}) at 16 cores"
+    )
 
 
 def test_tree_default_radix_is_binary():
@@ -264,7 +266,7 @@ def test_tree_default_radix_is_binary():
 
 
 # ---------------------------------------------------------------------------
-# Training layer: the tree policy is numerically identical to scu
+# Training layer: extension policies are numerically identical to scu
 # ---------------------------------------------------------------------------
 
 
@@ -278,28 +280,30 @@ def _toy_grads(seed=0):
     }
 
 
-def test_tree_shape_gradients_matches_scu():
+@pytest.mark.parametrize("name", ["tree", "tree4", "fifo"])
+def test_extension_shape_gradients_matches_scu(name):
     if jax.device_count() < 4:
         pytest.skip("needs 4 host devices")
     mesh = make_axis_mesh((2, 2), ("data", "model"))
     grads = _toy_grads()
     shaped = {}
-    for name in ("scu", "tree"):
-        policy = get_policy(name)
+    for n in ("scu", name):
+        policy = get_policy(n)
         fn = jax.jit(lambda g: policy.shape_gradients(g, grads, mesh))
-        shaped[name] = fn(grads)
+        shaped[n] = fn(grads)
     for (ka, a), (kb, b) in zip(
         jax.tree_util.tree_leaves_with_path(shaped["scu"]),
-        jax.tree_util.tree_leaves_with_path(shaped["tree"]),
+        jax.tree_util.tree_leaves_with_path(shaped[name]),
     ):
         assert ka == kb
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # the discipline must not change the values, only the schedule
-    for a, b in zip(jax.tree.leaves(shaped["tree"]), jax.tree.leaves(grads)):
+    for a, b in zip(jax.tree.leaves(shaped[name]), jax.tree.leaves(grads)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_tree_opt_state_specs_match_scu():
+@pytest.mark.parametrize("name", ["tree", "tree4", "fifo"])
+def test_extension_opt_state_specs_match_scu(name):
     if jax.device_count() < 4:
         pytest.skip("needs 4 host devices")
     mesh = make_axis_mesh((2, 2), ("data", "model"))
@@ -307,13 +311,75 @@ def test_tree_opt_state_specs_match_scu():
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _toy_grads()
     )
     scu_specs = get_policy("scu").opt_state_specs(shapes, mesh)
-    tree_specs = get_policy("tree").opt_state_specs(shapes, mesh)
+    ext_specs = get_policy(name).opt_state_specs(shapes, mesh)
     assert jax.tree.all(
         jax.tree.map(
-            lambda a, b: a == b, scu_specs, tree_specs,
+            lambda a, b: a == b, scu_specs, ext_specs,
             is_leaf=lambda x: isinstance(x, P),
         )
     )
+
+
+# ---------------------------------------------------------------------------
+# The fifo policy: pipelined-chain vertical slice
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_policy_registered_with_pipeline_hook():
+    fifo = get_policy("fifo")
+    assert fifo.name == "fifo"
+    assert get_policy("FIFO") is fifo  # alias round-trip
+    assert callable(fifo.make_pipeline_programs)
+    # the barrier-only policies fall back to the barrier-sync emulation
+    assert get_policy("scu").make_pipeline_programs is None
+
+
+def test_fifo_chain_beats_software_barrier_pipeline():
+    """The point of the FIFO discipline: a pipelined chain under per-link
+    event queues must beat the same chain under the software barrier-
+    synchronous schedule (the paper's Sec. 4.3 motivation)."""
+    from repro.core.scu.programs import run_chain_bench
+
+    fifo = run_chain_bench("fifo", 8, sfr=100, iters=16, depth=8)
+    sw = run_chain_bench("sw", 8, sfr=100, iters=16)
+    assert fifo.cycles_per_iter < 0.75 * sw.cycles_per_iter, (
+        f"fifo chain ({fifo.cycles_per_iter}) should clearly beat the "
+        f"sw barrier-sync pipeline ({sw.cycles_per_iter})"
+    )
+
+
+def test_fifo_chain_depth_bounds_in_flight():
+    """Credit depth 1 serializes neighboring stages; deeper credit windows
+    must monotonically recover throughput up to full overlap."""
+    from repro.core.scu.programs import run_chain_bench
+
+    costs = [
+        run_chain_bench("fifo", 4, sfr=60, iters=12, depth=d).cycles_per_iter
+        for d in (1, 2, 8)
+    ]
+    assert costs[0] > costs[1] > costs[2], costs
+
+
+def test_fifo_pipelined_app_wins_under_imbalance():
+    """On an imbalanced app skeleton the global barrier pays the cluster-
+    wide maximum every tick; the FIFO chain only couples neighbors, so it
+    must finish faster than the barrier-synchronous pipeline."""
+    from repro.core.scu.apps import APPS, run_app_pipelined
+
+    app = APPS["livermore6"]  # highest per-section imbalance in Table 2
+    fifo = run_app_pipelined(app, "fifo")
+    scu = run_app_pipelined(app, "scu")
+    assert fifo.cycles < scu.cycles, (
+        f"fifo pipeline ({fifo.cycles}) should beat the barrier-sync "
+        f"schedule ({scu.cycles}) on an imbalanced app"
+    )
+
+
+def test_fifo_chain_rejects_depth_beyond_fifo_capacity():
+    from repro.core.scu.programs import run_chain_bench
+
+    with pytest.raises(ValueError, match="depth"):
+        run_chain_bench("fifo", 4, sfr=10, iters=64, depth=1000)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests spanning both tiers of the reproduction."""
 
-import numpy as np
 import pytest
 
 from repro.core.scu import APPS, run_app

@@ -17,7 +17,7 @@ from repro.train.data import SyntheticLM
 from repro.train.elastic import HealthState, plan_recovery, rescale_batch, shrink_mesh
 from repro.train.loop import TrainerConfig, train
 from repro.train.optimizer import OptConfig
-from repro.train.step import TrainConfig, make_train_step
+from repro.train.step import TrainConfig
 
 FAST_OPT = OptConfig(lr=1e-2, warmup_steps=5)
 
