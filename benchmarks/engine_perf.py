@@ -1,18 +1,26 @@
 """Engine throughput: simulated cycles per second, lockstep vs fastforward.
 
-Times the Fig. 5 barrier sweep (SFR >= 1000, every registered ``repro.sync``
-policy) under both engine modes of :class:`repro.core.scu.engine.Cluster`
-and reports per-config and aggregate simulated-cycles-per-second.  The two
-modes are asserted cycle-exact on every config while we are at it -- this
-benchmark doubles as a coarse parity check (the fine-grained one lives in
-``tests/test_scu_simulator.py``).
+Two sweeps:
+
+* **Quiescent** (the PR-2 headline): the Fig. 5 barrier sweep at SFR >= 1000
+  under both engine modes.  Dominated by compute spans and clock-gated
+  waits, i.e. by the tier-1 quiescent-span skipper.  Both modes run on
+  every config and are asserted cycle-exact -- this benchmark doubles as a
+  coarse parity check (the fine-grained one lives in
+  ``tests/test_scu_simulator.py``).
+* **Contended** (the PR-4 headline): the Table-1/Fig-5 shapes at SFR < 100,
+  where every cycle carries arbitration or spin traffic, across cluster
+  sizes up to 256 cores.  This is the regime served by the vectorized
+  structure-of-arrays step and the spin-phase batch resolver; lockstep is
+  only run (and parity-asserted) on the smallest cluster -- reference-
+  stepping a contended 256-core cluster is exactly the cost the vectorized
+  engine exists to avoid.
 
     PYTHONPATH=src python -m benchmarks.engine_perf [--json PATH]
 
-The aggregate speedup is the headline number for the event-driven engine:
-the quiescent spans it skips (SFR compute runs, clock-gated idle waits)
-dominate realistic workloads, so the fast path is what makes 64-core
-clusters and dense SFR grids sweepable at all.
+The aggregate simulated-cycles-per-second numbers feed the soft throughput
+gate in ``scripts/bench_compare.py`` (warn < 1.0x, fail < 0.5x of the
+committed baseline).
 """
 
 from __future__ import annotations
@@ -27,9 +35,12 @@ from repro.sync import available_policies
 
 MODES = ("lockstep", "fastforward")
 
-# the Fig. 5 sweep restricted to SFR >= 1000 (where skipping pays off most;
-# smaller SFRs are spin-dominated and bound by the per-cycle reference path)
+# the Fig. 5 sweep restricted to SFR >= 1000 (where skipping pays off most)
 SFRS = (1000, 1600, 2500, 4000)
+
+# the contended regime: SFR < 100, arbitration/spin traffic every cycle
+SFRS_CONTENDED = (8, 32, 64)
+CONTENDED_CORES = (8, 64, 256)
 
 
 def run(
@@ -84,18 +95,111 @@ def run(
 
     if verbose:
         print(f"\n== Engine throughput ({n_cores} cores, SFR sweep >= 1000) ==")
-        print(f"{'policy':7s} {'sfr':>5s} | {'lockstep c/s':>13s} {'fastfwd c/s':>13s} {'speedup':>8s}")
+        print(f"{'policy':8s} {'sfr':>5s} | {'lockstep c/s':>13s} {'fastfwd c/s':>13s} {'speedup':>8s}")
         for row in rows:
             ls = row["lockstep"]["cycles_per_sec"]
             ff = row["fastforward"]["cycles_per_sec"]
             print(
-                f"{row['policy']:7s} {row['sfr']:5d} | {ls:13,.0f} {ff:13,.0f} "
+                f"{row['policy']:8s} {row['sfr']:5d} | {ls:13,.0f} {ff:13,.0f} "
                 f"{ff / max(ls, 1e-9):7.1f}x"
             )
         print(
             f"\naggregate: lockstep {throughput['lockstep']:,.0f} cyc/s, "
             f"fastforward {throughput['fastforward']:,.0f} cyc/s "
             f"-> {speedup:.1f}x"
+        )
+    return result
+
+
+def run_contended(
+    core_counts: Sequence[int] = CONTENDED_CORES,
+    sfrs: Sequence[int] = SFRS_CONTENDED,
+    policies: Optional[Sequence[str]] = None,
+    verbose: bool = True,
+) -> Dict:
+    """Fastforward throughput on the contended (SFR < 100) sweeps.
+
+    Parity against lockstep is asserted (and the lockstep side timed, for
+    the machine-independent ``speedup`` ratio) on the largest cluster size
+    up to 64 cores -- small enough that reference-stepping stays
+    affordable, large enough that the vectorized path carries the cycles;
+    the 128/256-core sizes are covered by the randomized cross-checks in
+    ``tests/test_scu_simulator.py``.
+    """
+    policies = tuple(policies) if policies else available_policies()
+    rows = []
+    total_cycles = 0
+    total_wall = 0.0
+    parity_cycles = 0
+    parity_fast_wall = 0.0
+    parity_lock_wall = 0.0
+    small = [n for n in core_counts if n <= 64]
+    parity_n = max(small) if small else min(core_counts)
+    for n in core_counts:
+        iters = 4 if n <= 64 else 2
+        for policy in policies:
+            for sfr in sfrs:
+                t0 = time.perf_counter()
+                r = run_barrier_bench(
+                    policy, n, sfr=sfr, iters=iters, mode="fastforward"
+                )
+                wall = time.perf_counter() - t0
+                if n == parity_n:
+                    t0 = time.perf_counter()
+                    ref = run_barrier_bench(
+                        policy, n, sfr=sfr, iters=iters, mode="lockstep"
+                    )
+                    lock_wall = time.perf_counter() - t0
+                    if ref.stats != r.stats:
+                        raise AssertionError(
+                            f"engine modes diverged on contended {policy} "
+                            f"@ n={n}, sfr={sfr}"
+                        )
+                    parity_cycles += r.cycles_total
+                    parity_fast_wall += wall
+                    parity_lock_wall += lock_wall
+                rows.append({
+                    "policy": policy,
+                    "n_cores": n,
+                    "sfr": sfr,
+                    "cycles": r.cycles_total,
+                    "wall_s": wall,
+                    "cycles_per_sec": r.cycles_total / max(wall, 1e-9),
+                })
+                total_cycles += r.cycles_total
+                total_wall += wall
+
+    result = {
+        "core_counts": list(core_counts),
+        "sfrs": list(sfrs),
+        "policies": list(policies),
+        "rows": rows,
+        "cycles": total_cycles,
+        "wall_s": total_wall,
+        "cycles_per_sec": total_cycles / max(total_wall, 1e-9),
+        # fastforward-over-lockstep on the parity-checked (smallest) cluster
+        # size: a same-run, same-machine ratio -- absolute cyc/s depends on
+        # the host, so the CI throughput gate compares this instead
+        "speedup": (parity_cycles / max(parity_fast_wall, 1e-9))
+        / max(parity_cycles / max(parity_lock_wall, 1e-9), 1e-9),
+    }
+    if verbose:
+        counts = "/".join(str(n) for n in core_counts)
+        print(f"\n== Engine throughput (contended: SFR < 100, {counts} cores) ==")
+        print(f"{'policy':8s}" + "".join(f"{n:>12d}" for n in core_counts)
+              + "   (fastforward cyc/s, aggregated over SFRs)")
+        for policy in policies:
+            vals = []
+            for n in core_counts:
+                sel = [r for r in rows if r["policy"] == policy and r["n_cores"] == n]
+                cyc = sum(r["cycles"] for r in sel)
+                wall = sum(r["wall_s"] for r in sel)
+                vals.append(cyc / max(wall, 1e-9))
+            print(f"{policy:8s}" + "".join(f"{v:12,.0f}" for v in vals))
+        print(
+            f"\ncontended aggregate: {result['cycles_per_sec']:,.0f} cyc/s; "
+            f"fastforward vs lockstep @ {parity_n} cores: "
+            f"{result['speedup']:.1f}x"
         )
     return result
 
@@ -107,6 +211,7 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=8)
     args = ap.parse_args()
     result = run(n_cores=args.n_cores, iters=args.iters)
+    result["contended"] = run_contended()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)

@@ -93,6 +93,7 @@ def main() -> int:
         roofline,
         table1_primitives,
         table2_apps,
+        work_queue,
     )
 
     results = {}
@@ -111,11 +112,17 @@ def main() -> int:
     results["chain"] = chain_pipeline.run()
 
     print("\n" + "#" * 72)
-    print("# Tier 1 -- scaling sweeps (event-driven engine: 16/32/64 cores)")
+    print("# Tier 1 -- multi-producer work queues (mutex vs SCU event FIFO)")
     print("#" * 72)
-    # --fast (the CI smoke) stops at 32 cores: the 64-core software-discipline
-    # rows are spin-bound (per-cycle path) and dominate the sweep's wall time
-    scale_counts = (16, 32) if args.fast else (16, 32, 64)
+    results["work_queue"] = work_queue.run()
+
+    print("\n" + "#" * 72)
+    print("# Tier 1 -- scaling sweeps (vectorized engine: 16..256 cores)")
+    print("#" * 72)
+    # --fast (the CI smoke) samples the decades; the full run is dense.  The
+    # 128/256-core rows are affordable because the contended path runs on
+    # the vectorized structure-of-arrays engine core.
+    scale_counts = (16, 64, 128, 256) if args.fast else (16, 32, 64, 128, 256)
     results["table1_scaling"] = _table1_scaling_json(
         table1_primitives.run_scaling(core_counts=scale_counts)
     )
@@ -124,6 +131,9 @@ def main() -> int:
         n: _fig5_json(r) for n, r in fig5_scaling.items()
     }
     results["chain_scaling"] = chain_pipeline.run_scaling(
+        core_counts=scale_counts
+    )
+    results["work_queue_scaling"] = work_queue.run_scaling(
         core_counts=scale_counts
     )
 
@@ -137,11 +147,20 @@ def main() -> int:
         if args.fast
         else engine_perf.run()
     )
+    contended = engine_perf.run_contended(
+        core_counts=(8, 64) if args.fast else engine_perf.CONTENDED_CORES
+    )
     results["engine_perf"] = {
         "cycles_per_sec": perf["cycles_per_sec"],
         "speedup": perf["speedup"],
         "n_cores": perf["n_cores"],
         "sfrs": perf["sfrs"],
+        "contended": {
+            "cycles_per_sec": contended["cycles_per_sec"],
+            "speedup": contended["speedup"],
+            "core_counts": contended["core_counts"],
+            "sfrs": contended["sfrs"],
+        },
     }
 
     print("\n" + "#" * 72)

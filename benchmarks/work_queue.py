@@ -1,0 +1,165 @@
+"""Multi-producer work-queue microbenchmark (producers x consumers x policy).
+
+P producer cores feed C consumer cores through one shared work queue; every
+registered ``repro.sync`` policy supplies its own queue discipline (see
+``repro.core.scu.programs.work_queue_programs``):
+
+  * software policies (``sw``/``tas``/``tree``/``tree_ew``/``scu``) run the
+    classic mutex-protected shared queue -- producers enqueue under the
+    lock, consumers lock/check/retry until their quota arrives; what differs
+    per policy is the mutex discipline (spin, notifier idle-wait, hardware
+    mutex) and therefore the contention and idle-energy profile,
+  * the ``fifo`` policy runs the queue natively on the SCU event FIFO:
+    producers block on ``push_wait`` (hardware backpressure, Sec. 4.3),
+    consumers clock-gate on ``pop`` -- nobody spins and nobody serializes
+    through a lock.
+
+Two read-outs: the producers-x-consumers split sweep on one cluster size
+(who wins when the queue is producer- vs consumer-bound), and the scaling
+sweep (half producers / half consumers on 16..256-core clusters).
+
+    PYTHONPATH=src python -m benchmarks.work_queue
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scu.energy import DEFAULT_ENERGY, Activity
+from repro.core.scu.programs import run_work_queue_bench
+from repro.sync import available_policies
+
+# (producers, consumers) splits on the default 8-core cluster
+SPLITS: Tuple[Tuple[int, int], ...] = ((1, 7), (2, 6), (4, 4), (6, 2))
+
+
+def _energy_nj_per_item(r) -> float:
+    return DEFAULT_ENERGY.energy_nj(Activity.per_iter(r.stats, r.iters))
+
+
+def run(
+    n_cores: int = 8,
+    items: int = 64,
+    t_produce: int = 30,
+    t_consume: int = 30,
+    splits: Optional[Sequence[Tuple[int, int]]] = None,
+    verbose: bool = True,
+) -> Dict:
+    """The producers-x-consumers split sweep over every policy."""
+    splits = list(splits) if splits is not None else list(SPLITS)
+    policies = available_policies()
+    rows: List[Dict] = []
+    for policy in policies:
+        for n_prod, n_cons in splits:
+            assert n_prod + n_cons == n_cores, (n_prod, n_cons, n_cores)
+            r = run_work_queue_bench(
+                policy, n_prod, n_cons, items=items,
+                t_produce=t_produce, t_consume=t_consume,
+            )
+            rows.append({
+                "policy": policy,
+                "producers": n_prod,
+                "consumers": n_cons,
+                "items": items,
+                "cycles_per_item": r.cycles_per_iter,
+                "overhead_cycles": r.prim_cycles,
+                "energy_nj_per_item": _energy_nj_per_item(r),
+                "gated_per_item": r.gated_core_cycles_per_iter,
+            })
+
+    results = {
+        "n_cores": n_cores,
+        "items": items,
+        "t_produce": t_produce,
+        "t_consume": t_consume,
+        "rows": rows,
+    }
+
+    if verbose:
+        print(f"\n== Work queue: {items} items, {n_cores} cores ==")
+        print(f"{'policy':8s}" + "".join(f"  {p}p/{c}c".rjust(10) for p, c in splits)
+              + "   (cycles/item)")
+        for policy in policies:
+            vals = [r for r in rows if r["policy"] == policy]
+            print(f"{policy:8s}" + "".join(
+                f"  {v['cycles_per_item']:8.1f}" for v in vals))
+        balanced = next((s for s in splits if s[0] == s[1]), splits[0])
+        best_sw = min(
+            (r["cycles_per_item"] for r in rows
+             if r["policy"] != "fifo"
+             and (r["producers"], r["consumers"]) == balanced),
+            default=None,
+        )
+        fifo_c = next(
+            (r["cycles_per_item"] for r in rows
+             if r["policy"] == "fifo"
+             and (r["producers"], r["consumers"]) == balanced),
+            None,
+        )
+        if best_sw is not None and fifo_c:
+            print(
+                f"\n{balanced[0]}p/{balanced[1]}c split: fifo {fifo_c:.1f} "
+                f"cyc/item vs best lock-based {best_sw:.1f} "
+                f"({best_sw / fifo_c - 1:+.1%})"
+            )
+    return results
+
+
+# Policies measured on the very large (128/256-core) queues: the herd on a
+# single lock makes the idle-wait disciplines O(n) wakeups per item -- we
+# keep one spin baseline, the hardware mutex and the native FIFO queue and
+# drop the rest (same rationale as chain_pipeline.SCALING_LARGE_POLICIES).
+SCALING_LARGE_POLICIES = ("scu", "sw", "fifo")
+SCALING_LARGE_FROM = 128
+
+
+def run_scaling(
+    core_counts: Sequence[int] = (16, 32, 64, 128, 256),
+    items_per_core: int = 2,
+    t_produce: int = 30,
+    t_consume: int = 30,
+    verbose: bool = True,
+) -> List[Dict]:
+    """Half-producers/half-consumers splits on MemPool-scale clusters.
+
+    Lock-based queues collapse as every core contends on one mutex; the
+    event-FIFO queue keeps moving one item per cycle per port regardless of
+    the core count."""
+    rows: List[Dict] = []
+    for n in core_counts:
+        items = items_per_core * n
+        policies = (
+            [p for p in available_policies() if p in SCALING_LARGE_POLICIES]
+            if n >= SCALING_LARGE_FROM
+            else available_policies()
+        )
+        for policy in policies:
+            r = run_work_queue_bench(
+                policy, n // 2, n - n // 2, items=items,
+                t_produce=t_produce, t_consume=t_consume,
+            )
+            rows.append({
+                "policy": policy,
+                "n_cores": n,
+                "items": items,
+                "cycles_per_item": r.cycles_per_iter,
+            })
+    if verbose:
+        counts = "/".join(str(n) for n in core_counts)
+        print(f"\n== Work queue (scaling): cycles/item @ {counts} cores ==")
+        print("policy  " + "".join(f"{n:>10d}" for n in core_counts))
+        for policy in available_policies():
+            vals = []
+            for n in core_counts:
+                r = next((x for x in rows
+                          if x["policy"] == policy and x["n_cores"] == n), None)
+                vals.append(
+                    f"{r['cycles_per_item']:10.1f}" if r else f"{'-':>10s}"
+                )
+            print(f"{policy:8s}" + "".join(vals))
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run_scaling()

@@ -75,7 +75,60 @@ def extract_metrics(results: Dict) -> Metrics:
     for row in results.get("chain_scaling", []):
         key = f"chain_scaling/{row['policy']}@{row['n_cores']}/cycles_per_item"
         m[key] = _num(row["cycles_per_item"])
+    for row in results.get("work_queue", {}).get("rows", []):
+        key = (
+            f"work_queue/{row['policy']}/p{row['producers']}c{row['consumers']}"
+            "/cycles_per_item"
+        )
+        m[key] = _num(row["cycles_per_item"])
+    for row in results.get("work_queue_scaling", []):
+        key = f"work_queue_scaling/{row['policy']}@{row['n_cores']}/cycles_per_item"
+        m[key] = _num(row["cycles_per_item"])
     return m
+
+
+# Engine-throughput keys (higher is better), gated *softly*.  Both are
+# fastforward-over-lockstep speedups measured in the same run on the same
+# hardware -- absolute cyc/s depends on the machine that generated the
+# committed baseline, which a slower-but-healthy CI runner would fail; a
+# same-run ratio only collapses when the fast path itself regresses.
+THROUGHPUT_KEYS = (
+    ("engine_perf/speedup",
+     lambda r: r.get("engine_perf", {}).get("speedup")),
+    ("engine_perf/contended/speedup",
+     lambda r: r.get("engine_perf", {}).get("contended", {}).get("speedup")),
+)
+
+
+def compare_throughput(
+    baseline: Dict, current: Dict, fail_ratio: float = 0.5, warn_ratio: float = 1.0
+) -> Tuple[List[str], List[str]]:
+    """Soft gate on the engine's fastforward-vs-lockstep speedups.
+
+    Returns (failures, warnings): a current speedup below ``fail_ratio`` x
+    baseline fails, below ``warn_ratio`` x baseline only warns.
+    """
+    failures: List[str] = []
+    warnings: List[str] = []
+    for key, get in THROUGHPUT_KEYS:
+        base, cur = get(baseline), get(current)
+        if base is None:
+            continue  # metric not in the committed baseline yet
+        if cur is None:
+            failures.append(f"{key}: disappeared from the artifact")
+            continue
+        ratio = cur / max(float(base), 1e-9)
+        if ratio < fail_ratio:
+            failures.append(
+                f"{key}: {float(base):.1f}x -> {float(cur):.1f}x "
+                f"({ratio:.2f}x of baseline, < {fail_ratio:.1f}x hard floor)"
+            )
+        elif ratio < warn_ratio:
+            warnings.append(
+                f"{key}: {float(base):.1f}x -> {float(cur):.1f}x "
+                f"({ratio:.2f}x of baseline; wall-clock-derived, not failing)"
+            )
+    return failures, warnings
 
 
 def compare(
@@ -137,9 +190,12 @@ def validate_schema(results: Dict) -> List[str]:
             errors.append(msg)
         return cond
 
-    for key in ("table1", "table1_scaling", "table2", "chain_scaling"):
+    for key in (
+        "table1", "table1_scaling", "table2", "chain_scaling",
+        "work_queue_scaling",
+    ):
         need(isinstance(results.get(key), list), f"{key}: missing or not a list")
-    for key in ("fig5", "fig5_scaling", "chain", "engine_perf"):
+    for key in ("fig5", "fig5_scaling", "chain", "work_queue", "engine_perf"):
         need(isinstance(results.get(key), dict), f"{key}: missing or not a dict")
     need(isinstance(results.get("jax_barriers_ok"), bool),
          "jax_barriers_ok: missing or not a bool")
@@ -206,6 +262,17 @@ def validate_schema(results: Dict) -> List[str]:
         for field in ("sfr", "depth", "cycles_per_item", "energy_nj_per_item"):
             need(_is_num(row.get(field)), f"{ctx}.{field}: expected finite number")
 
+    wq = results.get("work_queue") or {}
+    need(isinstance(wq.get("rows"), list), "work_queue.rows: missing or not a list")
+    for i, row in enumerate(wq.get("rows") or []):
+        ctx = f"work_queue.rows[{i}]"
+        if not need(isinstance(row, dict), f"{ctx}: not a dict"):
+            continue
+        need(isinstance(row.get("policy"), str), f"{ctx}.policy: not a str")
+        for field in ("producers", "consumers", "cycles_per_item",
+                      "energy_nj_per_item"):
+            need(_is_num(row.get(field)), f"{ctx}.{field}: expected finite number")
+
     perf = results.get("engine_perf") or {}
     cps = perf.get("cycles_per_sec")
     if need(isinstance(cps, dict), "engine_perf.cycles_per_sec: not a dict"):
@@ -213,6 +280,13 @@ def validate_schema(results: Dict) -> List[str]:
             need(_is_num(cps.get(mode)),
                  f"engine_perf.cycles_per_sec.{mode}: expected finite number")
     need(_is_num(perf.get("speedup")), "engine_perf.speedup: expected finite number")
+    contended = perf.get("contended")
+    if need(isinstance(contended, dict),
+            "engine_perf.contended: missing or not a dict"):
+        need(_is_num(contended.get("cycles_per_sec")),
+             "engine_perf.contended.cycles_per_sec: expected finite number")
+        need(_is_num(contended.get("speedup")),
+             "engine_perf.contended.speedup: expected finite number")
     return errors
 
 
@@ -243,9 +317,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 2
 
     regressions, notes = compare(baseline, current, threshold=args.threshold)
+    perf_fails, perf_warns = compare_throughput(baseline, current)
+    regressions += perf_fails
     n_compared = len(extract_metrics(baseline))
     for note in notes:
         print(f"  note  {note}")
+    for warn in perf_warns:
+        print(f"  WARN  {warn}")
     if regressions:
         print(
             f"[bench_compare] {len(regressions)} regression(s) over "
@@ -256,7 +334,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1
     print(
         f"[bench_compare] OK: {n_compared} cycle-exact metrics within "
-        f"{args.threshold:.0%} of baseline"
+        f"{args.threshold:.0%} of baseline "
+        f"(+ engine throughput soft gate: {len(perf_warns)} warning(s))"
     )
     return 0
 

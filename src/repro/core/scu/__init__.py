@@ -1,7 +1,7 @@
 """Tier-1 faithful reproduction: cycle-accurate SCU cluster simulator."""
 
 from .energy import DEFAULT_ENERGY, Activity, EnergyModel, calibrate
-from .engine import Cluster, ClusterStats, Compute, CoreState, Mem, Scu
+from .engine import Cluster, ClusterStats, Compute, CoreState, Mem, Poll, Scu
 from .extensions import Barrier, EventFifo, Mutex, Notifier
 from .primitives import (
     DEFAULT_COSTS,
@@ -22,7 +22,7 @@ from .programs import (
     run_mutex_bench,
     run_nop_bench,
 )
-from .scu_unit import EV, SCU, BaseUnit
+from .scu_unit import EV, SCU, BaseUnit, BaseUnits
 from .apps import (
     APPS,
     PIPELINED_APPS,
@@ -40,6 +40,8 @@ __all__ = [
     "Barrier",
     "BarrierState",
     "BaseUnit",
+    "BaseUnits",
+    "Poll",
     "Cluster",
     "ClusterStats",
     "Compute",

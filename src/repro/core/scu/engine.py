@@ -18,9 +18,9 @@ The cluster consists of
     :mod:`repro.core.scu.extensions`.
 
 Programs are Python generators that yield micro-ops (:class:`Compute`,
-:class:`Mem`, :class:`Scu`); the engine resolves arbitration, SCU event
-generation, sleep/wake-up sequencing and clock gating exactly as described in
-Sec. 4/5 and Fig. 4 of the paper.
+:class:`Mem`, :class:`Scu`, :class:`Poll`); the engine resolves arbitration,
+SCU event generation, sleep/wake-up sequencing and clock gating exactly as
+described in Sec. 4/5 and Fig. 4 of the paper.
 
 Accounting distinguishes *active* core cycles (clock enabled) from *gated*
 cycles -- the quantity behind the paper's energy results.
@@ -29,24 +29,50 @@ Two execution modes produce bit-exact identical :class:`ClusterStats`:
 
 ``mode="lockstep"``
     The reference model: :meth:`Cluster.step` advances the whole cluster one
-    clock cycle at a time, evaluating every phase every cycle.
+    clock cycle at a time with plain per-core Python loops, evaluating every
+    phase every cycle.  Deliberately unvectorized -- this is the readable,
+    obviously-correct implementation every fast path is cross-checked
+    against.
 
 ``mode="fastforward"`` (default)
-    Event-driven fast path.  Between steps the scheduler computes
-    :meth:`Cluster.next_event_bound` -- a provably-safe number of cycles
-    during which *nothing observable can happen*: every core is either
-    burning a :class:`Compute` span (``busy`` countdown), clock-gated asleep
-    with no buffered wake event, or inside its wake countdown, and no SCU
-    extension comparator can fire without a new core transaction
-    (:meth:`repro.core.scu.scu_unit.SCU.next_event_bound`).  The engine then
-    jumps the clock by that whole span, accounting per-core stats in
-    O(n_cores) per span instead of O(n_cores) per cycle.  Quiescent regions
-    (large SFRs, clock-gated waits under the SCU) dominate realistic
-    workloads, so this is orders of magnitude faster; any cycle in which an
-    arbiter, SCU grant, or comparator could act is executed through the same
-    :meth:`Cluster.step` as lockstep mode, so the two modes agree cycle-for-
-    cycle (enforced by ``tests/test_scu_simulator.py`` golden + cross-check
-    tests).
+    The event-driven engine, organized as **three resolution tiers** (each
+    cycle is resolved by the cheapest tier that can prove it exact):
+
+    1. *Quiescent spans*: :meth:`Cluster.next_event_bound` computes a
+       provably-safe number of cycles during which nothing observable can
+       happen -- every core is burning a :class:`Compute` span, clock-gated
+       asleep with no buffered wake event, or inside its wake countdown, and
+       no SCU extension comparator can fire without a new core transaction
+       (:meth:`repro.core.scu.scu_unit.SCU.next_event_bound`).  The engine
+       jumps the clock by the whole span with O(n_cores) span-based stats.
+    2. *Spin-phase batch resolution* (:meth:`Cluster._resolve_spin_phase`):
+       when every awake core sits inside a deterministic :class:`Poll` loop
+       (fixed periodic bank traffic) while the rest are asleep or counting
+       down, and no SCU comparator is armed, the cluster's evolution until
+       the next spectator deadline is fully engine-determined.  The
+       resolver replays exactly the per-bank round-robin outcomes with
+       per-*grant* instead of per-cycle work -- queue-wait spans, retry
+       shadows and the implied stall/conflict accounting settle in closed
+       form per segment, and empty cycles between re-polls are skipped
+       outright.  Long phases additionally run a period detector
+       (configuration hashing over the relative spinner state, the involved
+       round-robin pointers and the polled TCDM words): a repeat proves
+       periodicity and the remaining horizon collapses into one multiply of
+       the per-period stat deltas -- the closed form for "one core computes
+       for 10^5 cycles while everyone else spins".
+    3. *Full steps*: any cycle in which a generator advance, SCU grant, or
+       comparator could act runs through a full cluster step.  On clusters
+       with ``n_cores >= VEC_MIN_CORES`` this step is the **vectorized
+       structure-of-arrays core** (:class:`_VecState`): per-core scheduler
+       state and stat counters live in numpy arrays and the per-cycle phases
+       (countdowns, TCDM round-robin arbitration with per-bank winner
+       election via one lexsort, elw grant scans against the SCU's event
+       vectors, accounting) are numpy kernels over all cores at once.
+       Smaller clusters use the same scalar step as lockstep mode (numpy
+       overhead would dominate at 8 cores).
+
+    Parity with lockstep is bit-exact and enforced by golden values plus
+    randomized cross-checks up to 256 cores in ``tests/test_scu_simulator.py``.
 """
 
 from __future__ import annotations
@@ -55,10 +81,13 @@ import dataclasses
 import enum
 from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 
+import numpy as np
+
 __all__ = [
     "Compute",
     "Mem",
     "Scu",
+    "Poll",
     "CoreState",
     "CoreStats",
     "ClusterStats",
@@ -97,6 +126,42 @@ class Mem:
 
 
 @dataclasses.dataclass
+class Poll:
+    """A declarative spin/poll loop on one TCDM word, resolved engine-native.
+
+    Stands in -- cycle- and stats-exact -- for the classic expanded loop::
+
+        while True:
+            v = yield Mem(kind, addr)     # "lw" poll or "tas" lock attempt
+            yield Compute(hit_cycles)     # value check after the load
+            if v == until:
+                break
+            yield Compute(miss_cycles - hit_cycles)   # branch back, retry
+
+    The engine re-polls without ever resuming the generator on a miss: each
+    granted access returning ``v != until`` burns ``miss_cycles`` ACTIVE
+    cycles (plus the TAS busy time for ``kind="tas"``) and re-enters the
+    bank queue; the access returning ``until`` burns ``hit_cycles`` and then
+    resumes the program with that value.  Instruction accounting mirrors the
+    expanded loop: ``miss_instr`` instructions per retry round on top of the
+    re-issued load, ``hit_instr`` on the exit path.
+
+    Declaring the spin (instead of expanding it) is what enables the
+    fast-forward engine's *spin-phase batch resolution*: a pending ``Poll``
+    is a complete description of the core's behaviour until the polled word
+    changes, with no generator state hidden from the scheduler.
+    """
+
+    kind: str
+    addr: int
+    until: int
+    hit_cycles: int
+    miss_cycles: int
+    hit_instr: int = 1
+    miss_instr: int = 2
+
+
+@dataclasses.dataclass
 class Scu:
     """A transaction on the private core<->SCU link (single cycle, Sec. 4.4).
 
@@ -124,6 +189,17 @@ class CoreState(enum.Enum):
     SLEEP = 3  # clock gated by the SCU
     WAKING = 4  # event seen; grant/response sequencing (Fig. 4 right)
     DONE = 5
+
+
+# integer state codes for the structure-of-arrays engine (== enum values)
+_ACTIVE = CoreState.ACTIVE.value
+_STALL_MEM = CoreState.STALL_MEM.value
+_STALL_SCU = CoreState.STALL_SCU.value
+_SLEEP = CoreState.SLEEP.value
+_WAKING = CoreState.WAKING.value
+_DONE = CoreState.DONE.value
+
+_STATE_BY_CODE = {s.value: s for s in CoreState}
 
 
 @dataclasses.dataclass
@@ -173,6 +249,31 @@ class ClusterStats:
         return sum(c.scu_accesses for c in self.cores)
 
 
+_COUNTERS = (
+    "active_cycles",
+    "comp_cycles",
+    "wait_cycles",
+    "gated_cycles",
+    "stall_cycles",
+    "instructions",
+    "tcdm_accesses",
+    "tas_accesses",
+    "scu_accesses",
+)
+# row indices into _VecState.counter_block
+(
+    _C_ACTIVE,
+    _C_COMP,
+    _C_WAIT,
+    _C_GATED,
+    _C_STALL,
+    _C_INSTR,
+    _C_TCDM,
+    _C_TAS,
+    _C_SCU,
+) = range(len(_COUNTERS))
+
+
 class _Core:
     """Execution context of one PE, including its scheduler state.
 
@@ -183,32 +284,48 @@ class _Core:
     :meth:`fast_forward` applies a whole span of it at once (span-based
     accounting); the lockstep path consumes the same state one cycle at a
     time through :meth:`Cluster._issue`.
+
+    Stat counters are plain attributes (structure-of-scalars); the
+    :attr:`stats` property materializes a :class:`CoreStats` snapshot on
+    demand, so programs sampling their own counters mid-run always see
+    current values in either engine mode.
     """
 
     __slots__ = (
         "cid",
         "gen",
+        "started",
         "state",
         "busy",
         "pending",
         "resume_value",
         "wake_countdown",
         "sleep_entry",
-        "stats",
         "elw_issued",
-    )
+        "finished_at",
+    ) + _COUNTERS
 
     def __init__(self, cid: int, gen: Generator):
         self.cid = cid
         self.gen = gen
+        self.started = False
         self.state = CoreState.ACTIVE
-        self.busy = 0  # remaining Compute cycles
-        self.pending: Optional[Any] = None  # outstanding Mem/Scu op
+        self.busy = 0  # remaining Compute (or Poll grant-shadow) cycles
+        self.pending: Optional[Any] = None  # outstanding Mem/Poll/Scu op
         self.resume_value: int = 0  # data returned to the generator
         self.wake_countdown = 0
         self.sleep_entry = 0  # busy-release window before clock gating
-        self.stats = CoreStats()
         self.elw_issued = False  # extension trigger-once guard (Sec. 5)
+        self.finished_at: Optional[int] = None
+        for name in _COUNTERS:
+            setattr(self, name, 0)
+
+    @property
+    def stats(self) -> CoreStats:
+        return CoreStats(
+            finished_at=self.finished_at,
+            **{name: getattr(self, name) for name in _COUNTERS},
+        )
 
     # ------------------------------------------------------------ scheduler
     def quiescent_bound(self, scu) -> Optional[int]:
@@ -219,7 +336,8 @@ class _Core:
         Safe bounds per state (mirrors one lockstep :meth:`Cluster._issue`):
 
         * ``ACTIVE`` with ``busy=k>0`` -- k pure countdown cycles; the
-          generator advance happens on the following step.
+          generator advance (or :class:`Poll` re-issue) happens on the
+          following step.
         * ``WAKING`` with ``wake_countdown=w>1`` -- w-1 countdown cycles; the
           step where the countdown reaches 0 resumes the generator.
         * ``SLEEP`` -- indefinite, unless the waited-on event is already
@@ -251,15 +369,126 @@ class _Core:
         state = self.state
         if state is CoreState.ACTIVE:
             self.busy -= span
-            self.stats.active_cycles += span
-            self.stats.comp_cycles += span
+            self.active_cycles += span
+            self.comp_cycles += span
         elif state is CoreState.WAKING:
             self.wake_countdown -= span
-            self.stats.active_cycles += span
-            self.stats.wait_cycles += span
+            self.active_cycles += span
+            self.wait_cycles += span
         elif state is CoreState.SLEEP:
-            self.stats.gated_cycles += span
+            self.gated_cycles += span
         # DONE: no clock, no accounting
+
+
+class _VecState:
+    """Structure-of-arrays mirror-free core state for the vectorized engine.
+
+    Owns the scheduler state and stat counters of every core as numpy
+    arrays; :class:`_VecCore` objects are thin per-core views so the shared
+    scalar helpers (:meth:`Cluster._advance`, SCU servicing) and programs
+    reading ``cluster.cores[cid]`` keep working unchanged.
+    """
+
+    __slots__ = (
+        "n",
+        "state",
+        "busy",
+        "wake",
+        "sleep_entry",
+        "pend_bank",
+        "has_poll",
+        "elw",
+        "counter_block",
+        "counters",
+        "finished_at",
+    )
+
+    def __init__(self, n: int):
+        self.n = n
+        self.state = np.zeros(n, dtype=np.int64)  # CoreState codes
+        self.busy = np.zeros(n, dtype=np.int64)
+        self.wake = np.zeros(n, dtype=np.int64)
+        self.sleep_entry = np.zeros(n, dtype=np.int64)
+        self.pend_bank = np.full(n, -1, dtype=np.int64)  # bank of pending Mem/Poll
+        self.has_poll = np.zeros(n, dtype=bool)  # pending op is a Poll
+        self.elw = np.zeros(n, dtype=bool)  # elw_issued
+        # one (n_counters, n_cores) block so snapshots/deltas are single
+        # fancy-index operations; the dict maps names to row views
+        self.counter_block = np.zeros((len(_COUNTERS), n), dtype=np.int64)
+        self.counters = {
+            name: self.counter_block[i] for i, name in enumerate(_COUNTERS)
+        }
+        self.finished_at: List[Optional[int]] = [None] * n
+
+
+def _vec_scalar_property(array_name: str):
+    def get(self):
+        return int(getattr(self._V, array_name)[self.cid])
+
+    def set(self, value):
+        getattr(self._V, array_name)[self.cid] = value
+
+    return property(get, set)
+
+
+def _vec_counter_property(counter: str):
+    def get(self):
+        return int(self._V.counters[counter][self.cid])
+
+    def set(self, value):
+        self._V.counters[counter][self.cid] = value
+
+    return property(get, set)
+
+
+class _VecCore(_Core):
+    """Per-core view into a :class:`_VecState` (vectorized engine mode).
+
+    Scheduler fields and counters resolve into the shared arrays; everything
+    idiosyncratic (the program generator, pending op object, resume value)
+    stays a per-object attribute.  Property access is slower than a slot --
+    this view is only touched on the cold paths (generator advances, SCU
+    servicing, tests/programs introspecting a core); the per-cycle kernels
+    operate on the arrays directly.
+    """
+
+    __slots__ = ("_V",)
+
+    def __init__(self, cid: int, gen: Generator, vec: _VecState):
+        self._V = vec
+        super().__init__(cid, gen)
+
+    busy = _vec_scalar_property("busy")
+    wake_countdown = _vec_scalar_property("wake")
+    sleep_entry = _vec_scalar_property("sleep_entry")
+
+    @property
+    def state(self) -> CoreState:
+        return _STATE_BY_CODE[int(self._V.state[self.cid])]
+
+    @state.setter
+    def state(self, value: CoreState) -> None:
+        self._V.state[self.cid] = value.value
+
+    @property
+    def elw_issued(self) -> bool:
+        return bool(self._V.elw[self.cid])
+
+    @elw_issued.setter
+    def elw_issued(self, value: bool) -> None:
+        self._V.elw[self.cid] = value
+
+    @property
+    def finished_at(self) -> Optional[int]:
+        return self._V.finished_at[self.cid]
+
+    @finished_at.setter
+    def finished_at(self, value: Optional[int]) -> None:
+        self._V.finished_at[self.cid] = value
+
+
+for _name in _COUNTERS:
+    setattr(_VecCore, _name, _vec_counter_property(_name))
 
 
 class Cluster:
@@ -276,10 +505,12 @@ class Cluster:
         caller so extensions are configurable).  May be ``None`` for purely
         software experiments.
     mode:
-        ``"fastforward"`` (default) -- event-driven engine that skips
-        quiescent cycles in O(n_cores) spans; ``"lockstep"`` -- the
-        cycle-by-cycle reference model.  Both produce bit-exact identical
-        :class:`ClusterStats` (see module docstring).
+        ``"fastforward"`` (default) -- event-driven engine with three
+        resolution tiers (quiescent span / spin-phase batch / full step; the
+        full step is the vectorized structure-of-arrays kernel on clusters
+        with at least :attr:`VEC_MIN_CORES` cores); ``"lockstep"`` -- the
+        unvectorized cycle-by-cycle reference model.  Both produce bit-exact
+        identical :class:`ClusterStats` (see module docstring).
     """
 
     MODES = ("fastforward", "lockstep")
@@ -292,6 +523,22 @@ class Cluster:
     # synchronization point (Sec. 5, Fig. 4).
     SLEEP_ENTRY_CYCLES = 1
     WAKE_CYCLES = 4
+
+    # Minimum cluster size for the numpy kernels: below this the fixed
+    # per-numpy-call overhead exceeds the per-core Python loop it replaces,
+    # so small fastforward clusters keep the scalar step (still tiered).
+    VEC_MIN_CORES = 16
+
+    # Spin-phase batch resolution: phases expected to outlast this many
+    # cycles additionally run the period detector, which can collapse the
+    # remaining horizon into one closed-form multiply (see
+    # :meth:`_resolve_spin_phase`).  Short phases are resolved grant-by-grant
+    # without paying for configuration hashing.
+    SPIN_PERIOD_MIN_HORIZON = 64
+    # ... and the detector gives up after this many distinct configurations
+    # (a phase whose period is longer is replayed grant-by-grant; the memo
+    # must not grow unboundedly on pathological rotations).
+    SPIN_PERIOD_MEMO_LIMIT = 4096
 
     def __init__(
         self,
@@ -306,54 +553,81 @@ class Cluster:
         self.n_banks = banking_factor * n_cores
         self.scu = scu
         self.mode = mode
+        self.vectorized = mode == "fastforward" and n_cores >= self.VEC_MIN_CORES
         if scu is not None:
             scu.attach(self)
         self.tcdm: Dict[int, int] = {}
-        self._bank_locked_until = [0] * self.n_banks  # TAS write-back lockout
-        self._rr = [0] * self.n_banks  # per-bank round-robin pointers
+        self._rr = np.zeros(self.n_banks, dtype=np.int64)  # round-robin ptrs
         self.cores: List[_Core] = []
+        self._vec: Optional[_VecState] = None
         self._n_done = 0
         self.cycle = 0
+        self.max_cycles = 0  # horizon of the current run()
         self.stats = ClusterStats()
-        self._trace: List[Tuple[int, int, str]] = []
-        self.trace_enabled = False
         # fast-forward diagnostics (engine-internal; never part of
         # ClusterStats so the two modes stay bit-exact comparable)
-        self.ff_spans = 0  # number of multi-cycle jumps taken
+        self.ff_spans = 0  # number of quiescent-span jumps taken
         self.ff_cycles = 0  # cycles covered by those jumps
+        self.ff_batch_spans = 0  # number of spin-phase batch jumps taken
+        self.ff_batch_cycles = 0  # cycles covered by those jumps
 
     # ------------------------------------------------------------------ api
     def load(self, programs: List[Program]) -> None:
         assert len(programs) == self.n_cores
-        self.cores = [_Core(i, prog(self, i)) for i, prog in enumerate(programs)]
-        self.stats = ClusterStats(cores=[c.stats for c in self.cores])
+        if self.vectorized:
+            self._vec = _VecState(self.n_cores)
+            self.cores = [
+                _VecCore(i, prog(self, i), self._vec)
+                for i, prog in enumerate(programs)
+            ]
+        else:
+            self._vec = None
+            self.cores = [_Core(i, prog(self, i)) for i, prog in enumerate(programs)]
+        self.stats = ClusterStats()
         self._n_done = 0
 
     def run(self, max_cycles: int = 10_000_000) -> ClusterStats:
-        fast = self.mode == "fastforward"
+        self.max_cycles = max_cycles
+        try:
+            if self.mode == "fastforward":
+                self._run_fast(max_cycles)
+            else:
+                while self._n_done < self.n_cores:
+                    if self.cycle >= max_cycles:
+                        self._raise_timeout(max_cycles)
+                    self.step()
+        finally:
+            self.stats.cycles = self.cycle
+            self.stats.cores = [c.stats for c in self.cores]
+        return self.stats
+
+    def _raise_timeout(self, max_cycles: int) -> None:
+        raise RuntimeError(
+            f"cluster did not finish within {max_cycles} cycles "
+            f"(states: {[c.state.name for c in self.cores]})"
+        )
+
+    def _run_fast(self, max_cycles: int) -> None:
+        step = self._step_vec if self.vectorized else self.step
         while self._n_done < self.n_cores:
             if self.cycle >= max_cycles:
-                raise RuntimeError(
-                    f"cluster did not finish within {max_cycles} cycles "
-                    f"(states: {[c.state.name for c in self.cores]})"
-                )
-            if fast:
-                bound = self.next_event_bound()
-                if bound is None:
-                    # deadlock: every core is gated with no wake event in
-                    # sight -- burn to the cap so the failure mode (and the
-                    # cycle count it reports) matches lockstep exactly
-                    bound = max_cycles - self.cycle
-                if bound > 0:
-                    self.fast_forward(min(bound, max_cycles - self.cycle))
-                    continue
-            self.step()
-        self.stats.cycles = self.cycle
-        return self.stats
+                self._raise_timeout(max_cycles)
+            bound = self.next_event_bound()
+            if bound is None:
+                # deadlock: every core is gated with no wake event in
+                # sight -- burn to the cap so the failure mode (and the
+                # cycle count it reports) matches lockstep exactly
+                bound = max_cycles - self.cycle
+            if bound > 0:
+                self.fast_forward(min(bound, max_cycles - self.cycle))
+                continue
+            if self._resolve_spin_phase():
+                continue
+            step()
 
     # ---------------------------------------------------------------- cycle
     def step(self) -> None:
-        """Advance the whole cluster by one clock cycle."""
+        """Advance the whole cluster by one clock cycle (scalar reference)."""
         # Phase 0: extension comparators are registered -- events caused by
         # the *previous* cycle's triggers become visible in the buffers now.
         if self.scu is not None:
@@ -377,26 +651,27 @@ class Cluster:
 
         # Phase 5: accounting.
         for core in self.cores:
-            if core.state is CoreState.DONE:
+            state = core.state
+            if state is CoreState.DONE:
                 continue
-            if core.state is CoreState.SLEEP:
-                core.stats.gated_cycles += 1
+            if state is CoreState.SLEEP:
+                core.gated_cycles += 1
             else:
-                core.stats.active_cycles += 1
-                if core.state is CoreState.ACTIVE:
-                    core.stats.comp_cycles += 1
+                core.active_cycles += 1
+                if state is CoreState.ACTIVE:
+                    core.comp_cycles += 1
                 else:
                     # clocked but held: LINT stall, elw grant window, wake
-                    core.stats.wait_cycles += 1
-                    if core.state is CoreState.STALL_MEM:
-                        core.stats.stall_cycles += 1
+                    core.wait_cycles += 1
+                    if state is CoreState.STALL_MEM:
+                        core.stall_cycles += 1
         self.cycle += 1
 
     # ----------------------------------------------------- fast-forward path
     def next_event_bound(self) -> Optional[int]:
         """Number of cycles that can be skipped before anything observable
-        can happen; 0 forces a full :meth:`step`, ``None`` means no internal
-        event is ever due (every core gated/done and no comparator armed).
+        can happen; 0 forces a full step, ``None`` means no internal event is
+        ever due (every core gated/done and no comparator armed).
 
         The bound is the min over the per-core countdown bounds
         (:meth:`_Core.quiescent_bound`) and the SCU extension bound
@@ -404,6 +679,8 @@ class Cluster:
         are pure comparators over state written by core transactions, so if
         none can fire now and no core acts, none can fire during the span.
         """
+        if self.vectorized:
+            return self._next_event_bound_vec()
         # cores first: during contention phases the first stalled core
         # short-circuits the scan before any extension comparator is touched
         bound: Optional[int] = None
@@ -425,35 +702,628 @@ class Cluster:
                     bound = b
         return bound
 
+    def _next_event_bound_vec(self) -> Optional[int]:
+        V = self._vec
+        st = V.state
+        active = st == _ACTIVE
+        waking = st == _WAKING
+        # any transient state or imminent advance forces a step now
+        if (
+            np.any(st == _STALL_MEM)
+            or np.any(st == _STALL_SCU)
+            or np.any(active & (V.busy <= 0))
+            or np.any(waking & (V.wake <= 1))
+        ):
+            return 0
+        bound: Optional[int] = None
+        if np.any(active):
+            bound = int(V.busy[active].min())
+        if np.any(waking):
+            w = int(V.wake[waking].min()) - 1
+            if bound is None or w < bound:
+                bound = w
+        scu = self.scu
+        if scu is not None:
+            sleeping = np.nonzero(st == _SLEEP)[0]
+            if sleeping.size and scu.elw_any_grantable(sleeping):
+                return 0
+            b = scu.next_event_bound()
+            if b is not None:
+                if b <= 0:
+                    return 0
+                if bound is None or b < bound:
+                    bound = b
+        return bound
+
     def fast_forward(self, span: int) -> None:
         """Jump ``span`` quiescent cycles: counters and stats advance in one
-        O(n_cores) span-based update, no arbitration / SCU phases run (the
-        scheduler proved none could act -- see :meth:`next_event_bound`)."""
-        for core in self.cores:
-            core.fast_forward(span)
+        span-based update, no arbitration / SCU phases run (the scheduler
+        proved none could act -- see :meth:`next_event_bound`)."""
+        if self.vectorized:
+            V = self._vec
+            st = V.state
+            active = st == _ACTIVE
+            waking = st == _WAKING
+            sleeping = st == _SLEEP
+            V.busy[active] -= span
+            V.wake[waking] -= span
+            clocked = active | waking
+            V.counters["active_cycles"][clocked] += span
+            V.counters["comp_cycles"][active] += span
+            V.counters["wait_cycles"][waking] += span
+            V.counters["gated_cycles"][sleeping] += span
+        else:
+            for core in self.cores:
+                core.fast_forward(span)
         self.cycle += span
         self.ff_spans += 1
         self.ff_cycles += span
+
+    # --------------------------------------------- spin-phase batch resolver
+    def _spin_participants_vec(self) -> Optional[np.ndarray]:
+        """Vectorized eligibility check: participant cids, or ``None``."""
+        V = self._vec
+        st = V.state
+        if (st == _STALL_SCU).any():
+            return None
+        has_poll = V.has_poll
+        stalled = st == _STALL_MEM
+        if (stalled & ~has_poll).any():
+            return None  # a plain Mem transaction is in flight
+        part = has_poll & (stalled | (st == _ACTIVE))
+        if not part.any():
+            return None
+        if ((st == _ACTIVE) & (V.busy <= 0) & ~part).any():
+            return None  # generator advance due this cycle
+        waking = st == _WAKING
+        if waking.any() and (waking & (V.wake <= 1)).any():
+            return None
+        scu = self.scu
+        if scu is not None:
+            if scu.next_event_bound() is not None:
+                return None
+            sleeping = np.nonzero(st == _SLEEP)[0]
+            if sleeping.size and scu.elw_any_grantable(sleeping):
+                return None
+        return np.nonzero(part)[0]
+
+    def _spin_participants(self) -> Optional[List[_Core]]:
+        """The polling cores of an eligible spin phase, or ``None``.
+
+        A spin phase requires every non-DONE core to be one of
+
+        * a *participant*: a pending :class:`Poll` (requesting the bank or
+          counting down a retry shadow) -- engine-deterministic until the
+          polled word changes;
+        * a *spectator*: a pure countdown (``Compute`` span, wake sequencing
+          with at least one safe cycle left) or clock-gated sleep with no
+          buffered wake event;
+
+        and no armed SCU comparator.  Under those conditions the only state
+        evolving is the participants' round-robin rotation -- periodic, and
+        therefore batch-resolvable.
+        """
+        scu = self.scu
+        participants: List[_Core] = []
+        for core in self.cores:
+            state = core.state
+            if state is CoreState.DONE:
+                continue
+            pending = core.pending
+            if isinstance(pending, Poll) and state in (
+                CoreState.STALL_MEM,
+                CoreState.ACTIVE,
+            ):
+                participants.append(core)
+                continue
+            if state is CoreState.ACTIVE:
+                if core.busy <= 0:
+                    return None  # generator advance due this cycle
+            elif state is CoreState.WAKING:
+                if core.wake_countdown <= 1:
+                    return None
+            elif state is CoreState.SLEEP:
+                if scu is None or scu.elw_would_grant(core.cid, pending.addr):
+                    return None
+            else:  # STALL_SCU or anything mid-transaction
+                return None
+        if not participants:
+            return None
+        if scu is not None and scu.next_event_bound() is not None:
+            return None
+        return participants
+
+    def _resolve_spin_phase(self) -> bool:
+        """Tier-2 resolution: batch-resolve a pure spin/poll phase.
+
+        When every awake core is inside a :class:`Poll` (eligibility via
+        :meth:`_spin_participants`), the cluster's evolution until the next
+        spectator deadline is fully determined by engine state: per cycle,
+        each polled bank grants one requester (round robin), misses re-enter
+        the queue after their retry shadow, and nothing else can move.  This
+        resolver replays exactly those round-robin outcomes with per-*grant*
+        (not per-cycle) work -- queue-wait spans, retry shadows and the
+        implied conflict/stall accounting are settled in closed form per
+        segment -- and skips empty cycles between rejoins entirely.
+
+        For long phases (horizon > :attr:`SPIN_PERIOD_MIN_HORIZON`) it
+        additionally hashes the relative spin configuration each cycle; a
+        repeat proves periodicity, and the remaining horizon collapses into
+        one multiply of the per-period stat deltas (the closed form for the
+        "one core computes for 10^5 cycles while the rest spin" phases of
+        the imbalanced applications).
+
+        The phase ends at the first poll *hit* (the program must resume), at
+        the spectator horizon (a countdown expires), or at ``max_cycles``;
+        the cores are written back in exactly the state the same number of
+        lockstep steps would have left them in.  Returns True when at least
+        one cycle was resolved.
+        """
+        V = self._vec
+        cores = self.cores
+        n = self.n_cores
+        t0 = self.cycle
+
+        # -- eligibility + participant set ---------------------------------
+        if self.vectorized:
+            p_arr = self._spin_participants_vec()
+            if p_arr is None:
+                return False
+            pids = [int(c) for c in p_arr]
+        else:
+            parts = self._spin_participants()
+            if parts is None:
+                return False
+            pids = [c.cid for c in parts]
+
+        # -- spectator horizon ---------------------------------------------
+        horizon = self.max_cycles - t0
+        if self.vectorized:
+            st = V.state
+            spect = np.ones(n, dtype=bool)
+            spect[pids] = False
+            sa = spect & (st == _ACTIVE)
+            if sa.any():
+                horizon = min(horizon, int(V.busy[sa].min()))
+            sw = spect & (st == _WAKING)
+            if sw.any():
+                horizon = min(horizon, int(V.wake[sw].min()) - 1)
+        else:
+            pid_set = set(pids)
+            for core in cores:
+                if core.cid in pid_set:
+                    continue
+                cs = core.state
+                if cs is CoreState.ACTIVE:
+                    horizon = min(horizon, core.busy)
+                elif cs is CoreState.WAKING:
+                    horizon = min(horizon, core.wake_countdown - 1)
+        if horizon <= 0:  # pragma: no cover - eligibility guarantees >= 1
+            return False
+
+        # -- participant records -------------------------------------------
+        k = len(pids)
+        banks_ = [0] * k
+        addrs_ = [0] * k
+        untils = [0] * k
+        is_tas = [False] * k
+        miss_sh = [0] * k  # full ACTIVE shadow after a miss grant
+        hit_sh = [0] * k
+        h_in = [0] * k
+        m_in = [0] * k
+        queued_at = [-1] * k  # request time while queued, else -1
+        rejoin_at = [-1] * k  # re-issue time while in a retry shadow
+        shadow_from = [0] * k  # start of the unsettled comp segment
+        acc = [[0] * len(_COUNTERS) for _ in range(k)]
+        queues: Dict[int, List[int]] = {}
+        rejoins: Dict[int, List[int]] = {}
+        tas_cycles = self.TAS_CYCLES - 1
+        for i, cid in enumerate(pids):
+            op = cores[cid].pending
+            b = self._bank_of(op.addr)
+            banks_[i] = b
+            addrs_[i] = op.addr
+            untils[i] = op.until
+            base = tas_cycles if op.kind == "tas" else 0
+            is_tas[i] = op.kind == "tas"
+            miss_sh[i] = base + op.miss_cycles
+            hit_sh[i] = base + op.hit_cycles
+            h_in[i] = op.hit_instr
+            m_in[i] = op.miss_instr
+            if self.vectorized:
+                in_queue = V.state[cid] == _STALL_MEM
+                busy_c = int(V.busy[cid])
+            else:
+                in_queue = cores[cid].state is CoreState.STALL_MEM
+                busy_c = cores[cid].busy
+            if in_queue:
+                queued_at[i] = t0
+                queues.setdefault(b, []).append(i)
+            else:
+                # mid-shadow at entry: the re-issue lands busy cycles out
+                tr = t0 + busy_c
+                rejoin_at[i] = tr
+                shadow_from[i] = t0
+                rejoins.setdefault(tr, []).append(i)
+
+        # -- replay grants until a hit / the horizon ------------------------
+        t = t0
+        t_end = t0 + horizon
+        hits: List[Tuple[int, int]] = []
+        rr = self._rr
+        tcdm = self.tcdm
+        detect = horizon > self.SPIN_PERIOD_MIN_HORIZON
+        bank_list = sorted(set(banks_)) if detect else ()
+        seen: Dict[Any, Tuple[int, List[List[int]]]] = {}
+        while t < t_end:
+            joiners = rejoins.pop(t, None)
+            if joiners:
+                for i in joiners:
+                    a = acc[i]
+                    seg = t - shadow_from[i]
+                    a[_C_COMP] += seg
+                    a[_C_ACTIVE] += seg
+                    a[_C_INSTR] += 1  # the re-issued load
+                    queued_at[i] = t
+                    rejoin_at[i] = -1
+                    queues.setdefault(banks_[i], []).append(i)
+            if not queues:
+                if not rejoins:  # pragma: no cover - all cores hit
+                    break
+                nxt = min(rejoins)
+                t = nxt if nxt < t_end else t_end
+                continue
+            if detect:
+                # a shadow's key carries both the rejoin offset and the
+                # unsettled-segment start: an entry shadow (segment began at
+                # phase entry, not at a grant) must never alias an in-phase
+                # shadow with the same rejoin offset, or the settled-delta
+                # cancellation argument breaks
+                key = (
+                    tuple(
+                        (i, t - queued_at[i])
+                        if queued_at[i] >= 0
+                        else (i, t - rejoin_at[i], t - shadow_from[i])
+                        for i in range(k)
+                    ),
+                    tuple(int(rr[b]) for b in bank_list),
+                    tuple(tcdm.get(a, 0) for a in addrs_),
+                )
+                prev = seen.get(key)
+                if prev is None:
+                    if len(seen) >= self.SPIN_PERIOD_MEMO_LIMIT:
+                        detect = False
+                        seen.clear()
+                    else:
+                        seen[key] = (t, [list(a) for a in acc])
+                else:
+                    t1, acc1 = prev
+                    period = t - t1
+                    m = (t_end - t) // period
+                    if m > 0:
+                        shift = m * period
+                        for i in range(k):
+                            a, a1 = acc[i], acc1[i]
+                            for j in range(len(_COUNTERS)):
+                                a[j] += m * (a[j] - a1[j])
+                            if queued_at[i] >= 0:
+                                queued_at[i] += shift
+                            else:
+                                rejoin_at[i] += shift
+                                shadow_from[i] += shift
+                        rejoins = {
+                            tk + shift: v for tk, v in rejoins.items()
+                        }
+                        t += shift
+                        seen.clear()
+                        if t >= t_end:
+                            break
+            for b in list(queues):
+                q = queues[b]
+                rb = int(rr[b])
+                wi = min(q, key=lambda i: (pids[i] - rb) % n)
+                q.remove(wi)
+                if not q:
+                    del queues[b]
+                rr[b] = (pids[wi] + 1) % n
+                dt = t - queued_at[wi]
+                queued_at[wi] = -1
+                a = acc[wi]
+                a[_C_ACTIVE] += dt + 1
+                a[_C_WAIT] += dt
+                a[_C_STALL] += dt
+                a[_C_COMP] += 1
+                a[_C_TCDM] += 1
+                addr = addrs_[wi]
+                value = tcdm.get(addr, 0)
+                if is_tas[wi]:
+                    tcdm[addr] = -1
+                    a[_C_TAS] += 1
+                if value == untils[wi]:
+                    a[_C_INSTR] += h_in[wi]
+                    hits.append((wi, value))
+                else:
+                    a[_C_INSTR] += m_in[wi]
+                    tr = t + miss_sh[wi] + 1
+                    shadow_from[wi] = t + 1
+                    rejoin_at[wi] = tr
+                    rejoins.setdefault(tr, []).append(wi)
+            t += 1
+            if hits:
+                t_end = t
+                break
+
+        # -- settle partial segments + write the cores back -----------------
+        span = t_end - t0
+        hit_idx = {i for i, _ in hits}
+        conflicts = 0
+        for i, cid in enumerate(pids):
+            a = acc[i]
+            if i in hit_idx:
+                pass  # exits at the grant cycle; shadow runs under tier 1
+            elif queued_at[i] >= 0:
+                seg = t_end - queued_at[i]
+                a[_C_ACTIVE] += seg
+                a[_C_WAIT] += seg
+                a[_C_STALL] += seg
+            else:
+                seg = t_end - shadow_from[i]
+                a[_C_COMP] += seg
+                a[_C_ACTIVE] += seg
+            conflicts += a[_C_STALL]
+        self.stats.bank_conflicts += conflicts
+        if self.vectorized:
+            CB = V.counter_block
+            for i, cid in enumerate(pids):
+                CB[:, cid] += acc[i]
+            for i, value in hits:
+                cid = pids[i]
+                core = cores[cid]
+                core.pending = None
+                core.resume_value = value
+                V.state[cid] = _ACTIVE
+                V.busy[cid] = hit_sh[i]
+                V.pend_bank[cid] = -1
+                V.has_poll[cid] = False
+            for i in range(k):
+                if i in hit_idx:
+                    continue
+                cid = pids[i]
+                if queued_at[i] >= 0:
+                    # the virtual re-issue happened inside the phase: the
+                    # core is waiting in the bank queue again
+                    V.state[cid] = _STALL_MEM
+                    V.busy[cid] = 0
+                else:
+                    V.state[cid] = _ACTIVE
+                    V.busy[cid] = rejoin_at[i] - t_end
+            # spectators: span-based countdown accounting
+            st = V.state
+            spect = np.ones(n, dtype=bool)
+            spect[pids] = False
+            sa = spect & (st == _ACTIVE)
+            sw = spect & (st == _WAKING)
+            V.busy[sa] -= span
+            V.wake[sw] -= span
+            C = V.counters
+            C["active_cycles"][sa] += span
+            C["comp_cycles"][sa] += span
+            C["active_cycles"][sw] += span
+            C["wait_cycles"][sw] += span
+            C["gated_cycles"][spect & (st == _SLEEP)] += span
+        else:
+            for i, cid in enumerate(pids):
+                core = cores[cid]
+                a = acc[i]
+                for j, name in enumerate(_COUNTERS):
+                    setattr(core, name, getattr(core, name) + a[j])
+                if i in hit_idx:
+                    continue
+                if queued_at[i] >= 0:
+                    # the virtual re-issue happened inside the phase: the
+                    # core is waiting in the bank queue again
+                    core.state = CoreState.STALL_MEM
+                    core.busy = 0
+                else:
+                    core.state = CoreState.ACTIVE
+                    core.busy = rejoin_at[i] - t_end
+            for i, value in hits:
+                core = cores[pids[i]]
+                core.pending = None
+                core.resume_value = value
+                core.state = CoreState.ACTIVE
+                core.busy = hit_sh[i]
+            pid_set = set(pids)
+            for core in cores:
+                if core.cid not in pid_set:
+                    core.fast_forward(span)
+        self.cycle = t_end
+        self.ff_batch_spans += 1
+        self.ff_batch_cycles += span
+        return True
+
+
+    def _step_vec(self) -> None:
+        """One full cluster step through the structure-of-arrays kernels.
+
+        Phase order and semantics are identical to the scalar :meth:`step`;
+        every per-core loop is replaced by a numpy kernel over the state
+        arrays, dropping to Python only for the idiosyncratic transitions
+        (generator advances, SCU transactions, elw grants).
+        """
+        V = self._vec
+        cores = self.cores
+        st = V.state
+
+        # Phase 0: extension comparators.
+        if self.scu is not None:
+            n_ev = self.scu.evaluate(self.cycle)
+            self.stats.scu_events += n_ev
+
+        # Phase 1a: countdowns (vectorized).
+        active = st == _ACTIVE
+        counting = active & (V.busy > 0)
+        V.busy[counting] -= 1
+        waking = st == _WAKING
+        V.wake[waking] -= 1
+        gating = (st == _STALL_SCU) & V.elw
+        if np.any(gating):
+            V.sleep_entry[gating] -= 1
+            gated = gating & (V.sleep_entry <= 0)
+            st[gated] = _SLEEP
+
+        # Phase 1b: generator advances and Poll re-issues (scalar).
+        due = np.nonzero((active & ~counting) | (waking & (V.wake <= 0)))[0]
+        for cid in due:
+            core = cores[cid]
+            if st[cid] == _WAKING:
+                st[cid] = _ACTIVE
+            if core.pending is not None and not V.elw[cid]:
+                # armed Poll whose retry shadow expired: re-enter the queue
+                st[cid] = _STALL_MEM
+                V.counters["instructions"][cid] += 1
+            else:
+                self._advance(core, core.resume_value)
+
+        # Phase 2: TCDM / LINT arbitration (vectorized round robin).
+        self._arbitrate_tcdm_vec()
+
+        # Phase 3 + 4: SCU private links and elw grant scans.
+        if self.scu is not None:
+            fresh = np.nonzero((st == _STALL_SCU) & ~V.elw)[0]
+            for cid in fresh:
+                self._service_one(cores[cid])
+            self._wake_cores_vec()
+
+        # Phase 5: accounting (vectorized).
+        C = V.counters
+        sleeping = st == _SLEEP
+        active = st == _ACTIVE
+        stalled = st == _STALL_MEM
+        clocked = st < _SLEEP  # ACTIVE/STALL_MEM/STALL_SCU
+        clocked |= st == _WAKING
+        C["gated_cycles"] += sleeping
+        C["active_cycles"] += clocked
+        C["comp_cycles"] += active
+        C["wait_cycles"] += clocked & ~active
+        C["stall_cycles"] += stalled
+        self.cycle += 1
+
+    def _arbitrate_tcdm_vec(self) -> None:
+        V = self._vec
+        st = V.state
+        req = np.nonzero(st == _STALL_MEM)[0]
+        if req.size == 0:
+            return
+        n = self.n_cores
+        if req.size == 1:
+            cid = int(req[0])
+            self._rr[V.pend_bank[cid]] = (cid + 1) % n
+            self._grant_mem_vec(cid)
+            return
+        banks = V.pend_bank[req]
+        key = (req - self._rr[banks]) % n
+        order = np.lexsort((key, banks))
+        sorted_banks = banks[order]
+        # winners: the first requester of each bank group (lowest rr key)
+        first = np.ones(order.size, dtype=bool)
+        first[1:] = sorted_banks[1:] != sorted_banks[:-1]
+        winners = req[order[first]]
+        self.stats.bank_conflicts += int(req.size - winners.size)
+        rr = self._rr
+        for cid in winners:
+            cid = int(cid)
+            rr[V.pend_bank[cid]] = (cid + 1) % n
+            self._grant_mem_vec(cid)
+
+    def _grant_mem_vec(self, cid: int) -> None:
+        """Granted TCDM transaction, writing the SoA state directly.
+
+        Deliberate (measured) duplicate of :meth:`_grant_mem`: the generic
+        version goes through the `_VecCore` property layer, which costs ~3x
+        more per winner, and this path takes up to one grant per bank per
+        cycle.  Keep the two in lockstep when touching grant semantics --
+        the 16..256-core randomized cross-checks in
+        ``tests/test_scu_simulator.py`` trip on any divergence."""
+        V = self._vec
+        core = self.cores[cid]
+        op = core.pending
+        CB = V.counter_block
+        CB[_C_TCDM, cid] += 1
+        if type(op) is Poll:
+            value = self.tcdm.get(op.addr, 0)
+            base = 0
+            if op.kind == "tas":
+                self.tcdm[op.addr] = -1
+                CB[_C_TAS, cid] += 1
+                base = self.TAS_CYCLES - 1
+            if value == op.until:
+                core.pending = None
+                core.resume_value = value
+                V.busy[cid] = base + op.hit_cycles
+                CB[_C_INSTR, cid] += op.hit_instr
+                V.pend_bank[cid] = -1
+                V.has_poll[cid] = False
+            else:
+                V.busy[cid] = base + op.miss_cycles
+                CB[_C_INSTR, cid] += op.miss_instr
+            V.state[cid] = _ACTIVE
+            return
+        kind = op.kind
+        if kind == "lw":
+            value = self.tcdm.get(op.addr, 0)
+        elif kind == "sw":
+            self.tcdm[op.addr] = op.data
+            value = 0
+        elif kind == "tas":
+            value = self.tcdm.get(op.addr, 0)
+            self.tcdm[op.addr] = -1
+            CB[_C_TAS, cid] += 1
+            V.busy[cid] = self.TAS_CYCLES - 1
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        core.pending = None
+        core.resume_value = value
+        V.state[cid] = _ACTIVE
+        V.pend_bank[cid] = -1
+        V.has_poll[cid] = False
+
+    def _wake_cores_vec(self) -> None:
+        """Phase 4, vectorized precheck: only cores whose waited-on event is
+        actually buffered run the scalar grant sequencing."""
+        V = self._vec
+        st = V.state
+        pending = V.elw & ((st == _STALL_SCU) | (st == _SLEEP))
+        if not np.any(pending):
+            return
+        cids = np.nonzero(pending)[0]
+        granted = self.scu.elw_grantable_mask(cids)
+        for cid in cids[granted]:
+            self._wake_one(self.cores[cid])
 
     # ------------------------------------------------------------ internals
     def _advance(self, core: _Core, value: int = 0) -> None:
         """Feed ``value`` into the program generator and fetch the next op."""
         try:
-            op = core.gen.send(value) if core.stats.instructions else next(core.gen)
+            op = core.gen.send(value) if core.started else next(core.gen)
         except StopIteration:
             core.state = CoreState.DONE
-            core.stats.finished_at = self.cycle
+            core.finished_at = self.cycle
             core.pending = None
             self._n_done += 1
             return
-        core.stats.instructions += 1
+        core.started = True
+        core.instructions += 1
         if isinstance(op, Compute):
             core.busy = max(0, op.cycles - 1)  # this cycle counts as work
             core.state = CoreState.ACTIVE
             core.pending = None
-        elif isinstance(op, Mem):
+        elif isinstance(op, (Mem, Poll)):
             core.pending = op
             core.state = CoreState.STALL_MEM
+            if self._vec is not None:
+                self._vec.pend_bank[core.cid] = self._bank_of(op.addr)
+                self._vec.has_poll[core.cid] = isinstance(op, Poll)
         elif isinstance(op, Scu):
             core.pending = op
             core.state = CoreState.STALL_SCU
@@ -461,20 +1331,26 @@ class Cluster:
             raise TypeError(f"bad micro-op {op!r}")
 
     def _issue(self, core: _Core) -> None:
-        if core.state is CoreState.DONE:
+        state = core.state
+        if state is CoreState.DONE:
             return
-        if core.state is CoreState.ACTIVE:
+        if state is CoreState.ACTIVE:
             if core.busy > 0:
                 core.busy -= 1
                 return
+            if core.pending is not None:
+                # armed Poll whose retry shadow expired: re-enter the queue
+                core.state = CoreState.STALL_MEM
+                core.instructions += 1
+                return
             self._advance(core, core.resume_value)
-        elif core.state is CoreState.WAKING:
+        elif state is CoreState.WAKING:
             core.wake_countdown -= 1
             if core.wake_countdown <= 0:
                 core.state = CoreState.ACTIVE
                 # response data already latched in resume_value
                 self._advance(core, core.resume_value)
-        elif core.state is CoreState.STALL_SCU and core.elw_issued:
+        elif state is CoreState.STALL_SCU and core.elw_issued:
             # busy-release window (Fig. 4 left): active, then clock gated
             core.sleep_entry -= 1
             if core.sleep_entry <= 0:
@@ -486,66 +1362,108 @@ class Cluster:
     def _arbitrate_tcdm(self) -> None:
         by_bank: Dict[int, List[_Core]] = {}
         for core in self.cores:
-            if core.state is CoreState.STALL_MEM and isinstance(core.pending, Mem):
+            if core.state is CoreState.STALL_MEM:
                 by_bank.setdefault(self._bank_of(core.pending.addr), []).append(core)
         for bank, reqs in by_bank.items():
-            if self._bank_locked_until[bank] > self.cycle:
-                self.stats.bank_conflicts += len(reqs)
-                continue
             # round-robin election among contenders
-            reqs.sort(key=lambda c: (c.cid - self._rr[bank]) % self.n_cores)
+            rrb = int(self._rr[bank])
+            n = self.n_cores
+            reqs.sort(key=lambda c: (c.cid - rrb) % n)
             winner = reqs[0]
-            self._rr[bank] = (winner.cid + 1) % self.n_cores
+            self._rr[bank] = (winner.cid + 1) % n
             self.stats.bank_conflicts += len(reqs) - 1
-            op: Mem = winner.pending  # type: ignore[assignment]
-            winner.stats.tcdm_accesses += 1
-            if op.kind == "lw":
-                value = self.tcdm.get(op.addr, 0)
-            elif op.kind == "sw":
-                self.tcdm[op.addr] = op.data
-                value = 0
-            elif op.kind == "tas":
-                value = self.tcdm.get(op.addr, 0)
+            self._grant_mem(winner)
+
+    def _grant_mem(self, winner: _Core) -> None:
+        """Execute a granted TCDM transaction (shared by both arbiters)."""
+        op = winner.pending
+        winner.tcdm_accesses += 1
+        if type(op) is Poll:
+            value = self.tcdm.get(op.addr, 0)
+            base = 0
+            if op.kind == "tas":
                 self.tcdm[op.addr] = -1
-                winner.stats.tas_accesses += 1
-                # "-1 written back to memory in the next cycle before any
-                # other core gets its request granted" (Sec. 4.1): the LINT
-                # sequences the write-back through a forwarding write buffer
-                # (atomicity is guaranteed by the arbitration order), and the
-                # requesting core sees the full 3-cycle TAS latency.
-                winner.busy = self.TAS_CYCLES - 1
-            else:  # pragma: no cover
-                raise ValueError(op.kind)
-            # single-cycle TCDM: response consumed next cycle
-            winner.pending = None
-            winner.resume_value = value
+                winner.tas_accesses += 1
+                base = self.TAS_CYCLES - 1
+            if value == op.until:
+                # hit: check cycles, then resume the program with the value
+                winner.pending = None
+                winner.resume_value = value
+                winner.busy = base + op.hit_cycles
+                winner.instructions += op.hit_instr
+                if self._vec is not None:
+                    self._vec.pend_bank[winner.cid] = -1
+                    self._vec.has_poll[winner.cid] = False
+            else:
+                # miss: retry shadow, the Poll stays armed for re-issue
+                winner.busy = base + op.miss_cycles
+                winner.instructions += op.miss_instr
             winner.state = CoreState.ACTIVE
+            return
+        if op.kind == "lw":
+            value = self.tcdm.get(op.addr, 0)
+        elif op.kind == "sw":
+            self.tcdm[op.addr] = op.data
+            value = 0
+        elif op.kind == "tas":
+            value = self.tcdm.get(op.addr, 0)
+            self.tcdm[op.addr] = -1
+            winner.tas_accesses += 1
+            # "-1 written back to memory in the next cycle before any
+            # other core gets its request granted" (Sec. 4.1): the LINT
+            # sequences the write-back through a forwarding write buffer
+            # (atomicity is guaranteed by the arbitration order), and the
+            # requesting core sees the full 3-cycle TAS latency.
+            winner.busy = self.TAS_CYCLES - 1
+        else:  # pragma: no cover
+            raise ValueError(op.kind)
+        # single-cycle TCDM: response consumed next cycle
+        winner.pending = None
+        winner.resume_value = value
+        winner.state = CoreState.ACTIVE
+        if self._vec is not None:
+            self._vec.pend_bank[winner.cid] = -1
+            self._vec.has_poll[winner.cid] = False
 
     def _service_scu(self) -> None:
         for core in self.cores:
-            if core.state is not CoreState.STALL_SCU or not isinstance(
-                core.pending, Scu
-            ):
-                continue
-            op: Scu = core.pending
-            core.stats.scu_accesses += 1
-            if op.kind in ("write", "read"):
-                value = self.scu.access(core.cid, op.kind, op.addr, op.data)
-                core.pending = None
-                core.resume_value = value if value is not None else 0
-                core.state = CoreState.ACTIVE
-            elif op.kind == "elw":
-                if not core.elw_issued:
-                    # Trigger the addressed extension exactly once per elw
-                    # transaction (FSM trigger-once guard, Sec. 5).
-                    self.scu.elw_trigger(core.cid, op.addr)
-                    core.elw_issued = True
-                    # Grant withheld for now; if the event is already buffered
-                    # the phase-4 poll grants in this same cycle with no
-                    # power management ("to not waste any cycles", Sec. 5).
-                    core.sleep_entry = self.SLEEP_ENTRY_CYCLES
-            else:  # pragma: no cover
-                raise ValueError(op.kind)
+            if core.state is CoreState.STALL_SCU and not core.elw_issued:
+                self._service_one(core)
+
+    def _service_one(self, core: _Core) -> None:
+        """Service one fresh transaction on a private core<->SCU link."""
+        op: Scu = core.pending
+        core.scu_accesses += 1
+        if op.kind in ("write", "read"):
+            value = self.scu.access(core.cid, op.kind, op.addr, op.data)
+            core.pending = None
+            core.resume_value = value if value is not None else 0
+            core.state = CoreState.ACTIVE
+        elif op.kind == "elw":
+            # Trigger the addressed extension exactly once per elw
+            # transaction (FSM trigger-once guard, Sec. 5).
+            self.scu.elw_trigger(core.cid, op.addr, op.data)
+            core.elw_issued = True
+            # Grant withheld for now; if the event is already buffered
+            # the phase-4 poll grants in this same cycle with no
+            # power management ("to not waste any cycles", Sec. 5).
+            core.sleep_entry = self.SLEEP_ENTRY_CYCLES
+        else:  # pragma: no cover
+            raise ValueError(op.kind)
+
+    def _wake_one(self, core: _Core) -> None:
+        granted, value = self.scu.elw_poll(core.cid, core.pending.addr)
+        if granted:
+            never_slept = core.state is CoreState.STALL_SCU
+            core.pending = None
+            core.elw_issued = False
+            core.resume_value = value
+            core.state = CoreState.WAKING
+            # Immediate grants skip the clock-gate entry latency but still
+            # pay grant + response + resume.
+            core.wake_countdown = (
+                self.WAKE_CYCLES - 1 if never_slept else self.WAKE_CYCLES
+            )
 
     def _wake_cores(self) -> None:
         """Phase 4: poll every in-flight elw against the event buffers."""
@@ -554,18 +1472,7 @@ class Cluster:
                 continue
             if core.state not in (CoreState.STALL_SCU, CoreState.SLEEP):
                 continue
-            granted, value = self.scu.elw_poll(core.cid, core.pending.addr)
-            if granted:
-                never_slept = core.state is CoreState.STALL_SCU
-                core.pending = None
-                core.elw_issued = False
-                core.resume_value = value
-                core.state = CoreState.WAKING
-                # Immediate grants skip the clock-gate entry latency but still
-                # pay grant + response + resume.
-                core.wake_countdown = (
-                    self.WAKE_CYCLES - 1 if never_slept else self.WAKE_CYCLES
-                )
+            self._wake_one(core)
 
     # ------------------------------------------------------------- helpers
     def poke(self, addr: int, value: int) -> None:

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Generator
 
-from .engine import Compute, Mem, Scu
+from .engine import Compute, Mem, Poll, Scu
 
 __all__ = [
     "CostModel",
@@ -101,12 +101,13 @@ def _sw_barrier_body(cl, cid: int, st: BarrierState, cm: CostModel, idle_wait: b
     st.local_sense[cid] = sense
     yield Compute(cm.call + cm.sense_setup)
     # -- acquire the barrier lock: "2 instructions per locking attempt" ------
-    while True:
-        v = yield Mem("tas", A_BAR_LOCK)
-        if v == _TAS_FREE:
-            yield Compute(1)  # bnez falls through
-            break
-        yield Compute(1 + cm.branch_taken)  # bnez taken, retry
+    # (declarative TAS spin: bnez falls through on the free value, else the
+    # taken branch loops back to the atomic -- see engine.Poll)
+    yield Poll(
+        "tas", A_BAR_LOCK, until=_TAS_FREE,
+        hit_cycles=1, miss_cycles=1 + cm.branch_taken,
+        hit_instr=1, miss_instr=1,
+    )
     # -- critical: bump the arrival counter ----------------------------------
     if cm.crit_extra > 0:
         yield Compute(cm.crit_extra)  # team state / barrier-id bookkeeping
@@ -137,12 +138,14 @@ def _sw_barrier_body(cl, cid: int, st: BarrierState, cm: CostModel, idle_wait: b
                 yield Compute(1 + cm.branch_taken)  # loop back to re-check
         else:
             # -- spin on the sense word (busy waiting) -----------------------
-            while True:
-                s = yield Mem("lw", A_BAR_SENSE)
-                yield Compute(1 + cm.load_use)
-                if s == sense:
-                    break
-                yield Compute(cm.branch_taken)  # bne taken back to the poll
+            # (declarative lw spin: load + check each round, bne taken back
+            # to the poll on a miss -- see engine.Poll)
+            yield Poll(
+                "lw", A_BAR_SENSE, until=sense,
+                hit_cycles=1 + cm.load_use,
+                miss_cycles=1 + cm.load_use + cm.branch_taken,
+                hit_instr=1, miss_instr=2,
+            )
         yield Compute(cm.ret)
 
 
@@ -169,12 +172,11 @@ def sw_mutex_section(
     cl, cid: int, t_crit: int, cm: CostModel = DEFAULT_COSTS
 ) -> Generator:
     """Spin-lock entry, ``t_crit`` cycles of work, single-store exit."""
-    while True:
-        v = yield Mem("tas", A_MUTEX)
-        if v == _TAS_FREE:
-            yield Compute(1)  # bnez falls through
-            break
-        yield Compute(1 + cm.branch_taken)  # bnez taken, retry
+    yield Poll(
+        "tas", A_MUTEX, until=_TAS_FREE,
+        hit_cycles=1, miss_cycles=1 + cm.branch_taken,
+        hit_instr=1, miss_instr=1,
+    )
     if t_crit > 0:
         yield Compute(t_crit)
     yield Mem("sw", A_MUTEX, 0)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
-from .engine import Cluster, ClusterStats, Compute
+from .engine import Cluster, ClusterStats, Compute, Mem
 from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
@@ -23,6 +23,9 @@ __all__ = [
     "run_chain_bench",
     "run_mutex_bench",
     "run_nop_bench",
+    "run_work_queue_bench",
+    "split_quota",
+    "work_queue_programs",
 ]
 
 
@@ -211,6 +214,143 @@ def run_chain_bench(
     ))
     return _collect(
         variant, f"chain_d{depth}", cl, n_cores, sfr, iters, float(sfr)
+    )
+
+
+WQ_CS_CYCLES = 6  # queue-pointer bookkeeping inside the dequeue/enqueue lock
+WQ_RETRY_CYCLES = 8  # consumer backoff before re-polling an empty queue
+A_WQ_LEVEL = 0x180  # advertised queue occupancy (test before locking)
+
+
+class _WorkQueue:
+    """Occupancy bookkeeping of the shared work queue.
+
+    The item count is Python-side shared state, like the software barriers'
+    local-sense arrays: the *synchronization traffic* (the occupancy word
+    at :data:`A_WQ_LEVEL`, mutex acquire/release around every queue
+    operation, the consumers' retry discipline, or the FIFO policy's native
+    push/pop events) runs through simulated ops and is the measured
+    quantity; the item payloads themselves are abstract.
+    """
+
+    def __init__(self):
+        self.available = 0
+
+
+def split_quota(items: int, n: int) -> list:
+    """Fair partition of ``items`` over ``n`` workers (remainder first)."""
+    return [items // n + (1 if i < items % n else 0) for i in range(n)]
+
+
+def work_queue_programs(
+    policy, n_producers: int, n_consumers: int, items: int,
+    t_produce: int, t_consume: int, state, cost_model=None,
+):
+    """Multi-producer/multi-consumer work-queue programs for any policy.
+
+    Policies with a native ``make_work_queue_programs`` hook (the ``fifo``
+    discipline: blocking ``push_wait`` producers against hardware
+    backpressure, clock-gated ``pop`` consumers) build their own programs;
+    everything else runs the classic software shape -- a mutex-protected
+    shared queue where producers enqueue under the lock and consumers
+    poll-and-retry until their quota of items arrived.
+    """
+    cm = cost_model or DEFAULT_COSTS
+    maker = getattr(policy, "make_work_queue_programs", None)
+    if maker is not None:
+        return maker(
+            n_producers, n_consumers, items, t_produce, t_consume, state, cm
+        )
+    wq = _WorkQueue()
+
+    def make_producer(quota):
+        def prog(cluster, cid):
+            for _ in range(quota):
+                if t_produce > 0:
+                    yield Compute(t_produce)
+                yield from policy.sim_mutex(cluster, cid, WQ_CS_CYCLES, state, cm)
+                wq.available += 1
+                yield Mem("sw", A_WQ_LEVEL, wq.available)  # advertise
+
+        return prog
+
+    def make_consumer(quota):
+        def prog(cluster, cid):
+            got = 0
+            while got < quota:
+                # test before locking: poll the occupancy word with a plain
+                # load and only contend for the lock when the queue looks
+                # non-empty.  Besides being how real runtimes shape this
+                # loop, it is essential for liveness here: under the
+                # cycle-exact simulator, consumers hammering the lock on an
+                # empty queue can resonate into perfectly periodic
+                # starvation of the producers.  The backoff is additionally
+                # staggered by core id (the simulated twin of randomized
+                # backoff) so consumer herds don't re-synchronize.
+                #
+                # The load models the polling traffic; the *decision* reads
+                # the Python-side count, which is the coherent value of the
+                # occupancy word.  (A real TCDM load is coherent with the
+                # enqueue that produced it; trusting the simulated store
+                # data instead would re-introduce an artifact of our
+                # modeling -- Mem data is captured at yield time but lands
+                # at grant time, so a stale snapshot can be granted after a
+                # newer one and park the advertised level at 0 forever.)
+                yield Mem("lw", A_WQ_LEVEL)
+                yield Compute(1 + cm.load_use)
+                if wq.available <= 0:
+                    yield Compute(WQ_RETRY_CYCLES + cid)
+                    continue
+                yield from policy.sim_mutex(cluster, cid, WQ_CS_CYCLES, state, cm)
+                if wq.available > 0:
+                    wq.available -= 1
+                    yield Mem("sw", A_WQ_LEVEL, wq.available)
+                    got += 1
+                    if t_consume > 0:
+                        yield Compute(t_consume)
+                else:
+                    yield Compute(WQ_RETRY_CYCLES + cid)
+
+        return prog
+
+    return [make_producer(q) for q in split_quota(items, n_producers)] + [
+        make_consumer(q) for q in split_quota(items, n_consumers)
+    ]
+
+
+def run_work_queue_bench(
+    variant: str,
+    n_producers: int,
+    n_consumers: int,
+    items: int = 64,
+    t_produce: int = 30,
+    t_consume: int = 30,
+    cost_model=None,
+    mode: str = "fastforward",
+) -> MicrobenchResult:
+    """Multi-producer work queue: P producers feed C consumers through one
+    shared queue; every policy supplies its own queue discipline (see
+    :func:`work_queue_programs`).
+
+    The ideal steady state is bounded by the busier side of the queue --
+    ``max(P * t_produce, C * t_consume) / (P*C)``-ish per item; we report
+    ``cycles_per_iter`` per *item* and the overhead over the ideal
+    ``items * max(t_produce / P, t_consume / C)`` schedule.
+    """
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
+    n_cores = n_producers + n_consumers
+    cl = _make_cluster(n_cores, mode)
+    state = policy.make_sim_state(n_cores)
+    cl.load(work_queue_programs(
+        policy, n_producers, n_consumers, items, t_produce, t_consume,
+        state, cost_model,
+    ))
+    ideal = items * max(t_produce / n_producers, t_consume / n_consumers)
+    return _collect(
+        variant, f"wq_p{n_producers}c{n_consumers}", cl, n_cores, t_produce,
+        items, ideal / items,
     )
 
 

@@ -9,8 +9,18 @@ One *base unit* per core provides:
     realized in :class:`repro.core.scu.engine.Cluster` by the grant-withhold
     and wake sequencing driven from :meth:`SCU.elw_poll`.
 
+The per-core registers are stored structure-of-arrays (numpy int64 vectors
+indexed by core id) so the engine's vectorized kernels can scan event
+buffers and wait masks for all cores at once; :class:`BaseUnit` is a
+per-core view for the scalar paths and the extension API.
+
 Extensions (notifier / barrier / mutex / event FIFO) are shared and generate
-per-core events; see :mod:`repro.core.scu.extensions`.
+per-core events; see :mod:`repro.core.scu.extensions`.  The SCU tracks which
+extension instances are *armed* (comparator could fire without a new core
+transaction) at the mutation points, so the per-cycle :meth:`SCU.evaluate`
+and the fast-forward :meth:`SCU.next_event_bound` touch only armed instances
+-- on a 256-core cluster with 128 barrier and 520 FIFO instances the engine
+hot loop must not pay for idle comparators.
 
 Addressing: the real SCU aliases a 1 Kibit address space per core over the
 private links.  We model addresses symbolically as tuples, e.g.::
@@ -21,6 +31,8 @@ private links.  We model addresses symbolically as tuples, e.g.::
     ("notifier", 3, "trigger")      write: send event 3 to mask in data
     ("notifier", 3, "wait")         elw: sleep until notifier event 3
     ("fifo", 2, "push")             write: push event (data) into FIFO 2
+    ("fifo", 2, "push_wait")        elw: blocking push -- sleep until the
+                                    queue accepts the event in data
     ("fifo", 2, "pop")              elw: sleep until an event is matched,
                                     response carries the popped value
     ("fifo", 2, "level")            read: current FIFO occupancy
@@ -38,12 +50,13 @@ Event line allocation (32 lines, Sec. 4.2):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
 
 from .extensions import Barrier, EventFifo, Mutex, Notifier
 
-__all__ = ["EV", "BaseUnit", "SCU"]
+__all__ = ["EV", "BaseUnit", "BaseUnits", "SCU"]
 
 
 class EV:
@@ -56,27 +69,107 @@ class EV:
     EXT0 = 11
 
 
-@dataclasses.dataclass
 class BaseUnit:
-    """Per-core event buffer / masks (Sec. 4.2)."""
+    """Per-core view of the structure-of-arrays base-unit registers."""
 
-    cid: int
-    event_buffer: int = 0
-    event_mask: int = 0
-    irq_mask: int = 0
-    notifier_target_mask: int = 0  # target register for read-triggered notify
+    __slots__ = ("cid", "_U")
+
+    def __init__(self, cid: int, units: "BaseUnits"):
+        self.cid = cid
+        self._U = units
+
+    # -- register access ----------------------------------------------------
+    @property
+    def event_buffer(self) -> int:
+        return int(self._U.ev_buf[self.cid])
+
+    @event_buffer.setter
+    def event_buffer(self, value: int) -> None:
+        self._U.ev_buf[self.cid] = value
+
+    @property
+    def event_mask(self) -> int:
+        return int(self._U.ev_mask[self.cid])
+
+    @event_mask.setter
+    def event_mask(self, value: int) -> None:
+        self._U.ev_mask[self.cid] = value
+
+    @property
+    def irq_mask(self) -> int:
+        return int(self._U.irq_mask[self.cid])
+
+    @irq_mask.setter
+    def irq_mask(self, value: int) -> None:
+        self._U.irq_mask[self.cid] = value
+
+    @property
+    def notifier_target_mask(self) -> int:
+        return int(self._U.ntf_target[self.cid])
+
+    @notifier_target_mask.setter
+    def notifier_target_mask(self, value: int) -> None:
+        self._U.ntf_target[self.cid] = value
 
     def buffer_set(self, line: int) -> None:
-        self.event_buffer |= 1 << line
+        self._U.ev_buf[self.cid] |= 1 << line
 
     def buffer_clear(self, bits: int) -> None:
-        self.event_buffer &= ~bits
+        self._U.ev_buf[self.cid] &= ~bits
 
     def pending_masked(self) -> int:
         return self.event_buffer & self.event_mask
 
     def pending_irq(self) -> int:
         return self.event_buffer & self.irq_mask
+
+
+class BaseUnits:
+    """All per-core base-unit registers, structure-of-arrays (Sec. 4.2).
+
+    Sequence of :class:`BaseUnit` views for the per-core API; the numpy
+    vectors (``ev_buf``, ``ev_mask``, ...) are the storage and what the
+    vectorized engine kernels and extension deliveries operate on.
+    """
+
+    __slots__ = ("n_cores", "ev_buf", "ev_mask", "irq_mask", "ntf_target", "_views")
+
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        self.ev_buf = np.zeros(n_cores, dtype=np.int64)
+        self.ev_mask = np.zeros(n_cores, dtype=np.int64)
+        self.irq_mask = np.zeros(n_cores, dtype=np.int64)
+        self.ntf_target = np.zeros(n_cores, dtype=np.int64)
+        self._views = [BaseUnit(i, self) for i in range(n_cores)]
+
+    def __len__(self) -> int:
+        return self.n_cores
+
+    def __getitem__(self, cid: int) -> BaseUnit:
+        return self._views[cid]
+
+    def __iter__(self):
+        return iter(self._views)
+
+    def target_bools(self, target_mask: int) -> np.ndarray:
+        """Decode a core bitmask (arbitrary precision) into a bool vector."""
+        n = self.n_cores
+        raw = target_mask.to_bytes((n + 7) // 8, "little")
+        return np.unpackbits(
+            np.frombuffer(raw, dtype=np.uint8), bitorder="little"
+        )[:n].astype(bool)
+
+    def deliver(self, line: int, target_mask: int) -> int:
+        """Set event ``line`` in every targeted core's buffer (vectorized);
+        returns the number of events generated."""
+        full = (1 << self.n_cores) - 1
+        target_mask &= full
+        if target_mask == full:
+            self.ev_buf |= 1 << line
+            return self.n_cores
+        targets = self.target_bools(target_mask)
+        self.ev_buf[targets] |= 1 << line
+        return int(targets.sum())
 
 
 class SCU:
@@ -104,7 +197,7 @@ class SCU:
             fifo_depth = max(16, 2 * n_cores)
         if n_fifos is None:
             n_fifos = 2 * n_cores + 8
-        self.base: List[BaseUnit] = [BaseUnit(cid=i) for i in range(n_cores)]
+        self.base = BaseUnits(n_cores)
         self.barriers: List[Barrier] = [
             Barrier(index=i, n_cores=n_cores) for i in range(n_barriers)
         ]
@@ -117,16 +210,22 @@ class SCU:
         ]
         # instance 0 doubles as the legacy cluster-external event queue
         self.fifo = self.fifos[0]
-        # FIFO instances whose comparator is armed (queued event AND pending
-        # popper).  Maintained at the mutation points (push / pop
-        # registration / delivery) so the per-cycle evaluate and the
-        # fast-forward bound scan touch only armed instances instead of all
-        # 2*n_cores+8 -- the engine hot loop must not pay for idle FIFOs.
+        # Armed-instance tracking: an extension instance is armed when its
+        # comparator could fire without a new core transaction
+        # (next_event_bound() == 0).  Maintained at the mutation points
+        # (arrivals, lock/unlock, push/pop registration, delivery) so the
+        # per-cycle evaluate and the fast-forward bound scan touch only
+        # armed instances -- the engine hot loop must not pay for idle
+        # extensions (see the extensions.py module docstring).
+        self._armed_barriers: set = set()
+        self._armed_mutexes: set = set()
         self._armed_fifos: set = set()
         self.cluster = None
-        # response data latched per core for the in-flight elw (Fig. 4: the
-        # read response carries the event buffer or extension data).
-        self._elw_response: Dict[int, int] = {}
+        # Wait mask of each core's in-flight elw, latched at trigger time
+        # (the mask cannot change while the core is stalled/asleep on the
+        # elw): lets the engine scan all pending elws against the event
+        # buffers in one vectorized pass.
+        self.elw_wait = np.zeros(n_cores, dtype=np.int64)
 
     # ----------------------------------------------------------------- wiring
     def attach(self, cluster) -> None:
@@ -150,6 +249,7 @@ class SCU:
             elif tag == "mutex":
                 if addr[2] == "unlock":
                     self.mutexes[addr[1]].unlock(cid, data, self.base)
+                    self._mutex_touched(addr[1])
             elif tag == "barrier":
                 b = self.barriers[addr[1]]
                 if addr[2] == "workers":
@@ -159,6 +259,7 @@ class SCU:
                 elif addr[2] == "arrive_only":
                     # non-blocking arrival (producer that does not wait)
                     b.arrive(cid, self.base)
+                self._barrier_touched(addr[1])
             elif tag == "fifo":
                 if addr[2] == "push":
                     self.fifos[addr[1]].push(data)
@@ -178,24 +279,33 @@ class SCU:
             return 0
 
     # ------------------------------------------------------------------ elw
-    def elw_trigger(self, cid: int, addr: Any) -> None:
+    def elw_trigger(self, cid: int, addr: Any, data: int = 0) -> None:
         """Extension side-effect of an elw transaction (fires exactly once)."""
         tag = addr[0]
         if tag == "barrier":
             if addr[2] in ("wait_all", "arrive_wait"):
                 self.barriers[addr[1]].arrive(cid, self.base)
+                self._barrier_touched(addr[1])
             # addr[2] == "wait": pure target wait, no arrival
         elif tag == "mutex":
             self.mutexes[addr[1]].try_lock(cid, self.base)
+            self._mutex_touched(addr[1])
         elif tag == "fifo":
-            # blocking pop: queue as a popper; the FIFO comparator matches
-            # queued events to poppers one per cycle (extensions.EventFifo)
-            self.fifos[addr[1]].register_popper(cid)
+            if addr[2] == "push_wait":
+                # blocking push: queue as a pending pusher; the comparator
+                # accepts the event once the queue has room, generating the
+                # producer's wake event (backpressure without credits)
+                self.fifos[addr[1]].register_pusher(cid, data)
+            else:
+                # blocking pop: queue as a popper; the FIFO comparator
+                # matches queued events to poppers one per cycle
+                self.fifos[addr[1]].register_popper(cid)
             self._fifo_touched(addr[1])
         elif tag == "notifier" and addr[2] == "trigger_wait":
             # read-triggered notify using the per-core target register
             self.notifier.trigger(addr[1], self.base[cid].notifier_target_mask, self.base)
         # ("event","wait_any") and ("notifier", n, "wait"): no trigger action
+        self.elw_wait[cid] = self._wait_mask(cid, addr)
 
     def _wait_mask(self, cid: int, addr: Any) -> int:
         tag = addr[0]
@@ -218,7 +328,15 @@ class SCU:
         event is not buffered cannot wake during a quiescent span (events are
         only generated by core transactions or armed comparators, both of
         which force a full step)."""
-        return bool(self.base[cid].event_buffer & self._wait_mask(cid, addr))
+        return bool(self.base.ev_buf[cid] & self._wait_mask(cid, addr))
+
+    def elw_any_grantable(self, cids: np.ndarray) -> bool:
+        """Vectorized :meth:`elw_would_grant` over cores with in-flight elws."""
+        return bool(np.any(self.base.ev_buf[cids] & self.elw_wait[cids]))
+
+    def elw_grantable_mask(self, cids: np.ndarray) -> np.ndarray:
+        """Bool mask over ``cids``: whose waited-on event is buffered now."""
+        return (self.base.ev_buf[cids] & self.elw_wait[cids]) != 0
 
     def elw_poll(self, cid: int, addr: Any) -> Tuple[bool, int]:
         """Grant decision for a pending elw; returns (granted, response)."""
@@ -228,8 +346,8 @@ class SCU:
         if not hit:
             return False, 0
         # Response channel data (Sec. 5): mutex passes the 32-bit message of
-        # the unlocking core, a FIFO pop returns the matched event value;
-        # otherwise the event buffer content is returned.
+        # the unlocking core, a FIFO pop/push_wait returns the matched event
+        # value; otherwise the event buffer content is returned.
         if addr[0] == "mutex":
             value = self.mutexes[addr[1]].message
         elif addr[0] == "fifo":
@@ -243,12 +361,20 @@ class SCU:
 
     # ------------------------------------------------------------- evaluate
     def evaluate(self, cycle: int) -> int:
-        """Per-cycle extension evaluation -> event generation (phase 4)."""
+        """Per-cycle extension evaluation -> event generation (phase 0).
+
+        Only armed instances are visited; the armed sets are maintained at
+        the mutation points (see the class docstring), and re-derived after
+        each evaluation because firing usually disarms the comparator."""
         n = 0
-        for b in self.barriers:
-            n += b.evaluate(self.base)
-        for m in self.mutexes:
-            n += m.evaluate(self.base)
+        if self._armed_barriers:
+            for idx in sorted(self._armed_barriers):
+                n += self.barriers[idx].evaluate(self.base)
+                self._barrier_touched(idx)
+        if self._armed_mutexes:
+            for idx in sorted(self._armed_mutexes):
+                n += self.mutexes[idx].evaluate(self.base)
+                self._mutex_touched(idx)
         if self._armed_fifos:
             for idx in sorted(self._armed_fifos):
                 n += self.fifos[idx].evaluate(self.base)
@@ -256,30 +382,33 @@ class SCU:
         return n
 
     def next_event_bound(self) -> Optional[int]:
-        """Min over the extensions' ``next_event_bound`` hooks (see
+        """Min over the armed extensions' ``next_event_bound`` hooks (see
         :mod:`repro.core.scu.extensions` for the contract): cycles until any
         comparator could generate an event absent new core transactions.
-        0 forces the engine to take a full lockstep step; ``None`` means
-        every comparator is disarmed until a core acts."""
-        if self._armed_fifos:
-            # an armed FIFO comparator fires next cycle (EventFifo's bound
-            # contract: 0 while an event can be matched to a popper)
+        0 forces the engine to take a full step; ``None`` means every
+        comparator is disarmed until a core acts.  All builtin extensions
+        have 0/None bounds, so armed-set membership is the whole answer."""
+        if self._armed_barriers or self._armed_mutexes or self._armed_fifos:
             return 0
-        bound: Optional[int] = None
-        for ext in (*self.barriers, *self.mutexes):
-            b = ext.next_event_bound()
-            if b is None:
-                continue
-            if b <= 0:
-                return 0
-            if bound is None or b < bound:
-                bound = b
-        return bound
+        return None
+
+    def _barrier_touched(self, idx: int) -> None:
+        """Re-derive barrier ``idx``'s armed state after a mutation."""
+        if self.barriers[idx].next_event_bound() == 0:
+            self._armed_barriers.add(idx)
+        else:
+            self._armed_barriers.discard(idx)
+
+    def _mutex_touched(self, idx: int) -> None:
+        """Re-derive mutex ``idx``'s armed state after a mutation."""
+        if self.mutexes[idx].next_event_bound() == 0:
+            self._armed_mutexes.add(idx)
+        else:
+            self._armed_mutexes.discard(idx)
 
     def _fifo_touched(self, idx: int) -> None:
-        """Re-derive instance ``idx``'s armed state after a mutation."""
-        f = self.fifos[idx]
-        if f.fifo and f.poppers:
+        """Re-derive FIFO ``idx``'s armed state after a mutation."""
+        if self.fifos[idx].next_event_bound() == 0:
             self._armed_fifos.add(idx)
         else:
             self._armed_fifos.discard(idx)

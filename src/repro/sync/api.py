@@ -102,6 +102,12 @@ class PolicyDef:
     # barrier-synchronous pipeline emulation in ``core/scu/programs.py`` --
     # the baseline the paper's FIFO extension exists to beat.
     make_pipeline_programs: Optional[Callable[..., Any]] = None
+    # Optional simulator hook: native multi-producer work-queue support.
+    # Signature ``(n_producers, n_consumers, items, t_produce, t_consume,
+    # state, cost_model) -> List[Program]`` (producers first, then
+    # consumers).  Policies without it fall back to the mutex-protected
+    # shared-queue emulation in ``core/scu/programs.py``.
+    make_work_queue_programs: Optional[Callable[..., Any]] = None
 
 
 # name (and alias) -> policy, in registration order (order is meaningful:

@@ -53,6 +53,7 @@ __all__ = [
     "fifo_mutex_section",
     "fifo_pipeline_programs",
     "fifo_shape_gradients",
+    "fifo_work_queue_programs",
     "chain_fifo_span",
 ]
 
@@ -224,6 +225,47 @@ def fifo_pipeline_programs(
     return [make(c) for c in range(n_cores)]
 
 
+F_WORK_QUEUE = F_GATHER  # the work-queue bench runs no barrier: reuse inst 1
+
+
+def fifo_work_queue_programs(
+    n_producers: int, n_consumers: int, items: int,
+    t_produce: int, t_consume: int, state, cost_model=None,
+):
+    """Native event-FIFO work queue: producers block on ``push_wait`` (the
+    queue itself is the backpressure -- no credit counter, no lock), and
+    consumers clock-gate on ``pop`` until an item event is matched to them.
+    Nobody spins and nobody serializes through a mutex: the queue ports move
+    one event per cycle each, which is the whole argument for the SCU FIFO
+    over lock-based work queues (Sec. 4.3)."""
+
+    def make_producer(quota):
+        def prog(cluster, cid):
+            for i in range(quota):
+                if t_produce > 0:
+                    yield Compute(t_produce)
+                yield Compute(1)  # push address setup
+                yield Scu("elw", ("fifo", F_WORK_QUEUE, "push_wait"), i % 256)
+
+        return prog
+
+    def make_consumer(quota):
+        def prog(cluster, cid):
+            for _ in range(quota):
+                yield Compute(1)  # pop address setup
+                yield Scu("elw", ("fifo", F_WORK_QUEUE, "pop"))
+                if t_consume > 0:
+                    yield Compute(t_consume)
+
+        return prog
+
+    from repro.core.scu.programs import split_quota
+
+    return [make_producer(q) for q in split_quota(items, n_producers)] + [
+        make_consumer(q) for q in split_quota(items, n_consumers)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # Layer (b): chip-level point-to-point pipelined chain
 # ---------------------------------------------------------------------------
@@ -307,4 +349,5 @@ FIFO = register_policy(PolicyDef(
     shape_gradients=fifo_shape_gradients,
     opt_state_specs=zero_opt_state_specs,
     make_pipeline_programs=fifo_pipeline_programs,
+    make_work_queue_programs=fifo_work_queue_programs,
 ))

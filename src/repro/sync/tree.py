@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.compat import axis_size
 
-from repro.core.scu.engine import Compute, Mem
+from repro.core.scu.engine import Compute, Mem, Poll, Scu
 from repro.core.scu.primitives import DEFAULT_COSTS, sw_mutex_section
 from repro.sync.api import PolicyDef, register_policy
 from repro.sync.policies import (
@@ -49,6 +49,7 @@ from repro.sync.policies import (
 __all__ = [
     "TREE",
     "TREE4",
+    "TREE_EW",
     "TreeBarrierState",
     "make_tree_policy",
     "tree_barrier",
@@ -77,7 +78,9 @@ class TreeBarrierState:
         self.local_sense = [0] * n_cores
 
 
-def tree_barrier(cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS):
+def tree_barrier(
+    cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS, idle_wait: bool = False
+):
     """Software radix-k tournament barrier: log_k-depth combining, sense
     reversal.
 
@@ -85,6 +88,16 @@ def tree_barrier(cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS):
     digit is non-zero), so a single flag word per core suffices; flags carry
     the sense value, which makes the barrier reusable back-to-back without
     resets.  ``radix=2`` reproduces the classic binary tournament op-for-op.
+
+    ``idle_wait`` selects the release broadcast: the default spins on the
+    shared release word; the idle-wait variant instead clock-gates every
+    loser on an SCU notifier event and the champion releases the whole
+    group with one targeted notifier trigger -- the release-word bank
+    traffic disappears and losers sleep instead of polling (the tree
+    analogue of the paper's TAS idle-wait discipline).  Safe back-to-back:
+    each loser's wake consumes only its own buffered event bit, and the
+    champion cannot re-trigger before every loser has re-published its
+    next-round arrival flag (the elw is on each loser's critical path).
     """
     n = st.n_cores
     radix = st.radix
@@ -106,28 +119,34 @@ def tree_barrier(cl, cid: int, st: TreeBarrierState, cm=DEFAULT_COSTS):
             partner = cid + m * stride
             if partner >= n:
                 break
-            while True:
-                v = yield Mem("lw", _flag_addr(partner))
-                yield Compute(1 + cm.load_use)
-                if v == sense:
-                    break
-                yield Compute(cm.branch_taken)
+            yield Poll(
+                "lw", _flag_addr(partner), until=sense,
+                hit_cycles=1 + cm.load_use,
+                miss_cycles=1 + cm.load_use + cm.branch_taken,
+                hit_instr=1, miss_instr=2,
+            )
         stride *= radix
     if is_champion:
-        # core 0 saw every subtree arrive: flip the shared release word
-        yield Mem("sw", A_TREE_RELEASE, sense)
+        if idle_wait:
+            # one targeted notifier trigger wakes every loser (core 0 is
+            # excluded: its own stale event bit would leak into the next
+            # barrier's elw)
+            yield Scu("write", ("notifier", 0, "trigger"), ((1 << n) - 1) & ~1)
+        else:
+            # core 0 saw every subtree arrive: flip the shared release word
+            yield Mem("sw", A_TREE_RELEASE, sense)
+    elif idle_wait:
+        # clock-gated wait for the champion's notifier broadcast
+        yield Compute(cm.mask_setup)
+        yield Scu("elw", ("notifier", 0, "wait"))
     else:
-        while True:
-            s = yield Mem("lw", A_TREE_RELEASE)
-            yield Compute(1 + cm.load_use)
-            if s == sense:
-                break
-            yield Compute(cm.branch_taken)
+        yield Poll(
+            "lw", A_TREE_RELEASE, until=sense,
+            hit_cycles=1 + cm.load_use,
+            miss_cycles=1 + cm.load_use + cm.branch_taken,
+            hit_instr=1, miss_instr=2,
+        )
     yield Compute(cm.ret)
-
-
-def _tree_sim_barrier(cluster, cid, state, cost_model=None):
-    yield from tree_barrier(cluster, cid, state, cost_model or DEFAULT_COSTS)
 
 
 def _tree_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
@@ -136,31 +155,41 @@ def _tree_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
     yield from sw_mutex_section(cluster, cid, t_crit, cost_model or DEFAULT_COSTS)
 
 
-def make_tree_policy(radix: int = 2, name: Optional[str] = None) -> PolicyDef:
+def make_tree_policy(
+    radix: int = 2, name: Optional[str] = None, idle_wait: bool = False
+) -> PolicyDef:
     """Build a tournament-barrier policy with the given ``radix``.
 
     ``radix=2`` is the registered builtin ``tree``; higher radices trade
     per-level fan-in for depth (``ceil(log_radix n)`` levels -- radix 4
-    halves the depth on 16-core clusters).  The returned policy is not
-    registered; call :func:`repro.sync.register_policy` to add e.g. a
-    ``tree4`` row to every benchmark.
+    halves the depth on 16-core clusters).  ``idle_wait=True`` replaces the
+    release-word spin with a clock-gated SCU-notifier wait (the builtin
+    ``tree_ew``).  The returned policy is not registered; call
+    :func:`repro.sync.register_policy` to add e.g. a ``tree4`` row to every
+    benchmark.
     """
     name = name or ("tree" if radix == 2 else f"tree{radix}")
 
     def _state(n_cores: int) -> TreeBarrierState:
         return TreeBarrierState(n_cores, radix=radix)
 
+    def _sim_barrier(cluster, cid, state, cost_model=None):
+        yield from tree_barrier(
+            cluster, cid, state, cost_model or DEFAULT_COSTS, idle_wait=idle_wait
+        )
+
+    release = "SCU-notifier idle-wait release" if idle_wait else "release-word spin"
     return PolicyDef(
         name=name,
         description=(
-            f"log-depth hierarchical barrier (MemPool-style), radix {radix}: "
-            "simulator tournament tree, chip-level butterfly exchange, "
-            "training: hierarchical bucketed reduce-scatter (numerically "
-            "identical to scu)"
+            f"log-depth hierarchical barrier (MemPool-style), radix {radix}, "
+            f"{release}: simulator tournament tree, chip-level butterfly "
+            "exchange, training: hierarchical bucketed reduce-scatter "
+            "(numerically identical to scu)"
         ),
         aliases=(name.upper(),),
         make_sim_state=_state,
-        sim_barrier=_tree_sim_barrier,
+        sim_barrier=_sim_barrier,
         sim_mutex=_tree_sim_mutex,
         # the chip-level exchange stays the radix-2 butterfly: XLA owns the
         # physical schedule there, the radix only shapes the simulator tree
@@ -196,3 +225,7 @@ TREE = register_policy(make_tree_policy(radix=2, name="tree"))
 # a builtin so every benchmark (Table 1, Fig. 5, scaling sweeps, Table 2,
 # chip-level, chain) carries a dedicated ``tree4`` row.
 TREE4 = register_policy(make_tree_policy(radix=4))
+# Idle-wait release variant: losers clock-gate on an SCU notifier event
+# instead of spinning on the release word -- the release broadcast costs one
+# targeted trigger and zero TCDM polls.
+TREE_EW = register_policy(make_tree_policy(radix=2, name="tree_ew", idle_wait=True))

@@ -46,7 +46,8 @@ def test_golden_baseline_satisfies_schema(baseline):
 def test_schema_requires_every_section(baseline):
     for key in (
         "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
-        "chain", "chain_scaling", "engine_perf", "jax_barriers_ok",
+        "chain", "chain_scaling", "work_queue", "work_queue_scaling",
+        "engine_perf", "jax_barriers_ok",
     ):
         broken = {k: v for k, v in baseline.items() if k != key}
         errors = bench_compare.validate_schema(broken)
@@ -78,17 +79,36 @@ def test_schema_catches_chain_row_drift(baseline):
 
 
 def test_artifact_carries_every_registered_policy(baseline):
-    """Table-1/Fig-5/chain rows exist for every registered policy, including
-    the tree4 and fifo extensions -- the per-discipline benchmark surface."""
+    """Table-1/Fig-5/chain/work-queue rows exist for every registered
+    policy, including the tree4/tree_ew/fifo extensions -- the
+    per-discipline benchmark surface."""
     from repro.sync import available_policies
 
     table1_policies = {r["policy"] for r in baseline["table1"]}
     fig5_policies = set(baseline["fig5"])
     chain_policies = {r["policy"] for r in baseline["chain"]["rows"]}
+    wq_policies = {r["policy"] for r in baseline["work_queue"]["rows"]}
     for policy in available_policies():
         assert policy in table1_policies, f"{policy}: no Table-1 row"
         assert policy in fig5_policies, f"{policy}: no Fig-5 row"
         assert policy in chain_policies, f"{policy}: no chain row"
+        assert policy in wq_policies, f"{policy}: no work-queue row"
+
+
+def test_scaling_rows_reach_256_cores(baseline):
+    """Every scaling benchmark carries 128- and 256-core rows (the
+    vectorized-engine acceptance surface)."""
+    t1_counts = {n for r in baseline["table1_scaling"] for n in r["core_counts"]}
+    fig5_counts = {int(n) for n in baseline["fig5_scaling"]}
+    chain_counts = {r["n_cores"] for r in baseline["chain_scaling"]}
+    wq_counts = {r["n_cores"] for r in baseline["work_queue_scaling"]}
+    for counts, name in (
+        (t1_counts, "table1_scaling"),
+        (fig5_counts, "fig5_scaling"),
+        (chain_counts, "chain_scaling"),
+        (wq_counts, "work_queue_scaling"),
+    ):
+        assert {128, 256} <= counts, f"{name}: missing 128/256-core rows"
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +155,38 @@ def test_gate_fails_on_min_sfr_regression(baseline):
     entry["min_sfr_energy_10pct"] = entry["min_sfr_energy_10pct"] * 1.10
     regressions, _ = bench_compare.compare(baseline, doctored)
     assert any("min_sfr_energy_10pct" in r for r in regressions)
+
+
+def test_throughput_soft_gate(baseline):
+    """Engine-throughput gate: a collapse below 0.5x of the committed
+    baseline cyc/s fails, a dip below 1.0x only warns, parity is silent."""
+    fails, warns = bench_compare.compare_throughput(baseline, baseline)
+    assert fails == [] and warns == []
+
+    def scaled(f):
+        doctored = copy.deepcopy(baseline)
+        perf = doctored["engine_perf"]
+        perf["speedup"] *= f
+        perf["contended"]["speedup"] *= f
+        return doctored
+
+    fails, warns = bench_compare.compare_throughput(baseline, scaled(0.4))
+    assert fails, "a 0.4x throughput collapse must fail the soft gate"
+    fails, warns = bench_compare.compare_throughput(baseline, scaled(0.8))
+    assert not fails and warns, "a 0.8x dip must warn, not fail"
+    fails, warns = bench_compare.compare_throughput(baseline, scaled(1.3))
+    assert not fails and not warns
+
+
+def test_throughput_gate_wired_into_main(tmp_path, baseline):
+    """The CLI must fail (exit 1) on a hard throughput collapse."""
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(baseline))
+    doctored = copy.deepcopy(baseline)
+    doctored["engine_perf"]["contended"]["speedup"] *= 0.3
+    cur_p = tmp_path / "slow.json"
+    cur_p.write_text(json.dumps(doctored))
+    assert bench_compare.main([str(base_p), str(cur_p)]) == 1
 
 
 def test_main_exit_codes(tmp_path, baseline):

@@ -24,7 +24,7 @@ from repro.core.scu.primitives import (
     tas_barrier,
 )
 
-POLICIES = ("scu", "tas", "sw", "tree", "tree4", "fifo")
+POLICIES = ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo")
 MODES = ("lockstep", "fastforward")
 
 
@@ -501,6 +501,7 @@ GOLDEN_BARRIER = {  # policy: (2, 4, 8 cores), sfr=0
     "sw": (49.1875, 88.1250, 172.5000),
     "tree": (20.4375, 29.3750, 44.1250),
     "tree4": (20.4375, 25.5000, 42.4375),
+    "tree_ew": (19.2500, 27.2500, 35.2500),
     "fifo": (17.0625, 29.3125, 61.3125),
 }
 GOLDEN_MUTEX_T10 = {  # policy: (2, 4, 8 cores), t_crit=10
@@ -509,6 +510,7 @@ GOLDEN_MUTEX_T10 = {  # policy: (2, 4, 8 cores), t_crit=10
     "sw": (30.1250, 63.8125, 129.1875),
     "tree": (30.1250, 63.8125, 129.1875),
     "tree4": (30.1250, 63.8125, 129.1875),
+    "tree_ew": (30.1250, 63.8125, 129.1875),
     "fifo": (32.1875, 64.1875, 128.1875),
 }
 
@@ -558,19 +560,30 @@ def test_engine_modes_bit_exact_on_apps(app_name):
         assert a == b, f"{app_name}/{policy}: app results diverged"
 
 
-def _run_random_mix(seed: int, policy_name: str, n: int, mode: str):
+def _run_random_mix(
+    seed: int, policy_name: str, n: int, mode: str, with_mutex: bool = True
+):
     """Random program mix: per-core compute skew, shared-policy barriers,
     critical sections, and raw TCDM traffic -- all parameters drawn up
-    front so both engine modes replay the identical program."""
+    front so both engine modes replay the identical program.
+
+    ``with_mutex=False`` drops the critical sections: at 256 cores the
+    software mutexes serialize ~O(n^2) spin cycles per round, which makes
+    the *lockstep reference* side of the cross-check the bottleneck; the
+    mutex path is covered at 64/128 cores instead."""
     from repro.sync import get_policy
 
     rng = random.Random(seed)
     rounds = 3
     delays = [[rng.randint(1, 80) for _ in range(rounds)] for _ in range(n)]
     tcrits = [rng.randint(0, 12) for _ in range(rounds)]
+    # random traffic lives far above every sync-variable range: the tree
+    # policies' per-core flag words reach 0x200 + 4*cid (0x5FC at 256
+    # cores), and a random store clobbering an arrival flag livelocks the
+    # barrier by design
     mem_ops = [
         [
-            (rng.choice(("lw", "sw")), 0x400 + 4 * rng.randint(0, 15))
+            (rng.choice(("lw", "sw")), 0x8000 + 4 * rng.randint(0, 15))
             for _ in range(rng.randint(0, 4))
         ]
         for _ in range(n)
@@ -586,9 +599,10 @@ def _run_random_mix(seed: int, policy_name: str, n: int, mode: str):
                 for kind, addr in mem_ops[cid]:
                     yield Mem(kind, addr, cid)
                 yield from policy.sim_barrier(cluster, _cid, state, DEFAULT_COSTS)
-                yield from policy.sim_mutex(
-                    cluster, _cid, tcrits[r], state, DEFAULT_COSTS
-                )
+                if with_mutex:
+                    yield from policy.sim_mutex(
+                        cluster, _cid, tcrits[r], state, DEFAULT_COSTS
+                    )
         return prog
 
     cl.load([make_prog(cid) for cid in range(n)])
@@ -699,6 +713,306 @@ def test_fastforward_actually_skips():
     st_ = cl.run()
     assert cl.ff_spans > 0
     assert cl.ff_cycles > 0.9 * st_.cycles
+
+
+# ---------------------------------------------------------------------------
+# Event-FIFO blocking push (push_wait): backpressure without a credit queue
+# ---------------------------------------------------------------------------
+
+
+def test_push_wait_completes_immediately_when_room():
+    """With room in the queue, the blocking push is accepted on the next
+    comparator evaluation and echoes the pushed value back."""
+    cl = make_cluster(2)
+    got = {}
+
+    def producer(cluster, cid):
+        v = yield Scu("elw", ("fifo", 1, "push_wait"), 42)
+        got["echo"] = v
+
+    def consumer(cluster, cid):
+        yield Compute(10)
+        got["v"] = yield Scu("elw", ("fifo", 1, "pop"))
+
+    cl.load([producer, consumer])
+    st = cl.run(max_cycles=10_000)
+    assert got["v"] == 42
+    assert got["echo"] == 42
+    assert st.cores[0].gated_cycles == 0  # never had to sleep
+
+
+def test_push_wait_blocks_until_consumer_drains():
+    """A blocking push against a full queue clock-gates the producer until a
+    pop frees a slot; no event is ever dropped."""
+    scu = SCU(n_cores=2, fifo_depth=2)
+    cl = Cluster(n_cores=2, scu=scu)
+    got = []
+
+    def producer(cluster, cid):
+        for v in (1, 2, 3, 4):
+            yield Scu("elw", ("fifo", 1, "push_wait"), v)
+
+    def consumer(cluster, cid):
+        yield Compute(60)  # let the producer fill the queue and block
+        for _ in range(4):
+            v = yield Scu("elw", ("fifo", 1, "pop"))
+            got.append(v)
+            yield Compute(20)
+
+    cl.load([producer, consumer])
+    st = cl.run(max_cycles=100_000)
+    assert got == [1, 2, 3, 4]
+    assert scu.fifos[1].dropped == 0
+    assert st.cores[0].gated_cycles > 20  # blocked on the full queue
+
+
+def test_push_wait_full_queue_with_popper_makes_progress_every_cycle():
+    """Pop and blocked push can complete in the same evaluation: a full
+    queue with a waiting consumer still moves one item per cycle."""
+    scu = SCU(n_cores=2, fifo_depth=1)
+    cl = Cluster(n_cores=2, scu=scu)
+    got = []
+
+    def producer(cluster, cid):
+        for v in (5, 6, 7):
+            yield Scu("elw", ("fifo", 1, "push_wait"), v)
+
+    def consumer(cluster, cid):
+        for _ in range(3):
+            got.append((yield Scu("elw", ("fifo", 1, "pop"))))
+
+    cl.load([producer, consumer])
+    cl.run(max_cycles=10_000)
+    assert got == [5, 6, 7]
+    assert scu.fifos[1].dropped == 0
+
+
+def test_push_wait_next_event_bound_contract():
+    """The extension contract: ``next_event_bound() == 0`` exactly when
+    ``evaluate`` could move an event this cycle, for every pusher/popper/
+    occupancy combination of the blocking push."""
+    from repro.core.scu.extensions import EventFifo
+
+    for occupancy in (0, 1, 2):
+        for n_push in (0, 1):
+            for n_pop in (0, 1):
+                f = EventFifo(index=0, depth=2)
+                for v in range(occupancy):
+                    f.push(v)
+                if n_push:
+                    f.register_pusher(0, 9)
+                if n_pop:
+                    f.register_popper(1)
+                bound = f.next_event_bound()
+                scu = SCU(n_cores=2)
+                fired = f.evaluate(scu.base)
+                if bound == 0:
+                    assert fired > 0, (
+                        f"bound 0 but no event (occ={occupancy}, "
+                        f"push={n_push}, pop={n_pop})"
+                    )
+                else:
+                    assert bound is None
+                    assert fired == 0, (
+                        f"bound None but evaluate fired (occ={occupancy}, "
+                        f"push={n_push}, pop={n_pop})"
+                    )
+
+
+def test_work_queue_all_policies_deliver_all_items():
+    """The multi-producer work queue terminates with every item consumed
+    under every registered policy (fifo runs push_wait natively)."""
+    from repro.core.scu.programs import run_work_queue_bench
+
+    for policy in POLICIES:
+        r = run_work_queue_bench(policy, 2, 2, items=12, t_produce=5,
+                                 t_consume=5)
+        assert r.cycles_total > 0, policy
+
+
+# ---------------------------------------------------------------------------
+# Tree idle-wait release variant (SCU notifier instead of the release spin)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_ew_losers_sleep_instead_of_spinning():
+    """The idle-wait release clock-gates the losers: with a straggler
+    champion-side arrival, waiting cores accumulate gated (not spin)
+    cycles, unlike the release-word spin variant."""
+    from repro.sync import get_policy
+
+    def run_policy(name):
+        policy = get_policy(name)
+        n = 8
+        cl = make_cluster(n)
+        state = policy.make_sim_state(n)
+
+        def prog(cluster, cid):
+            yield Compute(400 if cid == 0 else 1)  # champion is the straggler
+            yield from policy.sim_barrier(cluster, cid, state, None)
+
+        cl.load([prog] * n)
+        return cl.run(max_cycles=100_000)
+
+    spin = run_policy("tree")
+    ew = run_policy("tree_ew")
+    assert ew.total_gated > spin.total_gated
+    # the release-word spin burns active cycles on the stragglers' behalf
+    assert ew.total_active < spin.total_active
+
+
+def test_tree_ew_back_to_back_no_stale_wakeup():
+    """A stale notifier bit must never release a loser early in
+    back-to-back barriers (targeted trigger + per-core consumption)."""
+    from repro.sync import get_policy
+
+    policy = get_policy("tree_ew")
+    n = 8
+    cl = make_cluster(n)
+    state = policy.make_sim_state(n)
+    passes = [[] for _ in range(n)]
+
+    def prog(cluster, cid):
+        for k in range(6):
+            yield Compute(200 if cid == (k % n) else 1)
+            yield from policy.sim_barrier(cluster, cid, state, None)
+            passes[cid].append(cluster.cycle)
+
+    cl.load([prog] * n)
+    cl.run(max_cycles=1_000_000)
+    for k in range(5):
+        assert min(p[k + 1] for p in passes) >= max(p[k] for p in passes)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized structure-of-arrays engine: 16..256-core cross-checks
+# ---------------------------------------------------------------------------
+
+
+# (n_cores, policies): the expensive software disciplines are sampled more
+# sparsely at the largest sizes -- reference-stepping a contended 256-core
+# cluster is exactly the cost the vectorized engine exists to avoid.
+# (n_cores, policies, with_mutex): the 256-core rows are barrier-focused --
+# the software mutexes' O(n^2) serialized spin makes the lockstep
+# *reference* side the bottleneck, and the mutex path is covered at 64/128.
+LARGE_CROSS_CHECKS = (
+    (16, ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo"), True),
+    (64, ("sw", "tas", "tree4", "fifo"), True),
+    (128, ("sw", "tree", "fifo"), True),
+    (256, ("scu", "tree4", "tree_ew", "fifo"), False),
+)
+
+
+@pytest.mark.parametrize("n,policies,with_mutex", LARGE_CROSS_CHECKS)
+def test_vectorized_matches_lockstep_on_large_clusters(n, policies, with_mutex):
+    """Randomized lockstep-vs-vectorized cross-check at 16/64/128/256 cores:
+    the structure-of-arrays step, the vectorized arbiter and the spin-phase
+    batch resolver must be bit-exact against the scalar reference."""
+    for i, policy in enumerate(policies):
+        lock = _run_random_mix(1000 + 7 * n + i, policy, n, "lockstep", with_mutex)
+        fast = _run_random_mix(1000 + 7 * n + i, policy, n, "fastforward", with_mutex)
+        assert lock == fast, f"engines diverged (policy={policy}, n={n})"
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_vectorized_work_queue_matches_lockstep(n):
+    """The work-queue shapes (mutex churn + clock-gated FIFO pops) at
+    vectorized cluster sizes."""
+    from repro.core.scu.programs import run_work_queue_bench
+
+    for policy in ("sw", "fifo"):
+        a = run_work_queue_bench(policy, n // 2, n - n // 2, items=2 * n,
+                                 mode="lockstep")
+        b = run_work_queue_bench(policy, n // 2, n - n // 2, items=2 * n,
+                                 mode="fastforward")
+        assert a.stats == b.stats, f"{policy}@{n}: work queue diverged"
+
+
+def _adversarial_spin_program(n):
+    """A spin-phase-heavy program that drags the batch resolver on and off:
+
+    * long pure-spin phases (everyone polls while core 0 computes) that the
+      resolver must batch, including one long enough to trip the period
+      detector;
+    * mid-phase disqualifications: a waker that interleaves plain stores
+      and SCU notifier traffic (armed comparators force full steps);
+    * poll hits landing at staggered times, including a TAS lock handoff.
+    """
+    from repro.core.scu.engine import Poll
+
+    A_FLAG = 0x900
+    A_LOCK = 0x904
+
+    def prog(cluster, cid):
+        for rnd in range(3):
+            if cid == 0:
+                yield Compute(120 + 400 * rnd)  # spin horizon (long in rnd 2)
+                yield Mem("sw", A_FLAG, rnd + 1)  # release the lw spinners
+                yield Compute(5)
+                yield Scu("write", ("notifier", 2, "trigger"), 0b10)
+                yield Mem("sw", A_LOCK, 0)  # hand the TAS lock around
+            elif cid == 1:
+                # sleeps mid-phase: the resolver must treat it as spectator
+                yield Scu("elw", ("notifier", 2, "wait"))
+                yield Compute(3)
+            elif cid % 2 == 0:
+                yield Poll("lw", A_FLAG, until=rnd + 1, hit_cycles=2,
+                           miss_cycles=4, hit_instr=1, miss_instr=2)
+                yield Compute(7)
+            else:
+                yield Poll("tas", A_LOCK, until=0, hit_cycles=1,
+                           miss_cycles=3, hit_instr=1, miss_instr=1)
+                yield Compute(2)
+                yield Mem("sw", A_LOCK, 0)
+        # final all-spin phase with no spectator: ends only by the hits
+        if cid == 0:
+            yield Mem("sw", A_FLAG, 99)
+        else:
+            yield Poll("lw", A_FLAG, until=99, hit_cycles=2, miss_cycles=4,
+                       hit_instr=1, miss_instr=2)
+
+    return prog
+
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_spin_batch_resolver_adversarial_program(n):
+    """The adversarial program forces the spin-phase resolver on and off
+    mid-run; stats must stay bit-exact and the resolver must actually
+    engage (and batch a long phase through the period detector)."""
+    def build(mode):
+        cl = make_cluster(n, mode=mode)
+        cl.load([_adversarial_spin_program(n)] * n)
+        return cl
+
+    lock = build("lockstep")
+    a = lock.run(max_cycles=2_000_000)
+    fast = build("fastforward")
+    b = fast.run(max_cycles=2_000_000)
+    assert a == b, f"adversarial spin program diverged at {n} cores"
+    assert fast.ff_batch_spans > 0, "spin-phase resolver never engaged"
+    assert fast.ff_batch_cycles > 0
+
+
+def test_spin_batch_resolver_period_jump_on_long_phase():
+    """A single long spin phase (one straggler, everyone else polling) must
+    be covered almost entirely by batch-resolved cycles, not full steps --
+    the period detector collapsing the horizon is what makes the
+    imbalanced-app shapes affordable."""
+    n = 8
+    cl = make_cluster(n, mode="fastforward")
+    from repro.core.scu.engine import Poll
+
+    def prog(cluster, cid):
+        if cid == 0:
+            yield Compute(20_000)
+            yield Mem("sw", 0x900, 1)
+        else:
+            yield Poll("lw", 0x900, until=1, hit_cycles=2, miss_cycles=4,
+                       hit_instr=1, miss_instr=2)
+
+    cl.load([prog] * n)
+    st = cl.run()
+    assert cl.ff_batch_cycles > 0.95 * st.cycles
 
 
 def test_invalid_engine_mode_rejected():

@@ -24,7 +24,7 @@ from repro.sync import (
     unregister_policy,
 )
 
-BUILTINS = ("scu", "tas", "sw", "tree", "tree4", "fifo")
+BUILTINS = ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo")
 
 
 # ---------------------------------------------------------------------------
@@ -35,7 +35,7 @@ BUILTINS = ("scu", "tas", "sw", "tree", "tree4", "fifo")
 def test_builtins_registered_in_order():
     names = available_policies()
     assert names[:3] == ("scu", "tas", "sw")  # the paper's triad first
-    for ext in ("tree", "tree4", "fifo"):  # the registered extensions
+    for ext in ("tree", "tree4", "tree_ew", "fifo"):  # registered extensions
         assert ext in names
 
 
