@@ -18,6 +18,9 @@ Three read-outs:
     barrier pay the cluster-wide maximum each tick while the FIFO chain only
     couples neighbors.
 
+The (policy x SFR) sweep and the depth sweep dispatch through the fleet
+engine as one batched ``simulate_fleet`` call (bit-exact per config).
+
     PYTHONPATH=src python -m benchmarks.chain_pipeline
 """
 
@@ -28,7 +31,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.scu.apps import APPS, PIPELINED_APPS, run_app_pipelined
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
-from repro.core.scu.programs import run_chain_bench
+from repro.core.scu.programs import make_fleet, prep_chain_bench
 from repro.sync import available_policies
 
 SFRS = (50, 200, 800)
@@ -49,24 +52,34 @@ def run(
     """Chain sweep over every policy + the fifo depth sweep + pipelined app."""
     sfrs = list(sfrs) if sfrs is not None else list(SFRS)
     policies = available_policies()
+    # the (policy x SFR) sweep plus the fifo depth sweep as ONE batched
+    # fleet call (bit-exact per config vs sequential Cluster.run())
+    grid = [(policy, sfr) for policy in policies for sfr in sfrs]
+    results = make_fleet(
+        [
+            prep_chain_bench(policy, n_cores, sfr=sfr, iters=iters, depth=depth)
+            for policy, sfr in grid
+        ]
+        + [
+            prep_chain_bench("fifo", n_cores, sfr=sfrs[0], iters=iters, depth=d)
+            for d in DEPTHS
+        ]
+    )
     rows: List[Dict] = []
-    for policy in policies:
-        for sfr in sfrs:
-            r = run_chain_bench(policy, n_cores, sfr=sfr, iters=iters, depth=depth)
-            rows.append({
-                "policy": policy,
-                "n_cores": n_cores,
-                "sfr": sfr,
-                "depth": depth,
-                "cycles_per_item": r.cycles_per_iter,
-                "overhead_cycles": r.prim_cycles,
-                "energy_nj_per_item": _energy_nj_per_item(r),
-                "gated_per_item": r.gated_core_cycles_per_iter,
-            })
+    for (policy, sfr), r in zip(grid, results):
+        rows.append({
+            "policy": policy,
+            "n_cores": n_cores,
+            "sfr": sfr,
+            "depth": depth,
+            "cycles_per_item": r.cycles_per_iter,
+            "overhead_cycles": r.prim_cycles,
+            "energy_nj_per_item": _energy_nj_per_item(r),
+            "gated_per_item": r.gated_core_cycles_per_iter,
+        })
 
     depth_rows: List[Dict] = []
-    for d in DEPTHS:
-        r = run_chain_bench("fifo", n_cores, sfr=sfrs[0], iters=iters, depth=d)
+    for d, r in zip(DEPTHS, results[len(grid):]):
         depth_rows.append({
             "depth": d,
             "sfr": sfrs[0],
@@ -143,8 +156,12 @@ def run_scaling(
             if n >= SCALING_LARGE_FROM
             else available_policies()
         )
-        for policy in policies:
-            r = run_chain_bench(policy, n, sfr=sfr, iters=iters, depth=depth)
+        # one fleet per core count (see table1_primitives.run_scaling)
+        results = make_fleet([
+            prep_chain_bench(policy, n, sfr=sfr, iters=iters, depth=depth)
+            for policy in policies
+        ])
+        for policy, r in zip(policies, results):
             rows.append({
                 "policy": policy,
                 "n_cores": n,

@@ -1,6 +1,6 @@
 """Engine throughput: simulated cycles per second, lockstep vs fastforward.
 
-Two sweeps:
+Three sweeps:
 
 * **Quiescent** (the PR-2 headline): the Fig. 5 barrier sweep at SFR >= 1000
   under both engine modes.  Dominated by compute spans and clock-gated
@@ -15,6 +15,13 @@ Two sweeps:
   only run (and parity-asserted) on the smallest cluster -- reference-
   stepping a contended 256-core cluster is exactly the cost the vectorized
   engine exists to avoid.
+* **Fleet** (the PR-5 headline): a fixed 64-config combined
+  Table-1 + Fig-5 + chain + work-queue sweep, run once config-at-a-time
+  (the sequential dispatch the benchmarks used before the fleet engine)
+  and once as one batched ``simulate_fleet`` call.  Per-config results are
+  asserted bit-identical; the wall-clock ratio is the fleet speedup, with
+  a separate ratio for the 8-core-only subset (the configs that sat below
+  the single-cluster vectorization threshold before fleet mode).
 
     PYTHONPATH=src python -m benchmarks.engine_perf [--json PATH]
 
@@ -204,6 +211,121 @@ def run_contended(
     return result
 
 
+def _fleet_benches():
+    """The fixed 64-config combined sweep behind the ``fleet`` row.
+
+    Table-1 shapes (barrier/mutex), Fig-5 SFR points, pipelined chains and
+    work queues for every registered policy -- 42 eight-core configs (the
+    previously-unvectorizable regime) plus 16- and 32-core scaling shapes.
+    Returns fresh benches every call: generators and shared policy state
+    are single-use, and the sequential/fleet passes must replay identical
+    programs.
+    """
+    from repro.core.scu.programs import (
+        prep_barrier_bench,
+        prep_chain_bench,
+        prep_mutex_bench,
+        prep_work_queue_bench,
+    )
+
+    benches = []
+    for p in available_policies():
+        benches += [
+            # Table-1 shapes @ 8 cores
+            prep_barrier_bench(p, 8, sfr=0, iters=16),
+            prep_mutex_bench(p, 8, t_crit=10, iters=16),
+            # Fig-5 SFR points @ 8 cores
+            prep_barrier_bench(p, 8, sfr=100, iters=16),
+            prep_barrier_bench(p, 8, sfr=1000, iters=16),
+            # pipelined chain + work queue @ 8 cores
+            prep_chain_bench(p, 8, sfr=200, iters=16, depth=8),
+            prep_work_queue_bench(p, 4, 4, items=32),
+            # scaling shapes (16/32 cores)
+            prep_barrier_bench(p, 16, sfr=0, iters=8),
+            prep_chain_bench(p, 16, sfr=200, iters=8, depth=8),
+            prep_work_queue_bench(p, 8, 8, items=32),
+        ]
+    benches.append(prep_barrier_bench("scu", 32, sfr=160, iters=8))
+    return benches
+
+
+def run_fleet(verbose: bool = True) -> Dict:
+    """Batched-fleet vs sequential dispatch on the fixed 64-config sweep.
+
+    Both passes run the *same* engine code per config (fastforward tiers);
+    the only difference is dispatch -- one ``simulate_fleet`` call vs one
+    ``Cluster.run()`` per config -- so the wall-clock ratio is a same-run,
+    same-machine measure of the batching win (machine-independent, like
+    the other engine speedup gates).  Per-config ``ClusterStats`` are
+    asserted bit-identical between the two dispatches.
+    """
+    from repro.core.scu.programs import make_fleet
+
+    # sequential pass, timed per bench so the 8-core subset cost falls out
+    benches = _fleet_benches()
+    seq_results = []
+    seq_wall = []
+    for b in benches:
+        t0 = time.perf_counter()
+        seq_results.append(b.run_sequential())
+        seq_wall.append(time.perf_counter() - t0)
+    t_seq = sum(seq_wall)
+
+    # batched pass (fresh benches), then bit-exactness
+    fresh = _fleet_benches()
+    t0 = time.perf_counter()
+    fleet_results = make_fleet(fresh)
+    t_fleet = time.perf_counter() - t0
+    for s, f in zip(seq_results, fleet_results):
+        if s.stats != f.stats:
+            raise AssertionError(
+                f"fleet dispatch diverged from sequential on "
+                f"{s.variant}/{s.primitive}@{s.n_cores}"
+            )
+
+    # the 8-core-only subset as its own fleet
+    is8 = [b.config.cluster.n_cores == 8 for b in benches]
+    t_seq8 = sum(w for w, m in zip(seq_wall, is8) if m)
+    fresh8 = [b for b in _fleet_benches() if b.config.cluster.n_cores == 8]
+    t0 = time.perf_counter()
+    fleet8 = make_fleet(fresh8)
+    t_fleet8 = time.perf_counter() - t0
+    seq8 = [r for r, m in zip(seq_results, is8) if m]
+    for s, f in zip(seq8, fleet8):
+        if s.stats != f.stats:
+            raise AssertionError(
+                f"8-core fleet diverged on {s.variant}/{s.primitive}"
+            )
+    total_cycles = sum(r.cycles_total for r in seq_results)
+
+    result = {
+        "configs": len(benches),
+        "configs_8core": sum(is8),
+        "cycles": total_cycles,
+        "wall_s": {
+            "sequential": t_seq,
+            "fleet": t_fleet,
+            "sequential_8core": t_seq8,
+            "fleet_8core": t_fleet8,
+        },
+        # same-run dispatch ratios (the soft-gated keys)
+        "speedup": t_seq / max(t_fleet, 1e-9),
+        "speedup_8core": t_seq8 / max(t_fleet8, 1e-9),
+    }
+    if verbose:
+        print(f"\n== Fleet dispatch ({len(benches)} configs, combined "
+              "Table-1/Fig-5/chain/work-queue sweep) ==")
+        print(
+            f"sequential {t_seq:6.2f}s  fleet {t_fleet:6.2f}s  "
+            f"-> {result['speedup']:.2f}x  (bit-exact per config)"
+        )
+        print(
+            f"8-core subset ({sum(is8)} configs): sequential {t_seq8:6.2f}s  "
+            f"fleet {t_fleet8:6.2f}s  -> {result['speedup_8core']:.2f}x"
+        )
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="PATH", help="write results as JSON")
@@ -212,6 +334,7 @@ def main() -> None:
     args = ap.parse_args()
     result = run(n_cores=args.n_cores, iters=args.iters)
     result["contended"] = run_contended()
+    result["fleet"] = run_fleet()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)

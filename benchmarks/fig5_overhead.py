@@ -9,9 +9,13 @@ Every registered ``repro.sync`` policy is swept (the paper's triad plus
 extensions such as the log-depth ``tree`` barrier).  Two grids are provided:
 the paper-matching ``SFRS`` and the ~2x finer ``SFRS_DENSE`` that the
 event-driven engine makes affordable (pass ``sfrs=SFRS_DENSE`` or
-``dense=True``); :func:`run_scaling` repeats the sweep on 16/32/64-core
+``dense=True``); :func:`run_scaling` repeats the sweep on 16..256-core
 clusters, where the minimum viable SFR of the software disciplines grows
 with the core count while the SCU's stays put.
+
+Each sweep's (policy x SFR) grid dispatches through the fleet engine: one
+batched ``simulate_fleet`` call per core count instead of hundreds of
+sequential ``Cluster.run()`` calls (bit-exact per config).
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
-from repro.core.scu.programs import run_barrier_bench
+from repro.core.scu.programs import make_fleet, prep_barrier_bench
 from repro.sync import available_policies
 
 PAPER_MIN_SFR_ENERGY_8 = {"scu": 42.0, "tas": 1622.0, "sw": 1771.0}
@@ -32,8 +36,7 @@ SFRS_DENSE = [
 ]
 
 
-def _overheads(variant: str, n: int, sfr: int, iters: int) -> Tuple[float, float]:
-    r = run_barrier_bench(variant, n, sfr=sfr, iters=iters)
+def _overheads_of(r, n: int, sfr: int) -> Tuple[float, float]:
     cyc_overhead = (r.cycles_per_iter - sfr) / sfr
     act = Activity.per_iter(r.stats, r.iters)
     e_total = DEFAULT_ENERGY.energy_pj(act)
@@ -65,11 +68,19 @@ def run(
 ) -> Dict:
     sfrs = list(sfrs) if sfrs is not None else (SFRS_DENSE if dense else SFRS)
     variants = available_policies()
+    # the whole (policy x SFR) grid as one batched fleet call: this is the
+    # sweep that previously ran hundreds of sequential 8-core Cluster.run()
+    # calls below the vectorization threshold
+    results = iter(make_fleet([
+        prep_barrier_bench(variant, n_cores, sfr=sfr, iters=iters)
+        for variant in variants
+        for sfr in sfrs
+    ]))
     curves = {}
     for variant in variants:
         cyc_curve, en_curve = [], []
         for sfr in sfrs:
-            c, e = _overheads(variant, n_cores, sfr, iters)
+            c, e = _overheads_of(next(results), n_cores, sfr)
             cyc_curve.append((sfr, c))
             en_curve.append((sfr, e))
         curves[variant] = {"cycles": cyc_curve, "energy": en_curve}

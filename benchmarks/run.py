@@ -1,15 +1,26 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
+                                            [--only SECTION[,SECTION...]]
 
 Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), the pipelined
-producer-consumer chain microbenchmark (SCU event FIFO), the 16/32/64-core
-scaling sweeps and the engine-throughput benchmark, then the Tier-2 roofline
-read-out from the dry-run artifacts.  The chip-level
-barrier timing benchmark needs its own process with
+producer-consumer chain and multi-producer work-queue microbenchmarks (SCU
+event FIFO), the scaling sweeps (16/32/64/128/256-core clusters; --fast
+samples 16/64/128/256) and the engine-throughput benchmark (quiescent,
+contended and fleet-dispatch sweeps), then the Tier-2 roofline read-out
+from the dry-run artifacts.  The Table-1/Fig-5/chain/work-queue sweeps and
+their scaling variants dispatch through the batched fleet engine
+(``repro.core.scu.engine.simulate_fleet``); per-config numbers are
+bit-exact against sequential runs.  The chip-level barrier timing
+benchmark needs its own process with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and is invoked as a
 subprocess (device count is locked at jax init); its failure propagates to
 this process's exit code so CI actually gates on it.
+
+``--only`` restricts the run to a comma-separated subset of sections (see
+``SECTIONS``; unknown names exit nonzero) for CI and local iteration.
+Note a filtered ``--json`` artifact is partial and will not satisfy the
+full schema gate in ``scripts/bench_compare.py``.
 
 ``--json`` writes the machine-readable key numbers (Table-1/Fig-5 rows,
 scaling rows, engine throughput per mode) -- the seed of the performance
@@ -77,6 +88,20 @@ def _fig5_json(result):
     }
 
 
+# --only section names, in run order
+SECTIONS = (
+    "table1",
+    "fig5",
+    "table2",
+    "chain",
+    "work_queue",
+    "scaling",
+    "engine_perf",
+    "jax_barriers",
+    "roofline",
+)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the slow PCA app")
@@ -84,7 +109,27 @@ def main() -> int:
         "--json", metavar="PATH",
         help="write Table-1/Fig-5/scaling/engine-perf key numbers as JSON",
     )
+    ap.add_argument(
+        "--only", metavar="SECTION[,SECTION...]",
+        help=f"run only the given sections (of: {', '.join(SECTIONS)}); "
+        "a filtered --json artifact is partial and fails the full schema gate",
+    )
     args = ap.parse_args()
+
+    only = None
+    if args.only:
+        only = {s.strip() for s in args.only.split(",") if s.strip()}
+        unknown = only - set(SECTIONS)
+        if unknown or not only:
+            print(
+                f"[run] unknown section(s): {', '.join(sorted(unknown)) or '(none given)'}; "
+                f"valid sections: {', '.join(SECTIONS)}",
+                file=sys.stderr,
+            )
+            return 2
+
+    def want(section: str) -> bool:
+        return only is None or section in only
 
     from benchmarks import (
         chain_pipeline,
@@ -99,93 +144,113 @@ def main() -> int:
     results = {}
     rc = 0
 
-    print("#" * 72)
-    print("# Tier 1 -- paper-faithful reproduction (cycle-accurate simulator)")
-    print("#" * 72)
-    results["table1"] = _table1_json(table1_primitives.run())
-    results["fig5"] = _fig5_json(fig5_overhead.run(dense=not args.fast))
-    results["table2"] = table2_apps.run(include_slow=not args.fast)
+    if want("table1") or want("fig5") or want("table2"):
+        print("#" * 72)
+        print("# Tier 1 -- paper-faithful reproduction (cycle-accurate simulator)")
+        print("#" * 72)
+        if want("table1"):
+            results["table1"] = _table1_json(table1_primitives.run())
+        if want("fig5"):
+            results["fig5"] = _fig5_json(fig5_overhead.run(dense=not args.fast))
+        if want("table2"):
+            results["table2"] = table2_apps.run(include_slow=not args.fast)
 
-    print("\n" + "#" * 72)
-    print("# Tier 1 -- pipelined producer-consumer chains (SCU event FIFO)")
-    print("#" * 72)
-    results["chain"] = chain_pipeline.run()
+    if want("chain"):
+        print("\n" + "#" * 72)
+        print("# Tier 1 -- pipelined producer-consumer chains (SCU event FIFO)")
+        print("#" * 72)
+        results["chain"] = chain_pipeline.run()
 
-    print("\n" + "#" * 72)
-    print("# Tier 1 -- multi-producer work queues (mutex vs SCU event FIFO)")
-    print("#" * 72)
-    results["work_queue"] = work_queue.run()
+    if want("work_queue"):
+        print("\n" + "#" * 72)
+        print("# Tier 1 -- multi-producer work queues (mutex vs SCU event FIFO)")
+        print("#" * 72)
+        results["work_queue"] = work_queue.run()
 
-    print("\n" + "#" * 72)
-    print("# Tier 1 -- scaling sweeps (vectorized engine: 16..256 cores)")
-    print("#" * 72)
-    # --fast (the CI smoke) samples the decades; the full run is dense.  The
-    # 128/256-core rows are affordable because the contended path runs on
-    # the vectorized structure-of-arrays engine core.
-    scale_counts = (16, 64, 128, 256) if args.fast else (16, 32, 64, 128, 256)
-    results["table1_scaling"] = _table1_scaling_json(
-        table1_primitives.run_scaling(core_counts=scale_counts)
-    )
-    fig5_scaling = fig5_overhead.run_scaling(core_counts=scale_counts)
-    results["fig5_scaling"] = {
-        n: _fig5_json(r) for n, r in fig5_scaling.items()
-    }
-    results["chain_scaling"] = chain_pipeline.run_scaling(
-        core_counts=scale_counts
-    )
-    results["work_queue_scaling"] = work_queue.run_scaling(
-        core_counts=scale_counts
-    )
+    if want("scaling"):
+        print("\n" + "#" * 72)
+        print("# Tier 1 -- scaling sweeps (vectorized engine: 16..256 cores)")
+        print("#" * 72)
+        # --fast (the CI smoke) samples the decades; the full run is dense.
+        # The 128/256-core rows are affordable because the contended path
+        # runs on the vectorized structure-of-arrays engine core.
+        scale_counts = (
+            (16, 64, 128, 256) if args.fast else (16, 32, 64, 128, 256)
+        )
+        results["table1_scaling"] = _table1_scaling_json(
+            table1_primitives.run_scaling(core_counts=scale_counts)
+        )
+        fig5_scaling = fig5_overhead.run_scaling(core_counts=scale_counts)
+        results["fig5_scaling"] = {
+            n: _fig5_json(r) for n, r in fig5_scaling.items()
+        }
+        results["chain_scaling"] = chain_pipeline.run_scaling(
+            core_counts=scale_counts
+        )
+        results["work_queue_scaling"] = work_queue.run_scaling(
+            core_counts=scale_counts
+        )
 
-    print("\n" + "#" * 72)
-    print("# Engine throughput -- lockstep vs event-driven fast-forward")
-    print("#" * 72)
-    # reduced sweep under --fast: the lockstep side is the slow half, and the
-    # dedicated CI perf-smoke job already runs the full benchmark
-    perf = (
-        engine_perf.run(sfrs=(1000, 2500), iters=4)
-        if args.fast
-        else engine_perf.run()
-    )
-    contended = engine_perf.run_contended(
-        core_counts=(8, 64) if args.fast else engine_perf.CONTENDED_CORES
-    )
-    results["engine_perf"] = {
-        "cycles_per_sec": perf["cycles_per_sec"],
-        "speedup": perf["speedup"],
-        "n_cores": perf["n_cores"],
-        "sfrs": perf["sfrs"],
-        "contended": {
-            "cycles_per_sec": contended["cycles_per_sec"],
-            "speedup": contended["speedup"],
-            "core_counts": contended["core_counts"],
-            "sfrs": contended["sfrs"],
-        },
-    }
+    if want("engine_perf"):
+        print("\n" + "#" * 72)
+        print("# Engine throughput -- lockstep vs fast-forward vs fleet")
+        print("#" * 72)
+        # reduced sweep under --fast: the lockstep side is the slow half, and
+        # the dedicated CI perf-smoke job already runs the full benchmark
+        perf = (
+            engine_perf.run(sfrs=(1000, 2500), iters=4)
+            if args.fast
+            else engine_perf.run()
+        )
+        contended = engine_perf.run_contended(
+            core_counts=(8, 64) if args.fast else engine_perf.CONTENDED_CORES
+        )
+        fleet = engine_perf.run_fleet()
+        results["engine_perf"] = {
+            "cycles_per_sec": perf["cycles_per_sec"],
+            "speedup": perf["speedup"],
+            "n_cores": perf["n_cores"],
+            "sfrs": perf["sfrs"],
+            "contended": {
+                "cycles_per_sec": contended["cycles_per_sec"],
+                "speedup": contended["speedup"],
+                "core_counts": contended["core_counts"],
+                "sfrs": contended["sfrs"],
+            },
+            "fleet": {
+                "configs": fleet["configs"],
+                "configs_8core": fleet["configs_8core"],
+                "wall_s": fleet["wall_s"],
+                "speedup": fleet["speedup"],
+                "speedup_8core": fleet["speedup_8core"],
+            },
+        }
 
-    print("\n" + "#" * 72)
-    print("# Tier 2 -- chip-level barrier disciplines (8 host devices)")
-    print("#" * 72)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = "src"
-    r = subprocess.run(
-        [sys.executable, "-m", "benchmarks.jax_barriers"],
-        env=env,
-        capture_output=True,
-        text=True,
-        timeout=1200,
-    )
-    print(r.stdout)
-    results["jax_barriers_ok"] = r.returncode == 0
-    if r.returncode != 0:
-        print("[jax_barriers] failed:", r.stderr[-2000:])
-        rc = 1
+    if want("jax_barriers"):
+        print("\n" + "#" * 72)
+        print("# Tier 2 -- chip-level barrier disciplines (8 host devices)")
+        print("#" * 72)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = "src"
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.jax_barriers"],
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=1200,
+        )
+        print(r.stdout)
+        results["jax_barriers_ok"] = r.returncode == 0
+        if r.returncode != 0:
+            print("[jax_barriers] failed:", r.stderr[-2000:])
+            rc = 1
 
-    print("\n" + "#" * 72)
-    print("# Tier 2 -- roofline from the multi-pod dry-run artifacts")
-    print("#" * 72)
-    roofline.run()
+    if want("roofline"):
+        print("\n" + "#" * 72)
+        print("# Tier 2 -- roofline from the multi-pod dry-run artifacts")
+        print("#" * 72)
+        roofline.run()
 
     if args.json:
         with open(args.json, "w") as f:

@@ -9,15 +9,20 @@ registered discipline is measured -- the paper's triad against its Table 1
 numbers, extensions (e.g. ``tree``) as new rows without paper references.
 
 :func:`run_scaling` extends the table beyond the paper's 8-core cluster to
-MemPool-scale 16/32/64-core clusters (Riedel et al., 2023) -- affordable
+MemPool-scale 16..256-core clusters (Riedel et al., 2023) -- affordable
 because the event-driven engine skips quiescent cycles (see
 ``benchmarks/engine_perf.py``).
+
+Both sweeps dispatch through the **fleet engine**: every (primitive,
+policy, core-count) cell is prepared up front and the whole table runs as
+one batched ``simulate_fleet`` call (bit-exact per config against
+one-at-a-time runs; see ``repro.core.scu.engine``).
 """
 
 from __future__ import annotations
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
-from repro.core.scu.programs import run_barrier_bench, run_mutex_bench
+from repro.core.scu.programs import make_fleet, prep_barrier_bench, prep_mutex_bench
 from repro.sync import available_policies
 
 PAPER = {
@@ -43,17 +48,29 @@ def _energy_nj(r, n, t_crit):
     return DEFAULT_ENERGY.energy_nj(act)
 
 
+def _prep_cell(prim: str, policy: str, n: int, iters: int):
+    if prim == "barrier":
+        return prep_barrier_bench(policy, n, sfr=0, iters=iters)
+    t_crit = 10 if prim.endswith("t10") else 0
+    return prep_mutex_bench(policy, n, t_crit=t_crit, iters=iters)
+
+
 def run(iters: int = 64, verbose: bool = True):
+    # one batched fleet call for the whole table (prim x policy x cores)
+    cells = [
+        (prim, policy, n)
+        for prim in PRIMITIVES
+        for policy in available_policies()
+        for n in (2, 4, 8)
+    ]
+    results = iter(make_fleet([_prep_cell(p, v, n, iters) for p, v, n in cells]))
     rows = []
     for prim in PRIMITIVES:
         t_crit = 10 if prim.endswith("t10") else 0
         for policy in available_policies():
             meas_c, meas_e = [], []
             for n in (2, 4, 8):
-                if prim == "barrier":
-                    r = run_barrier_bench(policy, n, sfr=0, iters=iters)
-                else:
-                    r = run_mutex_bench(policy, n, t_crit=t_crit, iters=iters)
+                r = next(results)
                 meas_c.append(r.prim_cycles)
                 meas_e.append(_energy_nj(r, n, t_crit))
             pc, pe = PAPER.get((prim, policy), (None, None))
@@ -94,17 +111,27 @@ def run_scaling(
     iterations: the software disciplines' per-iteration cost grows
     superlinearly while the averages converge just as fast.
     """
+    # one fleet per core count: configs of one size stay one array program
+    # (mixing a 256-core straggler into the 16-core batch would widen every
+    # flattened kernel for the whole run)
+    per_n = {}
+    for n in core_counts:
+        it = iters if n < 128 else max(2, iters // 4)
+        cells = [
+            (prim, policy)
+            for prim in PRIMITIVES
+            for policy in available_policies()
+        ]
+        per_n[n] = dict(zip(cells, make_fleet([
+            _prep_cell(p, v, n, it) for p, v in cells
+        ])))
     rows = []
     for prim in PRIMITIVES:
         t_crit = 10 if prim.endswith("t10") else 0
         for policy in available_policies():
             meas_c, meas_e = [], []
             for n in core_counts:
-                it = iters if n < 128 else max(2, iters // 4)
-                if prim == "barrier":
-                    r = run_barrier_bench(policy, n, sfr=0, iters=it)
-                else:
-                    r = run_mutex_bench(policy, n, t_crit=t_crit, iters=it)
+                r = per_n[n][(prim, policy)]
                 meas_c.append(r.prim_cycles)
                 meas_e.append(_energy_nj(r, n, t_crit))
             rows.append((prim, policy, list(core_counts), meas_c, meas_e))

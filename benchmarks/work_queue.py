@@ -16,7 +16,9 @@ registered ``repro.sync`` policy supplies its own queue discipline (see
 
 Two read-outs: the producers-x-consumers split sweep on one cluster size
 (who wins when the queue is producer- vs consumer-bound), and the scaling
-sweep (half producers / half consumers on 16..256-core clusters).
+sweep (half producers / half consumers on 16..256-core clusters).  Both
+dispatch through the fleet engine -- one batched ``simulate_fleet`` call
+per sweep/core-count, bit-exact per config against sequential runs.
 
     PYTHONPATH=src python -m benchmarks.work_queue
 """
@@ -26,7 +28,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scu.energy import DEFAULT_ENERGY, Activity
-from repro.core.scu.programs import run_work_queue_bench
+from repro.core.scu.programs import make_fleet, prep_work_queue_bench
 from repro.sync import available_policies
 
 # (producers, consumers) splits on the default 8-core cluster
@@ -48,24 +50,29 @@ def run(
     """The producers-x-consumers split sweep over every policy."""
     splits = list(splits) if splits is not None else list(SPLITS)
     policies = available_policies()
+    # the whole (policy x split) grid as one batched fleet call
+    grid = [(policy, s) for policy in policies for s in splits]
+    for _, (n_prod, n_cons) in grid:
+        assert n_prod + n_cons == n_cores, (n_prod, n_cons, n_cores)
+    fleet_results = make_fleet([
+        prep_work_queue_bench(
+            policy, n_prod, n_cons, items=items,
+            t_produce=t_produce, t_consume=t_consume,
+        )
+        for policy, (n_prod, n_cons) in grid
+    ])
     rows: List[Dict] = []
-    for policy in policies:
-        for n_prod, n_cons in splits:
-            assert n_prod + n_cons == n_cores, (n_prod, n_cons, n_cores)
-            r = run_work_queue_bench(
-                policy, n_prod, n_cons, items=items,
-                t_produce=t_produce, t_consume=t_consume,
-            )
-            rows.append({
-                "policy": policy,
-                "producers": n_prod,
-                "consumers": n_cons,
-                "items": items,
-                "cycles_per_item": r.cycles_per_iter,
-                "overhead_cycles": r.prim_cycles,
-                "energy_nj_per_item": _energy_nj_per_item(r),
-                "gated_per_item": r.gated_core_cycles_per_iter,
-            })
+    for (policy, (n_prod, n_cons)), r in zip(grid, fleet_results):
+        rows.append({
+            "policy": policy,
+            "producers": n_prod,
+            "consumers": n_cons,
+            "items": items,
+            "cycles_per_item": r.cycles_per_iter,
+            "overhead_cycles": r.prim_cycles,
+            "energy_nj_per_item": _energy_nj_per_item(r),
+            "gated_per_item": r.gated_core_cycles_per_iter,
+        })
 
     results = {
         "n_cores": n_cores,
@@ -133,11 +140,15 @@ def run_scaling(
             if n >= SCALING_LARGE_FROM
             else available_policies()
         )
-        for policy in policies:
-            r = run_work_queue_bench(
+        # one fleet per core count (see table1_primitives.run_scaling)
+        results = make_fleet([
+            prep_work_queue_bench(
                 policy, n // 2, n - n // 2, items=items,
                 t_produce=t_produce, t_consume=t_consume,
             )
+            for policy in policies
+        ])
+        for policy, r in zip(policies, results):
             rows.append({
                 "policy": policy,
                 "n_cores": n,

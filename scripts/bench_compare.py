@@ -6,9 +6,10 @@ against the committed golden baseline.
 
 The simulator is cycle-exact and fully deterministic (seeded RNG, no
 wall-clock inputs), so the key numbers -- Table-1 primitive cycles, Fig-5
-minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain cost, and
-their 16/32/64-core scaling rows -- must reproduce bit-for-bit on any
-machine.  A current value more than ``threshold`` above the baseline fails
+minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain and
+work-queue cost, and their 16..256-core scaling rows -- must reproduce
+bit-for-bit on any machine (the sweeps dispatch through the batched fleet
+engine, which is bit-exact per config against sequential runs).  A current value more than ``threshold`` above the baseline fails
 the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
 timings) are deliberately *not* compared.  Improvements are reported but
 never fail; refresh the baseline in the same PR that moves the numbers:
@@ -97,6 +98,12 @@ THROUGHPUT_KEYS = (
      lambda r: r.get("engine_perf", {}).get("speedup")),
     ("engine_perf/contended/speedup",
      lambda r: r.get("engine_perf", {}).get("contended", {}).get("speedup")),
+    # fleet-dispatch ratios: batched simulate_fleet vs config-at-a-time on
+    # the fixed 64-config combined sweep, same run / same machine
+    ("engine_perf/fleet/speedup",
+     lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup")),
+    ("engine_perf/fleet/speedup_8core",
+     lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup_8core")),
 )
 
 
@@ -287,6 +294,14 @@ def validate_schema(results: Dict) -> List[str]:
              "engine_perf.contended.cycles_per_sec: expected finite number")
         need(_is_num(contended.get("speedup")),
              "engine_perf.contended.speedup: expected finite number")
+    fleet = perf.get("fleet")
+    if need(isinstance(fleet, dict), "engine_perf.fleet: missing or not a dict"):
+        need(_is_num(fleet.get("configs")),
+             "engine_perf.fleet.configs: expected finite number")
+        need(_is_num(fleet.get("speedup")),
+             "engine_perf.fleet.speedup: expected finite number")
+        need(_is_num(fleet.get("speedup_8core")),
+             "engine_perf.fleet.speedup_8core: expected finite number")
     return errors
 
 

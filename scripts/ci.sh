@@ -19,6 +19,10 @@ if [[ "${1:-}" != "--tests" ]]; then
     echo "== benchmark smoke: benchmarks/run.py --fast --json BENCH_tier1.json =="
     # --json seeds the perf trajectory (Table-1/Fig-5 key numbers + engine
     # throughput per mode); a jax_barriers subprocess failure exits nonzero.
+    # The Table-1/Fig-5/chain/work-queue sweeps (and their scaling variants)
+    # dispatch through the batched fleet engine (simulate_fleet), and the
+    # engine_perf fleet row asserts batched-vs-sequential bit-exactness --
+    # so this smoke gate exercises the fleet path end-to-end on every run.
     python -m benchmarks.run --fast --json BENCH_tier1.json
 
     echo "== benchmark regression gate: bench_compare vs committed baseline =="

@@ -73,6 +73,15 @@ Two execution modes produce bit-exact identical :class:`ClusterStats`:
 
     Parity with lockstep is bit-exact and enforced by golden values plus
     randomized cross-checks up to 256 cores in ``tests/test_scu_simulator.py``.
+
+Sweeps over many independent configurations additionally have **fleet
+mode**: :func:`simulate_fleet` stacks N clusters onto the same
+structure-of-arrays core along a flattened ``(config, core)`` axis --
+per-config segments partition the TCDM arbitration, SCU registers and the
+``next_event_bound()`` reduction, quiescent jumps become per-config
+segment-min spans, and full steps batch across every config at once (which
+is what makes 8-core configs vectorizable for the first time).  Results are
+bit-exact per config against one-at-a-time runs; see :class:`_Fleet`.
 """
 
 from __future__ import annotations
@@ -92,7 +101,9 @@ __all__ = [
     "CoreStats",
     "ClusterStats",
     "Cluster",
+    "FleetConfig",
     "Program",
+    "simulate_fleet",
 ]
 
 
@@ -273,6 +284,17 @@ _COUNTERS = (
     _C_SCU,
 ) = range(len(_COUNTERS))
 
+# Phase-5 accounting as a lookup table: column = CoreState code, row = one
+# of the first five counters (active/comp/wait/gated/stall); one fancy
+# gather + add replaces the per-counter boolean mask arithmetic in the
+# vectorized step kernels.  DONE contributes zeros (no clock, no counters).
+_ACCT_INC = np.zeros((5, len(CoreState)), dtype=np.int64)
+_ACCT_INC[_C_ACTIVE, [_ACTIVE, _STALL_MEM, _STALL_SCU, _WAKING]] = 1
+_ACCT_INC[_C_COMP, _ACTIVE] = 1
+_ACCT_INC[_C_WAIT, [_STALL_MEM, _STALL_SCU, _WAKING]] = 1
+_ACCT_INC[_C_GATED, _SLEEP] = 1
+_ACCT_INC[_C_STALL, _STALL_MEM] = 1
+
 
 class _Core:
     """Execution context of one PE, including its scheduler state.
@@ -420,6 +442,27 @@ class _VecState:
         }
         self.finished_at: List[Optional[int]] = [None] * n
 
+    @classmethod
+    def view_of(cls, parent: "_VecState", sl: slice) -> "_VecState":
+        """A per-segment view sharing the parent's storage (fleet mode).
+
+        Every array field is a basic slice of the parent's arrays, so the
+        member cluster's scalar helpers and the fleet's flattened kernels
+        operate on the same memory -- the view *is* the segment partition.
+        ``finished_at`` stays a per-member list (never touched vectorized).
+        """
+        v = object.__new__(cls)
+        v.n = sl.stop - sl.start
+        for name in ("state", "busy", "wake", "sleep_entry", "pend_bank",
+                     "has_poll", "elw"):
+            setattr(v, name, getattr(parent, name)[sl])
+        v.counter_block = parent.counter_block[:, sl]
+        v.counters = {
+            name: v.counter_block[i] for i, name in enumerate(_COUNTERS)
+        }
+        v.finished_at = [None] * v.n
+        return v
+
 
 def _vec_scalar_property(array_name: str):
     def get(self):
@@ -539,6 +582,12 @@ class Cluster:
     # (a phase whose period is longer is replayed grant-by-grant; the memo
     # must not grow unboundedly on pathological rotations).
     SPIN_PERIOD_MEMO_LIMIT = 4096
+
+    # Spin-resolver spectator handling: at or below this core count the
+    # horizon/writeback passes use direct scalar reads on the SoA arrays (a
+    # handful of element accesses beat the fixed cost of the numpy mask
+    # kernels on such narrow arrays -- the fleet runs many 8-core members).
+    SPIN_SCALAR_MAX_CORES = 32
 
     def __init__(
         self,
@@ -833,7 +882,7 @@ class Cluster:
             return None
         return participants
 
-    def _resolve_spin_phase(self) -> bool:
+    def _resolve_spin_phase(self, pids_arr: Optional[np.ndarray] = None) -> bool:
         """Tier-2 resolution: batch-resolve a pure spin/poll phase.
 
         When every awake core is inside a :class:`Poll` (eligibility via
@@ -858,6 +907,11 @@ class Cluster:
         the cores are written back in exactly the state the same number of
         lockstep steps would have left them in.  Returns True when at least
         one cycle was resolved.
+
+        ``pids_arr`` short-circuits the eligibility check with a
+        caller-proven participant set -- the fleet engine computes
+        eligibility for every config in one flattened pass and hands each
+        eligible member its participants directly.
         """
         V = self._vec
         cores = self.cores
@@ -865,7 +919,9 @@ class Cluster:
         t0 = self.cycle
 
         # -- eligibility + participant set ---------------------------------
-        if self.vectorized:
+        if pids_arr is not None:
+            pids = [int(c) for c in pids_arr]
+        elif self.vectorized:
             p_arr = self._spin_participants_vec()
             if p_arr is None:
                 return False
@@ -878,7 +934,9 @@ class Cluster:
 
         # -- spectator horizon ---------------------------------------------
         horizon = self.max_cycles - t0
-        if self.vectorized:
+        pid_set = set(pids)
+        small = n <= self.SPIN_SCALAR_MAX_CORES
+        if self.vectorized and not small:
             st = V.state
             spect = np.ones(n, dtype=bool)
             spect[pids] = False
@@ -888,8 +946,22 @@ class Cluster:
             sw = spect & (st == _WAKING)
             if sw.any():
                 horizon = min(horizon, int(V.wake[sw].min()) - 1)
+        elif self.vectorized:
+            # small clusters: direct scalar reads beat the numpy mask ops
+            stv, busyv, wakev = V.state, V.busy, V.wake
+            for cid in range(n):
+                if cid in pid_set:
+                    continue
+                s = stv[cid]
+                if s == _ACTIVE:
+                    b = busyv[cid]
+                    if b < horizon:
+                        horizon = int(b)
+                elif s == _WAKING:
+                    w = wakev[cid] - 1
+                    if w < horizon:
+                        horizon = int(w)
         else:
-            pid_set = set(pids)
             for core in cores:
                 if core.cid in pid_set:
                     continue
@@ -918,21 +990,26 @@ class Cluster:
         queues: Dict[int, List[int]] = {}
         rejoins: Dict[int, List[int]] = {}
         tas_cycles = self.TAS_CYCLES - 1
+        vec = self.vectorized
+        if vec:
+            stv_, busyv_ = V.state, V.busy
+        n_banks = self.n_banks
         for i, cid in enumerate(pids):
             op = cores[cid].pending
-            b = self._bank_of(op.addr)
+            b = (op.addr >> 2) % n_banks  # _bank_of, inlined
             banks_[i] = b
             addrs_[i] = op.addr
             untils[i] = op.until
-            base = tas_cycles if op.kind == "tas" else 0
-            is_tas[i] = op.kind == "tas"
+            tas = op.kind == "tas"
+            base = tas_cycles if tas else 0
+            is_tas[i] = tas
             miss_sh[i] = base + op.miss_cycles
             hit_sh[i] = base + op.hit_cycles
             h_in[i] = op.hit_instr
             m_in[i] = op.miss_instr
-            if self.vectorized:
-                in_queue = V.state[cid] == _STALL_MEM
-                busy_c = int(V.busy[cid])
+            if vec:
+                in_queue = stv_[cid] == _STALL_MEM
+                busy_c = int(busyv_[cid])
             else:
                 in_queue = cores[cid].state is CoreState.STALL_MEM
                 busy_c = cores[cid].busy
@@ -954,6 +1031,14 @@ class Cluster:
         tcdm = self.tcdm
         detect = horizon > self.SPIN_PERIOD_MIN_HORIZON
         bank_list = sorted(set(banks_)) if detect else ()
+        # the round-robin pointers of the involved banks, mirrored into a
+        # plain dict for the replay (one numpy scalar read/write per bank
+        # instead of one per grant); written back after the loop
+        rr_loc = {b: int(rr[b]) for b in set(banks_)}
+        # lazy detection start: most phases end by a hit long before
+        # periodicity could pay off, so the per-cycle configuration hashing
+        # only begins once the replay has actually outlasted the threshold
+        detect_from = t0 + self.SPIN_PERIOD_MIN_HORIZON
         seen: Dict[Any, Tuple[int, List[List[int]]]] = {}
         while t < t_end:
             joiners = rejoins.pop(t, None)
@@ -973,7 +1058,7 @@ class Cluster:
                 nxt = min(rejoins)
                 t = nxt if nxt < t_end else t_end
                 continue
-            if detect:
+            if detect and t >= detect_from:
                 # a shadow's key carries both the rejoin offset and the
                 # unsettled-segment start: an entry shadow (segment began at
                 # phase entry, not at a grant) must never alias an in-phase
@@ -986,7 +1071,7 @@ class Cluster:
                         else (i, t - rejoin_at[i], t - shadow_from[i])
                         for i in range(k)
                     ),
-                    tuple(int(rr[b]) for b in bank_list),
+                    tuple(rr_loc[b] for b in bank_list),
                     tuple(tcdm.get(a, 0) for a in addrs_),
                 )
                 prev = seen.get(key)
@@ -1020,12 +1105,19 @@ class Cluster:
                             break
             for b in list(queues):
                 q = queues[b]
-                rb = int(rr[b])
-                wi = min(q, key=lambda i: (pids[i] - rb) % n)
-                q.remove(wi)
-                if not q:
+                if len(q) == 1:
+                    wi = q[0]
                     del queues[b]
-                rr[b] = (pids[wi] + 1) % n
+                else:
+                    rb = rr_loc[b]
+                    best = n
+                    for i in q:
+                        kk = (pids[i] - rb) % n
+                        if kk < best:
+                            best = kk
+                            wi = i
+                    q.remove(wi)
+                rr_loc[b] = (pids[wi] + 1) % n
                 dt = t - queued_at[wi]
                 queued_at[wi] = -1
                 a = acc[wi]
@@ -1052,6 +1144,8 @@ class Cluster:
             if hits:
                 t_end = t
                 break
+        for b, v in rr_loc.items():
+            rr[b] = v
 
         # -- settle partial segments + write the cores back -----------------
         span = t_end - t0
@@ -1074,8 +1168,8 @@ class Cluster:
         self.stats.bank_conflicts += conflicts
         if self.vectorized:
             CB = V.counter_block
-            for i, cid in enumerate(pids):
-                CB[:, cid] += acc[i]
+            # all participants' accumulated counters in one fancy add
+            CB[:, pids] += np.array(acc, dtype=np.int64).T
             for i, value in hits:
                 cid = pids[i]
                 core = cores[cid]
@@ -1099,18 +1193,35 @@ class Cluster:
                     V.busy[cid] = rejoin_at[i] - t_end
             # spectators: span-based countdown accounting
             st = V.state
-            spect = np.ones(n, dtype=bool)
-            spect[pids] = False
-            sa = spect & (st == _ACTIVE)
-            sw = spect & (st == _WAKING)
-            V.busy[sa] -= span
-            V.wake[sw] -= span
-            C = V.counters
-            C["active_cycles"][sa] += span
-            C["comp_cycles"][sa] += span
-            C["active_cycles"][sw] += span
-            C["wait_cycles"][sw] += span
-            C["gated_cycles"][spect & (st == _SLEEP)] += span
+            if small:
+                stv, busyv, wakev = st, V.busy, V.wake
+                for cid in range(n):
+                    if cid in pid_set:
+                        continue
+                    s = stv[cid]
+                    if s == _ACTIVE:
+                        busyv[cid] -= span
+                        CB[_C_ACTIVE, cid] += span
+                        CB[_C_COMP, cid] += span
+                    elif s == _WAKING:
+                        wakev[cid] -= span
+                        CB[_C_ACTIVE, cid] += span
+                        CB[_C_WAIT, cid] += span
+                    elif s == _SLEEP:
+                        CB[_C_GATED, cid] += span
+            else:
+                spect = np.ones(n, dtype=bool)
+                spect[pids] = False
+                sa = spect & (st == _ACTIVE)
+                sw = spect & (st == _WAKING)
+                V.busy[sa] -= span
+                V.wake[sw] -= span
+                C = V.counters
+                C["active_cycles"][sa] += span
+                C["comp_cycles"][sa] += span
+                C["active_cycles"][sw] += span
+                C["wait_cycles"][sw] += span
+                C["gated_cycles"][spect & (st == _SLEEP)] += span
         else:
             for i, cid in enumerate(pids):
                 core = cores[cid]
@@ -1195,18 +1306,8 @@ class Cluster:
                 self._service_one(cores[cid])
             self._wake_cores_vec()
 
-        # Phase 5: accounting (vectorized).
-        C = V.counters
-        sleeping = st == _SLEEP
-        active = st == _ACTIVE
-        stalled = st == _STALL_MEM
-        clocked = st < _SLEEP  # ACTIVE/STALL_MEM/STALL_SCU
-        clocked |= st == _WAKING
-        C["gated_cycles"] += sleeping
-        C["active_cycles"] += clocked
-        C["comp_cycles"] += active
-        C["wait_cycles"] += clocked & ~active
-        C["stall_cycles"] += stalled
+        # Phase 5: accounting (one state-code table gather, see _ACCT_INC).
+        V.counter_block[:5] += _ACCT_INC[:, st]
         self.cycle += 1
 
     def _arbitrate_tcdm_vec(self) -> None:
@@ -1313,6 +1414,31 @@ class Cluster:
             self._n_done += 1
             return
         core.started = True
+        V = self._vec
+        if V is not None:
+            # SoA fast path: write the arrays directly instead of going
+            # through the _VecCore property layer (~6 property round-trips
+            # per advance otherwise; this runs once per micro-op on every
+            # core of a vectorized cluster or fleet)
+            cid = core.cid
+            V.counter_block[_C_INSTR, cid] += 1
+            t = type(op)
+            if t is Compute:
+                c = op.cycles
+                V.busy[cid] = c - 1 if c > 1 else 0  # this cycle counts
+                V.state[cid] = _ACTIVE
+                core.pending = None
+            elif t is Mem or t is Poll:
+                core.pending = op
+                V.state[cid] = _STALL_MEM
+                V.pend_bank[cid] = self._bank_of(op.addr)
+                V.has_poll[cid] = t is Poll
+            elif t is Scu:
+                core.pending = op
+                V.state[cid] = _STALL_SCU
+            else:  # pragma: no cover - programming error
+                raise TypeError(f"bad micro-op {op!r}")
+            return
         core.instructions += 1
         if isinstance(op, Compute):
             core.busy = max(0, op.cycles - 1)  # this cycle counts as work
@@ -1321,9 +1447,6 @@ class Cluster:
         elif isinstance(op, (Mem, Poll)):
             core.pending = op
             core.state = CoreState.STALL_MEM
-            if self._vec is not None:
-                self._vec.pend_bank[core.cid] = self._bank_of(op.addr)
-                self._vec.has_poll[core.cid] = isinstance(op, Poll)
         elif isinstance(op, Scu):
             core.pending = op
             core.state = CoreState.STALL_SCU
@@ -1433,6 +1556,23 @@ class Cluster:
     def _service_one(self, core: _Core) -> None:
         """Service one fresh transaction on a private core<->SCU link."""
         op: Scu = core.pending
+        V = self._vec
+        if V is not None:
+            # SoA fast path (see _advance): array writes, no property layer
+            cid = core.cid
+            V.counter_block[_C_SCU, cid] += 1
+            if op.kind in ("write", "read"):
+                value = self.scu.access(cid, op.kind, op.addr, op.data)
+                core.pending = None
+                core.resume_value = value if value is not None else 0
+                V.state[cid] = _ACTIVE
+            elif op.kind == "elw":
+                self.scu.elw_trigger(cid, op.addr, op.data)
+                V.elw[cid] = True
+                V.sleep_entry[cid] = self.SLEEP_ENTRY_CYCLES
+            else:  # pragma: no cover
+                raise ValueError(op.kind)
+            return
         core.scu_accesses += 1
         if op.kind in ("write", "read"):
             value = self.scu.access(core.cid, op.kind, op.addr, op.data)
@@ -1454,6 +1594,20 @@ class Cluster:
     def _wake_one(self, core: _Core) -> None:
         granted, value = self.scu.elw_poll(core.cid, core.pending.addr)
         if granted:
+            V = self._vec
+            if V is not None:
+                # SoA fast path: immediate grants skip the clock-gate entry
+                # latency but still pay grant + response + resume
+                cid = core.cid
+                never_slept = V.state[cid] == _STALL_SCU
+                core.pending = None
+                core.resume_value = value
+                V.elw[cid] = False
+                V.state[cid] = _WAKING
+                V.wake[cid] = (
+                    self.WAKE_CYCLES - 1 if never_slept else self.WAKE_CYCLES
+                )
+                return
             never_slept = core.state is CoreState.STALL_SCU
             core.pending = None
             core.elw_issued = False
@@ -1480,3 +1634,436 @@ class Cluster:
 
     def peek(self, addr: int) -> int:
         return self.tcdm.get(addr, 0)
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet simulation: many independent clusters, one array program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """One member of a batched fleet run: a cluster plus its programs.
+
+    The cluster must be freshly constructed (``mode="fastforward"``, not yet
+    loaded or run); :func:`simulate_fleet` loads ``programs`` itself so the
+    per-core state lands in the fleet's flattened arrays.
+    """
+
+    cluster: Cluster
+    programs: List[Program]
+    max_cycles: int = 10_000_000
+
+
+# sentinel for "no internal event due" in the segment-min reductions
+_NO_BOUND = np.int64(1) << 60
+
+
+class _FleetMember:
+    """Bookkeeping of one config inside the fleet's flattened state."""
+
+    __slots__ = ("index", "cluster", "max_cycles", "sl", "off", "done")
+
+    def __init__(self, index: int, cfg: FleetConfig, off: int):
+        self.index = index
+        self.cluster = cfg.cluster
+        self.max_cycles = cfg.max_cycles
+        self.off = off
+        self.sl = slice(off, off + cfg.cluster.n_cores)
+        self.done = False
+
+
+class _Fleet:
+    """The fleet engine: N independent clusters on one flattened SoA core.
+
+    Every member cluster's scheduler state (:class:`_VecState`), round-robin
+    pointers and SCU base-unit registers become *views* into fleet-level
+    arrays laid out along a flattened ``(config, core)`` axis -- per-config
+    segments partition TCDM bank arbitration, SCU registers, armed-extension
+    sets and the ``next_event_bound()`` reduction, so configs never interact
+    (each keeps its own TCDM dict, SCU instance, stats and local clock).
+
+    The run loop generalizes :meth:`Cluster._run_fast` per segment:
+
+    * per-config quiescent bounds come from segment-min reductions over the
+      flattened arrays (one ``np.minimum.reduceat`` instead of N bound
+      scans), and the global jump becomes a **per-config span jump** --
+      members at different local cycles advance by their own bound in one
+      vectorized update;
+    * members whose bound is 0 first try their own spin-phase batch
+      resolver (tier 2, unchanged -- it operates on the views), then join
+      one **batched full step** whose phase kernels run over the cores of
+      every stepping config at once -- this is what makes 8-core configs
+      vectorizable for the first time (64 eight-core clusters = one
+      512-lane array program);
+    * members that finish early are masked out of every kernel.
+
+    Each tier is individually exact (a full step *is* the reference
+    semantics; any jump up to the bound is exact; the spin resolver is
+    exact), so per-config results are bit-identical to a one-at-a-time
+    ``Cluster.run()`` -- enforced by the fleet parity suite in
+    ``tests/test_scu_simulator.py``.
+    """
+
+    def __init__(self, configs: List[FleetConfig]):
+        self.members: List[_FleetMember] = []
+        total = 0
+        total_banks = 0
+        for i, cfg in enumerate(configs):
+            cl = cfg.cluster
+            if cl.mode != "fastforward":
+                raise ValueError(
+                    f"fleet member {i}: cluster mode must be 'fastforward', "
+                    f"got {cl.mode!r}"
+                )
+            if len(cfg.programs) != cl.n_cores:
+                raise ValueError(
+                    f"fleet member {i}: {len(cfg.programs)} programs for "
+                    f"{cl.n_cores} cores"
+                )
+            if cl.cycle != 0 or cl.cores:
+                raise ValueError(
+                    f"fleet member {i}: cluster already loaded or run; "
+                    "simulate_fleet needs a fresh cluster"
+                )
+            if cl.n_cores < 1:
+                raise ValueError(f"fleet member {i}: cluster has no cores")
+            self.members.append(_FleetMember(i, cfg, total))
+            total += cl.n_cores
+            total_banks += cl.n_banks
+        self.total = total
+
+        # flattened (config, core) state + per-core constants
+        self._vec = _VecState(total)
+        self._rr = np.zeros(total_banks, dtype=np.int64)
+        self.seg = np.zeros(total, dtype=np.int64)  # member index per core
+        self.local_cid = np.zeros(total, dtype=np.int64)
+        self.cfg_n = np.zeros(total, dtype=np.int64)  # member n_cores per core
+        self.bank_base = np.zeros(total, dtype=np.int64)
+        self.seg_offsets = np.zeros(len(self.members), dtype=np.int64)
+        # flattened SCU base-unit registers + latched elw wait masks
+        self.ev_buf = np.zeros(total, dtype=np.int64)
+        self.ev_mask = np.zeros(total, dtype=np.int64)
+        self.irq_mask = np.zeros(total, dtype=np.int64)
+        self.ntf_target = np.zeros(total, dtype=np.int64)
+        self.elw_wait = np.zeros(total, dtype=np.int64)
+        self._step_mask = np.zeros(total, dtype=bool)  # reused per step
+        self._span_buf = np.zeros(total, dtype=np.int64)  # reused per jump
+
+        bank_off = 0
+        for m, cfg in zip(self.members, configs):
+            cl = m.cluster
+            sl = m.sl
+            n = cl.n_cores
+            self.seg[sl] = m.index
+            self.local_cid[sl] = np.arange(n)
+            self.cfg_n[sl] = n
+            self.bank_base[sl] = bank_off
+            self.seg_offsets[m.index] = m.off
+            # adopt the member's state into the fleet arrays: the member's
+            # engine code keeps running unchanged on these views
+            cl.vectorized = True
+            cl._vec = _VecState.view_of(self._vec, sl)
+            cl._rr = self._rr[bank_off:bank_off + cl.n_banks]
+            bank_off += cl.n_banks
+            cl.max_cycles = m.max_cycles
+            if cl.scu is not None:
+                cl.scu.adopt_views(
+                    self.ev_buf[sl], self.ev_mask[sl], self.irq_mask[sl],
+                    self.ntf_target[sl], self.elw_wait[sl],
+                )
+            cl.cores = [
+                _VecCore(i, prog(cl, i), cl._vec)
+                for i, prog in enumerate(cfg.programs)
+            ]
+            cl.stats = ClusterStats()
+            cl._n_done = 0
+        # plain-int lookup tables for the scalar loops (indexing a numpy
+        # array with a Python int and converting is ~5x the list cost)
+        self._lcid_list = self.local_cid.tolist()
+        # per-core cluster + core-object tables: one list index from a
+        # flattened core id to the owning member's state
+        self._cl_list = [
+            m.cluster for m in self.members for _ in range(m.cluster.n_cores)
+        ]
+        self._core_list = [c for m in self.members for c in m.cluster.cores]
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> List[ClusterStats]:
+        try:
+            self._run()
+        finally:
+            for m in self.members:
+                cl = m.cluster
+                cl.stats.cycles = cl.cycle
+                cl.stats.cores = [c.stats for c in cl.cores]
+        return [m.cluster.stats for m in self.members]
+
+    def _run(self) -> None:
+        V = self._vec
+        st = V.state
+        members = self.members
+        live = list(members)  # zero-core members are rejected at build time
+        offs = self.seg_offsets
+        no_spin = [False] * len(members)  # shared constant, never mutated
+        while live:
+            # -- per-config bounds + spin eligibility (one flattened pass,
+            #    segment reductions instead of N per-member scans).  Cores
+            #    of finished members are all DONE, so no live-mask is
+            #    needed: every state test below excludes them already.
+            active = st == _ACTIVE
+            waking = st == _WAKING
+            stalled = st == _STALL_MEM
+            stall_scu = st == _STALL_SCU
+            sleeping = st == _SLEEP
+            if sleeping.any():
+                sleep_grant = sleeping & (
+                    (self.ev_buf & self.elw_wait) != 0
+                )
+            else:
+                sleep_grant = sleeping
+            adv_due = active & (V.busy <= 0)
+            wake_due = waking & (V.wake <= 1)
+            need = stalled | stall_scu
+            need |= adv_due
+            need |= wake_due
+            need |= sleep_grant
+            seg_need = np.logical_or.reduceat(need, offs).tolist()
+            # one fused countdown-min reduction: busy for active cores,
+            # wake-1 for waking cores, +inf sentinel otherwise
+            countdown = np.where(
+                active, V.busy, np.where(waking, V.wake - 1, _NO_BOUND)
+            )
+            seg_bound = np.minimum.reduceat(countdown, offs).tolist()
+            # spin-phase eligibility, mirroring _spin_participants_vec: the
+            # participants (armed Polls queued or in their retry shadow) and
+            # the disqualifiers, reduced per segment
+            if V.has_poll.any():
+                part = V.has_poll & (stalled | active)
+                spin_bad = stall_scu | (stalled & ~V.has_poll)
+                spin_bad |= adv_due & ~part
+                spin_bad |= wake_due
+                spin_bad |= sleep_grant
+                seg_spin = (
+                    np.logical_or.reduceat(part, offs)
+                    & ~np.logical_or.reduceat(spin_bad, offs)
+                ).tolist()
+            else:
+                part = None
+                seg_spin = no_spin
+
+            jumps: List[Tuple[_FleetMember, int]] = []
+            stepping: List[_FleetMember] = []
+            for m in live:
+                cl = m.cluster
+                if cl.cycle >= m.max_cycles:
+                    cl._raise_timeout(m.max_cycles)
+                g = m.index
+                if seg_need[g]:
+                    scu = cl.scu
+                    if (
+                        seg_spin[g]
+                        and (scu is None or scu.next_event_bound() is None)
+                        and cl._resolve_spin_phase(np.flatnonzero(part[m.sl]))
+                    ):
+                        continue
+                    stepping.append(m)
+                    continue
+                b = seg_bound[g]
+                scu = cl.scu
+                if scu is not None:
+                    sb = scu.next_event_bound()
+                    if sb is not None:
+                        if sb <= 0:
+                            stepping.append(m)
+                            continue
+                        b = min(b, sb)
+                if b >= _NO_BOUND:
+                    # deadlock: no internal event in sight -- burn to the
+                    # cap so the failure matches the sequential engine
+                    b = m.max_cycles - cl.cycle
+                jumps.append((m, min(b, m.max_cycles - cl.cycle)))
+
+            if jumps:
+                self._jump(jumps)
+            if stepping:
+                self._step(stepping)
+                finished = [
+                    m for m in stepping
+                    if m.cluster._n_done >= m.cluster.n_cores
+                ]
+                if finished:
+                    for m in finished:
+                        m.done = True
+                    live = [m for m in live if not m.done]
+
+    # ----------------------------------------------------------------- jump
+    def _jump(self, jumps: List[Tuple["_FleetMember", int]]) -> None:
+        """Per-config quiescent-span jumps, one vectorized update.
+
+        Every member jumps by its *own* bound (members sit at different
+        local cycles); exactness per member follows from
+        :meth:`Cluster.fast_forward` -- the span never exceeds the
+        segment's proven bound."""
+        V = self._vec
+        st = V.state
+        span = self._span_buf
+        span[:] = 0
+        for m, s in jumps:
+            span[m.sl] = s
+        # elementwise span products instead of fancy indexing: non-jumping
+        # members carry span 0, so the unmasked updates are exact
+        a_span = span * (st == _ACTIVE)
+        w_span = span * (st == _WAKING)
+        V.busy -= a_span
+        V.wake -= w_span
+        C = V.counters
+        C["active_cycles"] += a_span
+        C["active_cycles"] += w_span
+        C["comp_cycles"] += a_span
+        C["wait_cycles"] += w_span
+        C["gated_cycles"] += span * (st == _SLEEP)
+        for m, s in jumps:
+            cl = m.cluster
+            cl.cycle += s
+            cl.ff_spans += 1
+            cl.ff_cycles += s
+
+    # ----------------------------------------------------------------- step
+    def _step(self, stepping: List["_FleetMember"]) -> None:
+        """One batched full cluster step over every member in ``stepping``.
+
+        Phase order and semantics are identical to
+        :meth:`Cluster._step_vec`, with every kernel masked to the stepping
+        members' cores and the idiosyncratic transitions (generator
+        advances, grants, SCU servicing) delegated to the member cluster --
+        whose state lives in the same arrays."""
+        V = self._vec
+        st = V.state
+        members = self.members
+        cls_l = self._cl_list
+        cores_l = self._core_list
+        lcid_l = self._lcid_list
+        mask = self._step_mask
+        mask[:] = False
+        for m in stepping:
+            mask[m.sl] = True
+
+        # Phase 0: per-config extension comparators (armed sets checked
+        # inline: a disarmed SCU's evaluate is a guaranteed no-op).
+        for m in stepping:
+            cl = m.cluster
+            scu = cl.scu
+            if scu is not None and (
+                scu._armed_barriers or scu._armed_mutexes or scu._armed_fifos
+            ):
+                cl.stats.scu_events += scu.evaluate(cl.cycle)
+
+        # Phase 1a: countdowns (vectorized across configs; bool subtraction
+        # instead of fancy indexing -- non-stepping cores subtract 0).
+        active = st == _ACTIVE
+        active &= mask
+        counting = V.busy > 0
+        counting &= active
+        V.busy -= counting
+        waking = st == _WAKING
+        waking &= mask
+        V.wake -= waking
+        gating = st == _STALL_SCU
+        gating &= V.elw
+        gating &= mask
+        if gating.any():
+            V.sleep_entry -= gating
+            gated = V.sleep_entry <= 0
+            gated &= gating
+            st[gated] = _SLEEP
+
+        # Phase 1b: Poll re-issues (vectorized: an ACTIVE core with an armed
+        # Poll and no busy left re-enters its bank queue -- the only way a
+        # core sits ACTIVE with a pending op) and generator advances
+        # (scalar; WAKING cores reaching 0 always advance, their pending was
+        # consumed by the wake).
+        CB = V.counter_block
+        adv = active ^ counting  # active with no busy left (counting
+        reissue = adv & V.has_poll  # is a subset of active, so xor == and-not)
+        if reissue.any():
+            st[reissue] = _STALL_MEM
+            CB[_C_INSTR] += reissue
+            adv ^= reissue
+        wdue = V.wake <= 0
+        wdue &= waking
+        if wdue.any():
+            st[wdue] = _ACTIVE
+            adv |= wdue
+        for g in np.nonzero(adv)[0].tolist():
+            core = cores_l[g]
+            cls_l[g]._advance(core, core.resume_value)
+
+        # Phase 2: TCDM / LINT arbitration -- one lexsort across the
+        # fleet's banks (bank ids offset per config, round-robin keys taken
+        # modulo each config's own core count).
+        req = np.nonzero(mask & (st == _STALL_MEM))[0]
+        if req.size:
+            gbank = self.bank_base[req] + V.pend_bank[req]
+            key = (self.local_cid[req] - self._rr[gbank]) % self.cfg_n[req]
+            order = np.lexsort((key, gbank))
+            sorted_banks = gbank[order]
+            first = np.ones(order.size, dtype=bool)
+            first[1:] = sorted_banks[1:] != sorted_banks[:-1]
+            winners = req[order[first]]
+            if winners.size != req.size:
+                n_req = np.bincount(self.seg[req], minlength=len(members))
+                n_win = np.bincount(self.seg[winners], minlength=len(members))
+                for m in stepping:
+                    d = int(n_req[m.index] - n_win[m.index])
+                    if d:
+                        m.cluster.stats.bank_conflicts += d
+            for g in winners.tolist():
+                cl = cls_l[g]
+                cid = lcid_l[g]
+                cl._rr[cl._vec.pend_bank[cid]] = (cid + 1) % cl.n_cores
+                cl._grant_mem_vec(cid)
+
+        # Phase 3 + 4: SCU private links and elw grant scans.  ``stall_scu``
+        # is sampled before servicing; that is safe for the pending scan
+        # because a serviced read/write leaves ACTIVE with ``elw`` False and
+        # the ``&= V.elw`` filter drops it.
+        stall_scu = st == _STALL_SCU
+        fresh = stall_scu & ~V.elw
+        fresh &= mask
+        for g in np.nonzero(fresh)[0].tolist():
+            cls_l[g]._service_one(cores_l[g])
+        if V.elw.any():
+            pending = stall_scu | (st == _SLEEP)
+            pending &= V.elw
+            pending &= mask
+            granted = (self.ev_buf & self.elw_wait) != 0
+            granted &= pending
+            for g in np.nonzero(granted)[0].tolist():
+                cls_l[g]._wake_one(cores_l[g])
+
+        # Phase 5: accounting (one state-code table gather, see _ACCT_INC;
+        # non-stepping cores read the all-zero DONE column).
+        stm = np.where(mask, st, _DONE)
+        V.counter_block[:5] += _ACCT_INC[:, stm]
+        for m in stepping:
+            m.cluster.cycle += 1
+
+
+def simulate_fleet(configs: List[FleetConfig]) -> List[ClusterStats]:
+    """Run N independent cluster configurations as one batched array program.
+
+    Stacks the configs onto the structure-of-arrays engine core along a
+    flattened ``(config, core)`` axis (see :class:`_Fleet`); results are
+    **bit-exact per config** against one-at-a-time ``Cluster.run()`` calls.
+    Empty-handed configs (``n_cores == 0``) are not supported; an empty
+    ``configs`` list returns ``[]``.
+
+    Use this for sweeps: a fleet of 64 eight-core clusters is a 512-lane
+    array program, amortizing the per-step kernel overhead that makes
+    individually-run 8-core clusters fall below the vectorization threshold
+    (:attr:`Cluster.VEC_MIN_CORES`).
+    """
+    if not configs:
+        return []
+    return _Fleet(list(configs)).run()

@@ -10,15 +10,21 @@ uses ``nop`` runs), tunable to sweep Fig. 5.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .engine import Cluster, ClusterStats, Compute, Mem
+from .engine import Cluster, ClusterStats, Compute, FleetConfig, Mem, simulate_fleet
 from .primitives import DEFAULT_COSTS
 from .scu_unit import SCU
 
 __all__ = [
+    "FleetBench",
     "MicrobenchResult",
     "barrier_pipeline_programs",
+    "make_fleet",
+    "prep_barrier_bench",
+    "prep_chain_bench",
+    "prep_mutex_bench",
+    "prep_work_queue_bench",
     "run_barrier_bench",
     "run_chain_bench",
     "run_mutex_bench",
@@ -50,6 +56,39 @@ def _make_cluster(n_cores: int, mode: str = "fastforward") -> Cluster:
     return Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores), mode=mode)
 
 
+def _finalizer(
+    variant: str,
+    primitive: str,
+    n_cores: int,
+    sfr: int,
+    iters: int,
+    ideal_per_iter: float,
+) -> Callable[[ClusterStats], MicrobenchResult]:
+    """Deferred result builder: wraps finished ClusterStats into a
+    MicrobenchResult -- shared by the sequential run_* paths and the
+    batched fleet dispatch (:func:`make_fleet`)."""
+
+    def finalize(st: ClusterStats) -> MicrobenchResult:
+        per_iter = st.cycles / iters
+        return MicrobenchResult(
+            variant=variant,
+            primitive=primitive,
+            n_cores=n_cores,
+            sfr=sfr,
+            iters=iters,
+            cycles_total=st.cycles,
+            cycles_per_iter=per_iter,
+            prim_cycles=per_iter - ideal_per_iter,
+            active_core_cycles_per_iter=st.total_active / iters,
+            gated_core_cycles_per_iter=st.total_gated / iters,
+            tcdm_per_iter=st.total_tcdm / iters,
+            scu_per_iter=st.total_scu / iters,
+            stats=st,
+        )
+
+    return finalize
+
+
 def _collect(
     variant: str,
     primitive: str,
@@ -60,22 +99,63 @@ def _collect(
     ideal_per_iter: float,
     warmup_stats: Optional[Tuple[int, Dict[str, float]]] = None,
 ) -> MicrobenchResult:
-    st = cl.run()
-    per_iter = st.cycles / iters
-    return MicrobenchResult(
-        variant=variant,
-        primitive=primitive,
-        n_cores=n_cores,
-        sfr=sfr,
-        iters=iters,
-        cycles_total=st.cycles,
-        cycles_per_iter=per_iter,
-        prim_cycles=per_iter - ideal_per_iter,
-        active_core_cycles_per_iter=st.total_active / iters,
-        gated_core_cycles_per_iter=st.total_gated / iters,
-        tcdm_per_iter=st.total_tcdm / iters,
-        scu_per_iter=st.total_scu / iters,
-        stats=st,
+    return _finalizer(variant, primitive, n_cores, sfr, iters, ideal_per_iter)(
+        cl.run()
+    )
+
+
+@dataclasses.dataclass
+class FleetBench:
+    """One prepared microbenchmark: a fleet config plus its result builder.
+
+    Built by the ``prep_*_bench`` twins of the ``run_*_bench`` functions and
+    dispatched in batches through :func:`make_fleet`; running the config's
+    cluster sequentially and finalizing produces the identical result (the
+    fleet engine is bit-exact per config)."""
+
+    config: FleetConfig
+    finalize: Callable[[ClusterStats], MicrobenchResult]
+
+    def run_sequential(self) -> MicrobenchResult:
+        """One-at-a-time execution (the non-batched reference path)."""
+        cl = self.config.cluster
+        cl.load(self.config.programs)
+        return self.finalize(cl.run(self.config.max_cycles))
+
+
+def make_fleet(benches: Sequence[FleetBench]) -> List[MicrobenchResult]:
+    """Run prepared microbenchmarks as one batched fleet.
+
+    The whole list executes as a single flattened array program
+    (:func:`repro.core.scu.engine.simulate_fleet`); per-bench results are
+    bit-identical to calling ``run_sequential()`` on each bench.  This is
+    the dispatch point the sweep benchmarks (Table 1, Fig. 5, chain, work
+    queue) funnel through."""
+    stats = simulate_fleet([b.config for b in benches])
+    return [b.finalize(st) for b, st in zip(benches, stats)]
+
+
+def prep_barrier_bench(
+    variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None,
+    mode: str = "fastforward",
+) -> FleetBench:
+    """Prepare (without running) a barrier microbenchmark config."""
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
+    cl = _make_cluster(n_cores, mode)
+    state = policy.make_sim_state(n_cores)
+    cm = cost_model or DEFAULT_COSTS
+
+    def program(cluster, cid):
+        for _ in range(iters):
+            if sfr > 0:
+                yield Compute(sfr)
+            yield from policy.sim_barrier(cluster, cid, state, cm)
+
+    return FleetBench(
+        config=FleetConfig(cluster=cl, programs=[program] * n_cores),
+        finalize=_finalizer(variant, "barrier", n_cores, sfr, iters, float(sfr)),
     )
 
 
@@ -90,33 +170,16 @@ def run_barrier_bench(
     selects the engine (``"fastforward"`` skips quiescent cycles;
     ``"lockstep"`` is the cycle-by-cycle reference -- identical stats).
     """
-    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
-
-    policy = get_policy(variant)
-    cl = _make_cluster(n_cores, mode)
-    state = policy.make_sim_state(n_cores)
-    cm = cost_model or DEFAULT_COSTS
-
-    def program(cluster, cid):
-        for _ in range(iters):
-            if sfr > 0:
-                yield Compute(sfr)
-            yield from policy.sim_barrier(cluster, cid, state, cm)
-
-    cl.load([program] * n_cores)
-    return _collect(variant, "barrier", cl, n_cores, sfr, iters, float(sfr))
+    return prep_barrier_bench(
+        variant, n_cores, sfr=sfr, iters=iters, cost_model=cost_model, mode=mode
+    ).run_sequential()
 
 
-def run_mutex_bench(
+def prep_mutex_bench(
     variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
     cost_model=None, mode: str = "fastforward",
-) -> MicrobenchResult:
-    """Loop of (SFR-compute + critical section) on every core.
-
-    Following the paper, the reported primitive cost is the overhead over the
-    ideal ``N_C * T_crit`` serialization of the critical sections
-    (``T_ideal = N_C T_crit``, Sec. 6.3).
-    """
+) -> FleetBench:
+    """Prepare (without running) a mutex microbenchmark config."""
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
 
     policy = get_policy(variant)
@@ -130,9 +193,29 @@ def run_mutex_bench(
                 yield Compute(sfr)
             yield from policy.sim_mutex(cluster, cid, t_crit, state, cm)
 
-    cl.load([program] * n_cores)
     ideal = float(n_cores * t_crit + sfr)
-    return _collect(variant, f"mutex_t{t_crit}", cl, n_cores, sfr, iters, ideal)
+    return FleetBench(
+        config=FleetConfig(cluster=cl, programs=[program] * n_cores),
+        finalize=_finalizer(
+            variant, f"mutex_t{t_crit}", n_cores, sfr, iters, ideal
+        ),
+    )
+
+
+def run_mutex_bench(
+    variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
+    cost_model=None, mode: str = "fastforward",
+) -> MicrobenchResult:
+    """Loop of (SFR-compute + critical section) on every core.
+
+    Following the paper, the reported primitive cost is the overhead over the
+    ideal ``N_C * T_crit`` serialization of the critical sections
+    (``T_ideal = N_C T_crit``, Sec. 6.3).
+    """
+    return prep_mutex_bench(
+        variant, n_cores, t_crit=t_crit, sfr=sfr, iters=iters,
+        cost_model=cost_model, mode=mode,
+    ).run_sequential()
 
 
 def barrier_pipeline_programs(policy, n_cores: int, work, state, cost_model=None):
@@ -184,6 +267,33 @@ def make_pipeline_programs(
     return maker(n_cores, work, state, cm, depth)
 
 
+def prep_chain_bench(
+    variant: str,
+    n_cores: int,
+    sfr: int = 100,
+    iters: int = 32,
+    depth: int = 8,
+    cost_model=None,
+    mode: str = "fastforward",
+) -> FleetBench:
+    """Prepare (without running) a pipelined-chain microbenchmark config."""
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
+    cl = _make_cluster(n_cores, mode)
+    state = policy.make_sim_state(n_cores)
+    work = [[sfr] * n_cores for _ in range(iters)]
+    programs = make_pipeline_programs(
+        policy, cl, n_cores, work, state, cost_model, depth
+    )
+    return FleetBench(
+        config=FleetConfig(cluster=cl, programs=programs),
+        finalize=_finalizer(
+            variant, f"chain_d{depth}", n_cores, sfr, iters, float(sfr)
+        ),
+    )
+
+
 def run_chain_bench(
     variant: str,
     n_cores: int,
@@ -203,18 +313,10 @@ def run_chain_bench(
     run it; everything else falls back to the barrier-synchronous emulation
     -- the baseline the paper's FIFO extension exists to beat.
     """
-    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
-
-    policy = get_policy(variant)
-    cl = _make_cluster(n_cores, mode)
-    state = policy.make_sim_state(n_cores)
-    work = [[sfr] * n_cores for _ in range(iters)]
-    cl.load(make_pipeline_programs(
-        policy, cl, n_cores, work, state, cost_model, depth
-    ))
-    return _collect(
-        variant, f"chain_d{depth}", cl, n_cores, sfr, iters, float(sfr)
-    )
+    return prep_chain_bench(
+        variant, n_cores, sfr=sfr, iters=iters, depth=depth,
+        cost_model=cost_model, mode=mode,
+    ).run_sequential()
 
 
 WQ_CS_CYCLES = 6  # queue-pointer bookkeeping inside the dequeue/enqueue lock
@@ -318,6 +420,37 @@ def work_queue_programs(
     ]
 
 
+def prep_work_queue_bench(
+    variant: str,
+    n_producers: int,
+    n_consumers: int,
+    items: int = 64,
+    t_produce: int = 30,
+    t_consume: int = 30,
+    cost_model=None,
+    mode: str = "fastforward",
+) -> FleetBench:
+    """Prepare (without running) a multi-producer work-queue config."""
+    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
+
+    policy = get_policy(variant)
+    n_cores = n_producers + n_consumers
+    cl = _make_cluster(n_cores, mode)
+    state = policy.make_sim_state(n_cores)
+    programs = work_queue_programs(
+        policy, n_producers, n_consumers, items, t_produce, t_consume,
+        state, cost_model,
+    )
+    ideal = items * max(t_produce / n_producers, t_consume / n_consumers)
+    return FleetBench(
+        config=FleetConfig(cluster=cl, programs=programs),
+        finalize=_finalizer(
+            variant, f"wq_p{n_producers}c{n_consumers}", n_cores, t_produce,
+            items, ideal / items,
+        ),
+    )
+
+
 def run_work_queue_bench(
     variant: str,
     n_producers: int,
@@ -337,21 +470,10 @@ def run_work_queue_bench(
     ``cycles_per_iter`` per *item* and the overhead over the ideal
     ``items * max(t_produce / P, t_consume / C)`` schedule.
     """
-    from repro.sync import get_policy  # deferred: repro.sync imports this pkg
-
-    policy = get_policy(variant)
-    n_cores = n_producers + n_consumers
-    cl = _make_cluster(n_cores, mode)
-    state = policy.make_sim_state(n_cores)
-    cl.load(work_queue_programs(
-        policy, n_producers, n_consumers, items, t_produce, t_consume,
-        state, cost_model,
-    ))
-    ideal = items * max(t_produce / n_producers, t_consume / n_consumers)
-    return _collect(
-        variant, f"wq_p{n_producers}c{n_consumers}", cl, n_cores, t_produce,
-        items, ideal / items,
-    )
+    return prep_work_queue_bench(
+        variant, n_producers, n_consumers, items=items, t_produce=t_produce,
+        t_consume=t_consume, cost_model=cost_model, mode=mode,
+    ).run_sequential()
 
 
 def run_nop_bench(

@@ -231,6 +231,38 @@ class SCU:
     def attach(self, cluster) -> None:
         self.cluster = cluster
 
+    def adopt_views(
+        self,
+        ev_buf: np.ndarray,
+        ev_mask: np.ndarray,
+        irq_mask: np.ndarray,
+        ntf_target: np.ndarray,
+        elw_wait: np.ndarray,
+    ) -> None:
+        """Re-home the per-core register storage onto caller-provided views.
+
+        Used by the fleet engine (:func:`repro.core.scu.engine.simulate_fleet`)
+        to partition the base-unit registers of many independent clusters as
+        contiguous segments of flattened fleet-level arrays: this SCU keeps
+        operating on its own cores only (the views span exactly its
+        segment), while the fleet's batched kernels scan every config's
+        event buffers and latched elw wait masks in one pass.  Current
+        register contents are copied into the views before binding."""
+        views = (ev_buf, ev_mask, irq_mask, ntf_target, elw_wait)
+        currents = (
+            self.base.ev_buf, self.base.ev_mask, self.base.irq_mask,
+            self.base.ntf_target, self.elw_wait,
+        )
+        for view, cur in zip(views, currents):
+            if view.shape != cur.shape:
+                raise ValueError(
+                    f"adopt_views: shape {view.shape} != {cur.shape}"
+                )
+            view[:] = cur
+        self.base.ev_buf, self.base.ev_mask = ev_buf, ev_mask
+        self.base.irq_mask, self.base.ntf_target = irq_mask, ntf_target
+        self.elw_wait = elw_wait
+
     # ------------------------------------------------------------ plain access
     def access(self, cid: int, kind: str, addr: Any, data: int = 0) -> Optional[int]:
         """Single-cycle read/write over the private link (non-elw)."""

@@ -69,6 +69,16 @@ def test_schema_catches_type_drift(baseline):
         "fastforward" in e for e in bench_compare.validate_schema(broken)
     )
 
+    broken = copy.deepcopy(baseline)
+    del broken["engine_perf"]["fleet"]["speedup_8core"]
+    assert any(
+        "speedup_8core" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    del broken["engine_perf"]["fleet"]
+    assert any("fleet" in e for e in bench_compare.validate_schema(broken))
+
 
 def test_schema_catches_chain_row_drift(baseline):
     broken = copy.deepcopy(baseline)
@@ -159,7 +169,8 @@ def test_gate_fails_on_min_sfr_regression(baseline):
 
 def test_throughput_soft_gate(baseline):
     """Engine-throughput gate: a collapse below 0.5x of the committed
-    baseline cyc/s fails, a dip below 1.0x only warns, parity is silent."""
+    baseline cyc/s fails, a dip below 1.0x only warns, parity is silent.
+    Covers the fastforward, contended and fleet-dispatch speedup keys."""
     fails, warns = bench_compare.compare_throughput(baseline, baseline)
     assert fails == [] and warns == []
 
@@ -168,14 +179,34 @@ def test_throughput_soft_gate(baseline):
         perf = doctored["engine_perf"]
         perf["speedup"] *= f
         perf["contended"]["speedup"] *= f
+        perf["fleet"]["speedup"] *= f
+        perf["fleet"]["speedup_8core"] *= f
         return doctored
 
     fails, warns = bench_compare.compare_throughput(baseline, scaled(0.4))
     assert fails, "a 0.4x throughput collapse must fail the soft gate"
+    assert any("fleet" in f for f in fails), "fleet speedup must be gated"
     fails, warns = bench_compare.compare_throughput(baseline, scaled(0.8))
     assert not fails and warns, "a 0.8x dip must warn, not fail"
     fails, warns = bench_compare.compare_throughput(baseline, scaled(1.3))
     assert not fails and not warns
+
+
+def test_run_only_rejects_unknown_section():
+    """benchmarks/run.py --only validates section names before any heavy
+    import and exits nonzero on unknown ones (the CI/iteration contract)."""
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "warp,table1"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=120,
+    )
+    assert r.returncode == 2
+    assert "unknown section" in r.stderr
+    assert "warp" in r.stderr
 
 
 def test_throughput_gate_wired_into_main(tmp_path, baseline):

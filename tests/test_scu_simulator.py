@@ -1015,6 +1015,208 @@ def test_spin_batch_resolver_period_jump_on_long_phase():
     assert cl.ff_batch_cycles > 0.95 * st.cycles
 
 
+# ---------------------------------------------------------------------------
+# Batched fleet simulation: bit-exact parity with sequential dispatch
+# ---------------------------------------------------------------------------
+
+
+def _random_fleet_benches(seed: int):
+    """A mixed fleet: different policies, core counts (8/16/64), shapes
+    (barrier/mutex/chain/work-queue), SFRs and iteration counts -- so
+    members finish at very different times and every batched kernel sees
+    heterogeneous segments.  Deterministic in ``seed`` so the sequential
+    and fleet passes replay identical programs."""
+    from repro.core.scu.programs import (
+        prep_barrier_bench,
+        prep_chain_bench,
+        prep_mutex_bench,
+        prep_work_queue_bench,
+    )
+
+    rng = random.Random(seed)
+    benches = []
+    for _ in range(rng.randint(5, 9)):
+        policy = rng.choice(POLICIES)
+        n = rng.choice((8, 8, 8, 16, 64))  # 8 thrice: the new fleet regime
+        shape = rng.choice(("barrier", "mutex", "chain", "wq")) if n <= 16 \
+            else "barrier"  # software mutex herds at 64 cores are O(n^2)
+        iters = rng.randint(2, 10)  # early/late finish times in one batch
+        if shape == "barrier":
+            benches.append(prep_barrier_bench(
+                policy, n, sfr=rng.choice((0, 13, 100, 900)), iters=iters
+            ))
+        elif shape == "mutex":
+            benches.append(prep_mutex_bench(
+                policy, n, t_crit=rng.randint(0, 12),
+                sfr=rng.choice((0, 37)), iters=iters,
+            ))
+        elif shape == "chain":
+            benches.append(prep_chain_bench(
+                policy, n, sfr=rng.choice((20, 150)), iters=iters,
+                depth=rng.choice((1, 4, 8)),
+            ))
+        else:
+            benches.append(prep_work_queue_bench(
+                policy, n // 2, n - n // 2, items=2 * n,
+                t_produce=rng.randint(1, 40), t_consume=rng.randint(1, 40),
+            ))
+    return benches
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_fleet_matches_sequential_on_random_mixed_fleets(seed):
+    """Randomized fleet-vs-sequential parity: a mixed batch must produce
+    ClusterStats bit-identical to per-config Cluster.run() -- the fleet
+    engine's core contract."""
+    from repro.core.scu.programs import make_fleet
+
+    seq = [b.run_sequential() for b in _random_fleet_benches(seed)]
+    fleet = make_fleet(_random_fleet_benches(seed))
+    for a, b in zip(seq, fleet):
+        assert a.stats == b.stats, (
+            f"fleet diverged (seed={seed}): {a.variant}/{a.primitive}"
+            f"@{a.n_cores}"
+        )
+
+
+def _sleeper_config(span=5000):
+    """All cores compute a long span, then meet at the hardware barrier --
+    one long quiescent stretch the fleet must cover with per-config jumps."""
+    from repro.core.scu.engine import FleetConfig
+
+    cl = make_cluster(8)
+
+    def prog(cluster, cid):
+        yield Compute(span)
+        yield from scu_barrier(cluster, cid)
+
+    return FleetConfig(cluster=cl, programs=[prog] * 8)
+
+
+def _churner_config(items=100):
+    """A FIFO producer-consumer pair whose comparator fires continuously --
+    armed-extension activity that must never leak into another config's
+    quiescent bound."""
+    from repro.core.scu.engine import FleetConfig
+
+    cl = make_cluster(8)
+
+    def producer(cluster, cid):
+        for v in range(items):
+            yield Compute(3)
+            # blocking push: hardware backpressure, comparator fires on
+            # every accepted event
+            yield Scu("elw", ("fifo", 1, "push_wait"), v % 256)
+
+    def consumer(cluster, cid):
+        for _ in range(items):
+            yield Scu("elw", ("fifo", 1, "pop"))
+
+    def idle(cluster, cid):
+        yield Compute(1)
+
+    return FleetConfig(cluster=cl, programs=[producer, consumer] + [idle] * 6)
+
+
+def test_fleet_comparator_during_other_configs_quiescent_span():
+    """Adversarial segment-independence case: config B's FIFO comparator
+    fires every few cycles while config A sits in a long quiescent span.
+    Per-config results must stay bit-exact in both orders, and A's span
+    must still be covered by fast-forward jumps (B's armed extension must
+    not force A through full steps)."""
+    from repro.core.scu.engine import simulate_fleet
+
+    ref = []
+    for mk in (_sleeper_config, _churner_config):
+        cfg = mk()
+        cfg.cluster.load(cfg.programs)
+        ref.append(cfg.cluster.run())
+
+    cfgs = [_sleeper_config(), _churner_config()]
+    out = simulate_fleet(cfgs)
+    assert out[0] == ref[0] and out[1] == ref[1]
+    assert cfgs[0].cluster.ff_cycles > 0.9 * out[0].cycles, (
+        "sleeper config degraded to stepping while the churner's "
+        "comparator was armed"
+    )
+
+    # reversed member order: segment offsets must not matter
+    cfgs = [_churner_config(), _sleeper_config()]
+    out = simulate_fleet(cfgs)
+    assert out[0] == ref[1] and out[1] == ref[0]
+
+
+def test_fleet_members_finish_independently():
+    """Early-finishing members are masked out: a 2-iteration config and a
+    long config in one fleet both match their sequential runs, and the
+    fleet leaves each member's local clock at its own final cycle."""
+    from repro.core.scu.programs import make_fleet, prep_barrier_bench
+
+    def build():
+        return [
+            prep_barrier_bench("scu", 8, sfr=0, iters=2),
+            prep_barrier_bench("sw", 8, sfr=400, iters=40),
+            prep_barrier_bench("fifo", 16, sfr=10, iters=6),
+        ]
+
+    seq = [b.run_sequential() for b in build()]
+    benches = build()
+    fleet = make_fleet(benches)
+    for a, b in zip(seq, fleet):
+        assert a.stats == b.stats
+    cycles = [b.config.cluster.cycle for b in benches]
+    assert cycles == [s.stats.cycles for s in seq]
+    assert cycles[0] < cycles[1]  # wildly different finish times, one batch
+
+
+def test_fleet_deadlock_raises_at_same_cycle():
+    """A deadlocked member must hit its max_cycles cap exactly as the
+    sequential engine does (jump to the cap, then raise)."""
+    from repro.core.scu.engine import FleetConfig, simulate_fleet
+
+    cl = make_cluster(2)
+
+    def sleeper(cluster, cid):
+        yield Scu("elw", ("notifier", 5, "wait"))
+
+    def finisher(cluster, cid):
+        yield Compute(3)
+
+    dead = FleetConfig(
+        cluster=cl, programs=[sleeper, finisher], max_cycles=4096
+    )
+    ok = FleetConfig(
+        cluster=make_cluster(2),
+        programs=[finisher, finisher],
+        max_cycles=4096,
+    )
+    with pytest.raises(RuntimeError, match="did not finish"):
+        simulate_fleet([ok, dead])
+    assert dead.cluster.cycle == 4096
+    assert dead.cluster.cores[0].state is CoreState.SLEEP
+
+
+def test_simulate_fleet_validates_inputs():
+    from repro.core.scu.engine import FleetConfig, simulate_fleet
+
+    def prog(cluster, cid):
+        yield Compute(1)
+
+    assert simulate_fleet([]) == []
+    with pytest.raises(ValueError, match="fastforward"):
+        simulate_fleet([FleetConfig(
+            cluster=make_cluster(2, mode="lockstep"), programs=[prog] * 2
+        )])
+    with pytest.raises(ValueError, match="programs"):
+        simulate_fleet([FleetConfig(cluster=make_cluster(2), programs=[prog])])
+    used = make_cluster(2)
+    used.load([prog] * 2)
+    used.run()
+    with pytest.raises(ValueError, match="fresh"):
+        simulate_fleet([FleetConfig(cluster=used, programs=[prog] * 2)])
+
+
 def test_invalid_engine_mode_rejected():
     with pytest.raises(ValueError, match="mode"):
         Cluster(n_cores=2, mode="warp")
