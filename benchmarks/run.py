@@ -6,8 +6,10 @@
 Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), the pipelined
 producer-consumer chain and multi-producer work-queue microbenchmarks (SCU
 event FIFO), the scaling sweeps (16/32/64/128/256-core clusters; --fast
-samples 16/64/128/256) and the engine-throughput benchmark (quiescent,
-contended and fleet-dispatch sweeps), then the Tier-2 roofline read-out
+samples 16/64/128/256), the engine-throughput benchmark (quiescent,
+contended and fleet-dispatch sweeps) and the sweep-service traffic
+benchmark (continuous batching vs drain baseline on the slot-recycling
+fleet), then the Tier-2 roofline read-out
 from the dry-run artifacts.  The Table-1/Fig-5/chain/work-queue sweeps and
 their scaling variants dispatch through the batched fleet engine
 (``repro.core.scu.engine.simulate_fleet``); per-config numbers are
@@ -97,6 +99,7 @@ SECTIONS = (
     "work_queue",
     "scaling",
     "engine_perf",
+    "traffic",
     "jax_barriers",
     "roofline",
 )
@@ -138,6 +141,7 @@ def main() -> int:
         roofline,
         table1_primitives,
         table2_apps,
+        traffic,
         work_queue,
     )
 
@@ -225,6 +229,14 @@ def main() -> int:
                 "speedup_8core": fleet["speedup_8core"],
             },
         }
+
+    if want("traffic"):
+        print("\n" + "#" * 72)
+        print("# Sweep-service traffic -- continuous batching vs drain baseline")
+        print("#" * 72)
+        # one fixed size under --fast and full: the round-count metrics are
+        # deterministic and hard-gated, so the artifact must not vary
+        results["traffic"] = traffic.run()
 
     if want("jax_barriers"):
         print("\n" + "#" * 72)

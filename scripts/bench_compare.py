@@ -7,7 +7,9 @@ against the committed golden baseline.
 The simulator is cycle-exact and fully deterministic (seeded RNG, no
 wall-clock inputs), so the key numbers -- Table-1 primitive cycles, Fig-5
 minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain and
-work-queue cost, and their 16..256-core scaling rows -- must reproduce
+work-queue cost, their 16..256-core scaling rows, and the sweep-service
+traffic latency/idle/energy-tail metrics (counted in deterministic
+scheduler rounds) -- must reproduce
 bit-for-bit on any machine (the sweeps dispatch through the batched fleet
 engine, which is bit-exact per config against sequential runs).  A current value more than ``threshold`` above the baseline fails
 the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
@@ -85,6 +87,18 @@ def extract_metrics(results: Dict) -> Metrics:
     for row in results.get("work_queue_scaling", []):
         key = f"work_queue_scaling/{row['policy']}@{row['n_cores']}/cycles_per_item"
         m[key] = _num(row["cycles_per_item"])
+    # sweep-service traffic: latency/idle metrics are counted in scheduler
+    # rounds (deterministic), so they gate as hard as cycle counts
+    traffic = results.get("traffic", {})
+    for name, sc in traffic.get("scenarios", {}).items():
+        for mode in ("continuous", "drain"):
+            r = sc.get(mode, {})
+            for k in ("p50_latency_rounds", "p99_latency_rounds",
+                      "idle_lane_fraction"):
+                m[f"traffic/{name}/{mode}/{k}"] = _num(r.get(k))
+    for policy, tail in traffic.get("energy_tail", {}).items():
+        for k in ("p99_spin_pj", "p99_idle_pj"):
+            m[f"traffic/energy/{policy}/{k}"] = _num(tail.get(k))
     return m
 
 
@@ -104,6 +118,10 @@ THROUGHPUT_KEYS = (
      lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup")),
     ("engine_perf/fleet/speedup_8core",
      lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup_8core")),
+    # sweep-service dispatch ratio: drain-baseline wall over continuous
+    # wall on the identical job stream, same run / same machine
+    ("traffic/speedup",
+     lambda r: r.get("traffic", {}).get("speedup")),
 )
 
 
@@ -302,6 +320,31 @@ def validate_schema(results: Dict) -> List[str]:
              "engine_perf.fleet.speedup: expected finite number")
         need(_is_num(fleet.get("speedup_8core")),
              "engine_perf.fleet.speedup_8core: expected finite number")
+
+    traffic = results.get("traffic")
+    if need(isinstance(traffic, dict), "traffic: missing or not a dict"):
+        scenarios = traffic.get("scenarios")
+        if need(isinstance(scenarios, dict) and scenarios,
+                "traffic.scenarios: missing or empty"):
+            for name, sc in scenarios.items():
+                for mode in ("continuous", "drain"):
+                    ctx = f"traffic.scenarios.{name}.{mode}"
+                    r = sc.get(mode) if isinstance(sc, dict) else None
+                    if not need(isinstance(r, dict), f"{ctx}: not a dict"):
+                        continue
+                    for k in ("rounds", "p50_latency_rounds",
+                              "p99_latency_rounds", "idle_lane_fraction"):
+                        need(_is_num(r.get(k)),
+                             f"{ctx}.{k}: expected finite number")
+        tail = traffic.get("energy_tail")
+        if need(isinstance(tail, dict) and tail,
+                "traffic.energy_tail: missing or empty"):
+            for policy, t in tail.items():
+                for k in ("p99_spin_pj", "p99_idle_pj"):
+                    need(isinstance(t, dict) and _is_num(t.get(k)),
+                         f"traffic.energy_tail.{policy}.{k}: expected finite number")
+        need(_is_num(traffic.get("speedup")),
+             "traffic.speedup: expected finite number")
     return errors
 
 

@@ -86,6 +86,7 @@ bit-exact per config against one-at-a-time runs; see :class:`_Fleet`.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
 from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
@@ -104,6 +105,7 @@ __all__ = [
     "FleetConfig",
     "Program",
     "simulate_fleet",
+    "SlotFleet",
 ]
 
 
@@ -1660,9 +1662,16 @@ _NO_BOUND = np.int64(1) << 60
 
 
 class _FleetMember:
-    """Bookkeeping of one config inside the fleet's flattened state."""
+    """Bookkeeping of one config inside the fleet's flattened state.
 
-    __slots__ = ("index", "cluster", "max_cycles", "sl", "off", "done")
+    ``index`` is the member's segment id: the position in the config list
+    for the static fleet (:class:`_Fleet`), the slot id for the
+    slot-recycling fleet (:class:`SlotFleet`).  ``error`` stays ``None``
+    except in slot mode, where a member that burns to its ``max_cycles``
+    cap is marked failed instead of aborting the whole fleet.
+    """
+
+    __slots__ = ("index", "cluster", "max_cycles", "sl", "off", "done", "error")
 
     def __init__(self, index: int, cfg: FleetConfig, off: int):
         self.index = index
@@ -1671,231 +1680,186 @@ class _FleetMember:
         self.off = off
         self.sl = slice(off, off + cfg.cluster.n_cores)
         self.done = False
+        self.error: Optional[str] = None
 
 
-class _Fleet:
-    """The fleet engine: N independent clusters on one flattened SoA core.
+def _check_fleet_config(cfg: FleetConfig, label: str, needs: str) -> None:
+    """Shared admission validation of the static and slot-recycling fleets."""
+    cl = cfg.cluster
+    if cl.mode != "fastforward":
+        raise ValueError(
+            f"{label}: cluster mode must be 'fastforward', got {cl.mode!r}"
+        )
+    if len(cfg.programs) != cl.n_cores:
+        raise ValueError(
+            f"{label}: {len(cfg.programs)} programs for {cl.n_cores} cores"
+        )
+    if cl.cycle != 0 or cl.cores:
+        raise ValueError(
+            f"{label}: cluster already loaded or run; "
+            f"{needs} needs a fresh cluster"
+        )
+    if cl.n_cores < 1:
+        raise ValueError(f"{label}: cluster has no cores")
 
-    Every member cluster's scheduler state (:class:`_VecState`), round-robin
-    pointers and SCU base-unit registers become *views* into fleet-level
-    arrays laid out along a flattened ``(config, core)`` axis -- per-config
-    segments partition TCDM bank arbitration, SCU registers, armed-extension
-    sets and the ``next_event_bound()`` reduction, so configs never interact
-    (each keeps its own TCDM dict, SCU instance, stats and local clock).
 
-    The run loop generalizes :meth:`Cluster._run_fast` per segment:
+class _FleetEngine:
+    """Shared flattened-array core of the two fleet dispatchers.
 
-    * per-config quiescent bounds come from segment-min reductions over the
-      flattened arrays (one ``np.minimum.reduceat`` instead of N bound
-      scans), and the global jump becomes a **per-config span jump** --
-      members at different local cycles advance by their own bound in one
-      vectorized update;
-    * members whose bound is 0 first try their own spin-phase batch
-      resolver (tier 2, unchanged -- it operates on the views), then join
-      one **batched full step** whose phase kernels run over the cores of
-      every stepping config at once -- this is what makes 8-core configs
-      vectorizable for the first time (64 eight-core clusters = one
-      512-lane array program);
-    * members that finish early are masked out of every kernel.
+    Owns nothing itself -- subclasses allocate the flattened state
+    (:class:`_Fleet` packs variable-size segments back to back;
+    :class:`SlotFleet` uses fixed-width recyclable slots) and this base
+    provides the member-attachment protocol plus the scheduling round:
+    per-segment bound/spin reductions, the vectorized multi-span jump and
+    the batched full step.  Every method here treats ``self.members`` as a
+    list indexed by segment id (entries may be ``None`` in slot mode).
 
-    Each tier is individually exact (a full step *is* the reference
-    semantics; any jump up to the bound is exact; the spin resolver is
-    exact), so per-config results are bit-identical to a one-at-a-time
-    ``Cluster.run()`` -- enforced by the fleet parity suite in
-    ``tests/test_scu_simulator.py``.
+    Required fields (populated by the subclass):
+
+    ``_vec``/``_rr``/``seg``/``local_cid``/``cfg_n``/``bank_base``/
+    ``seg_offsets`` -- the flattened scheduler state and geometry;
+    ``ev_buf``/``ev_mask``/``irq_mask``/``ntf_target``/``elw_wait`` -- the
+    flattened SCU base-unit registers; ``_step_mask``/``_span_buf`` --
+    reused scratch; ``members``/``_no_spin``/``_cl_list``/``_core_list``/
+    ``_lcid_list`` -- per-segment and per-lane lookup tables.
     """
 
-    def __init__(self, configs: List[FleetConfig]):
-        self.members: List[_FleetMember] = []
-        total = 0
-        total_banks = 0
-        for i, cfg in enumerate(configs):
-            cl = cfg.cluster
-            if cl.mode != "fastforward":
-                raise ValueError(
-                    f"fleet member {i}: cluster mode must be 'fastforward', "
-                    f"got {cl.mode!r}"
-                )
-            if len(cfg.programs) != cl.n_cores:
-                raise ValueError(
-                    f"fleet member {i}: {len(cfg.programs)} programs for "
-                    f"{cl.n_cores} cores"
-                )
-            if cl.cycle != 0 or cl.cores:
-                raise ValueError(
-                    f"fleet member {i}: cluster already loaded or run; "
-                    "simulate_fleet needs a fresh cluster"
-                )
-            if cl.n_cores < 1:
-                raise ValueError(f"fleet member {i}: cluster has no cores")
-            self.members.append(_FleetMember(i, cfg, total))
-            total += cl.n_cores
-            total_banks += cl.n_banks
-        self.total = total
+    # ------------------------------------------------------------ attachment
+    def _attach_member(
+        self, m: "_FleetMember", cfg: FleetConfig, bank_off: int
+    ) -> None:
+        """Adopt one member cluster's state into the flattened arrays.
 
-        # flattened (config, core) state + per-core constants
-        self._vec = _VecState(total)
-        self._rr = np.zeros(total_banks, dtype=np.int64)
-        self.seg = np.zeros(total, dtype=np.int64)  # member index per core
-        self.local_cid = np.zeros(total, dtype=np.int64)
-        self.cfg_n = np.zeros(total, dtype=np.int64)  # member n_cores per core
-        self.bank_base = np.zeros(total, dtype=np.int64)
-        self.seg_offsets = np.zeros(len(self.members), dtype=np.int64)
-        # flattened SCU base-unit registers + latched elw wait masks
-        self.ev_buf = np.zeros(total, dtype=np.int64)
-        self.ev_mask = np.zeros(total, dtype=np.int64)
-        self.irq_mask = np.zeros(total, dtype=np.int64)
-        self.ntf_target = np.zeros(total, dtype=np.int64)
-        self.elw_wait = np.zeros(total, dtype=np.int64)
-        self._step_mask = np.zeros(total, dtype=bool)  # reused per step
-        self._span_buf = np.zeros(total, dtype=np.int64)  # reused per jump
-
-        bank_off = 0
-        for m, cfg in zip(self.members, configs):
-            cl = m.cluster
-            sl = m.sl
-            n = cl.n_cores
-            self.seg[sl] = m.index
-            self.local_cid[sl] = np.arange(n)
-            self.cfg_n[sl] = n
-            self.bank_base[sl] = bank_off
-            self.seg_offsets[m.index] = m.off
-            # adopt the member's state into the fleet arrays: the member's
-            # engine code keeps running unchanged on these views
-            cl.vectorized = True
-            cl._vec = _VecState.view_of(self._vec, sl)
-            cl._rr = self._rr[bank_off:bank_off + cl.n_banks]
-            bank_off += cl.n_banks
-            cl.max_cycles = m.max_cycles
-            if cl.scu is not None:
-                cl.scu.adopt_views(
-                    self.ev_buf[sl], self.ev_mask[sl], self.irq_mask[sl],
-                    self.ntf_target[sl], self.elw_wait[sl],
-                )
-            cl.cores = [
-                _VecCore(i, prog(cl, i), cl._vec)
-                for i, prog in enumerate(cfg.programs)
-            ]
-            cl.stats = ClusterStats()
-            cl._n_done = 0
-        # plain-int lookup tables for the scalar loops (indexing a numpy
-        # array with a Python int and converting is ~5x the list cost)
-        self._lcid_list = self.local_cid.tolist()
-        # per-core cluster + core-object tables: one list index from a
-        # flattened core id to the owning member's state
-        self._cl_list = [
-            m.cluster for m in self.members for _ in range(m.cluster.n_cores)
+        After this, the member's own engine code (generator advances, SCU
+        servicing, the spin resolver) runs unchanged on *views* of the
+        fleet-level storage -- the view is the segment partition.  The
+        slot-recycling fleet calls this at admission time on a freshly
+        zeroed segment; the static fleet calls it once per config at
+        construction."""
+        cl = m.cluster
+        sl = m.sl
+        cl.vectorized = True
+        cl._vec = _VecState.view_of(self._vec, sl)
+        cl._rr = self._rr[bank_off:bank_off + cl.n_banks]
+        cl.max_cycles = m.max_cycles
+        if cl.scu is not None:
+            cl.scu.adopt_views(
+                self.ev_buf[sl], self.ev_mask[sl], self.irq_mask[sl],
+                self.ntf_target[sl], self.elw_wait[sl],
+            )
+        cl.cores = [
+            _VecCore(i, prog(cl, i), cl._vec)
+            for i, prog in enumerate(cfg.programs)
         ]
-        self._core_list = [c for m in self.members for c in m.cluster.cores]
+        cl.stats = ClusterStats()
+        cl._n_done = 0
 
-    # ------------------------------------------------------------------ run
-    def run(self) -> List[ClusterStats]:
-        try:
-            self._run()
-        finally:
-            for m in self.members:
-                cl = m.cluster
-                cl.stats.cycles = cl.cycle
-                cl.stats.cores = [c.stats for c in cl.cores]
-        return [m.cluster.stats for m in self.members]
+    # ------------------------------------------------------------ scheduling
+    def _on_timeout(self, m: "_FleetMember") -> None:
+        """A member hit its ``max_cycles`` cap.  The static fleet aborts the
+        whole run (matching ``Cluster.run``); the slot fleet overrides this
+        to mark the member failed so co-resident jobs keep running."""
+        m.cluster._raise_timeout(m.max_cycles)
 
-    def _run(self) -> None:
+    def _round(self, live: List["_FleetMember"]) -> List["_FleetMember"]:
+        """One scheduling round over the ``live`` members: per-segment
+        bound/spin reductions in one flattened pass, then every member
+        either jumps its own quiescent span, batch-resolves a spin phase,
+        or joins the batched full step.  Returns the members that finished
+        (or, in slot mode, failed) this round, with ``done`` set."""
         V = self._vec
         st = V.state
-        members = self.members
-        live = list(members)  # zero-core members are rejected at build time
         offs = self.seg_offsets
-        no_spin = [False] * len(members)  # shared constant, never mutated
-        while live:
-            # -- per-config bounds + spin eligibility (one flattened pass,
-            #    segment reductions instead of N per-member scans).  Cores
-            #    of finished members are all DONE, so no live-mask is
-            #    needed: every state test below excludes them already.
-            active = st == _ACTIVE
-            waking = st == _WAKING
-            stalled = st == _STALL_MEM
-            stall_scu = st == _STALL_SCU
-            sleeping = st == _SLEEP
-            if sleeping.any():
-                sleep_grant = sleeping & (
-                    (self.ev_buf & self.elw_wait) != 0
-                )
-            else:
-                sleep_grant = sleeping
-            adv_due = active & (V.busy <= 0)
-            wake_due = waking & (V.wake <= 1)
-            need = stalled | stall_scu
-            need |= adv_due
-            need |= wake_due
-            need |= sleep_grant
-            seg_need = np.logical_or.reduceat(need, offs).tolist()
-            # one fused countdown-min reduction: busy for active cores,
-            # wake-1 for waking cores, +inf sentinel otherwise
-            countdown = np.where(
-                active, V.busy, np.where(waking, V.wake - 1, _NO_BOUND)
+        # -- per-config bounds + spin eligibility (one flattened pass,
+        #    segment reductions instead of N per-member scans).  Cores of
+        #    finished members and empty slots are all DONE, so no live-mask
+        #    is needed: every state test below excludes them already.
+        active = st == _ACTIVE
+        waking = st == _WAKING
+        stalled = st == _STALL_MEM
+        stall_scu = st == _STALL_SCU
+        sleeping = st == _SLEEP
+        if sleeping.any():
+            sleep_grant = sleeping & (
+                (self.ev_buf & self.elw_wait) != 0
             )
-            seg_bound = np.minimum.reduceat(countdown, offs).tolist()
-            # spin-phase eligibility, mirroring _spin_participants_vec: the
-            # participants (armed Polls queued or in their retry shadow) and
-            # the disqualifiers, reduced per segment
-            if V.has_poll.any():
-                part = V.has_poll & (stalled | active)
-                spin_bad = stall_scu | (stalled & ~V.has_poll)
-                spin_bad |= adv_due & ~part
-                spin_bad |= wake_due
-                spin_bad |= sleep_grant
-                seg_spin = (
-                    np.logical_or.reduceat(part, offs)
-                    & ~np.logical_or.reduceat(spin_bad, offs)
-                ).tolist()
-            else:
-                part = None
-                seg_spin = no_spin
+        else:
+            sleep_grant = sleeping
+        adv_due = active & (V.busy <= 0)
+        wake_due = waking & (V.wake <= 1)
+        need = stalled | stall_scu
+        need |= adv_due
+        need |= wake_due
+        need |= sleep_grant
+        seg_need = np.logical_or.reduceat(need, offs).tolist()
+        # one fused countdown-min reduction: busy for active cores,
+        # wake-1 for waking cores, +inf sentinel otherwise
+        countdown = np.where(
+            active, V.busy, np.where(waking, V.wake - 1, _NO_BOUND)
+        )
+        seg_bound = np.minimum.reduceat(countdown, offs).tolist()
+        # spin-phase eligibility, mirroring _spin_participants_vec: the
+        # participants (armed Polls queued or in their retry shadow) and
+        # the disqualifiers, reduced per segment
+        if V.has_poll.any():
+            part = V.has_poll & (stalled | active)
+            spin_bad = stall_scu | (stalled & ~V.has_poll)
+            spin_bad |= adv_due & ~part
+            spin_bad |= wake_due
+            spin_bad |= sleep_grant
+            seg_spin = (
+                np.logical_or.reduceat(part, offs)
+                & ~np.logical_or.reduceat(spin_bad, offs)
+            ).tolist()
+        else:
+            part = None
+            seg_spin = self._no_spin
 
-            jumps: List[Tuple[_FleetMember, int]] = []
-            stepping: List[_FleetMember] = []
-            for m in live:
-                cl = m.cluster
-                if cl.cycle >= m.max_cycles:
-                    cl._raise_timeout(m.max_cycles)
-                g = m.index
-                if seg_need[g]:
-                    scu = cl.scu
-                    if (
-                        seg_spin[g]
-                        and (scu is None or scu.next_event_bound() is None)
-                        and cl._resolve_spin_phase(np.flatnonzero(part[m.sl]))
-                    ):
-                        continue
-                    stepping.append(m)
-                    continue
-                b = seg_bound[g]
+        jumps: List[Tuple[_FleetMember, int]] = []
+        stepping: List[_FleetMember] = []
+        finished: List[_FleetMember] = []
+        for m in live:
+            cl = m.cluster
+            if cl.cycle >= m.max_cycles:
+                self._on_timeout(m)  # static fleet: raises
+                m.done = True
+                finished.append(m)
+                continue
+            g = m.index
+            if seg_need[g]:
                 scu = cl.scu
-                if scu is not None:
-                    sb = scu.next_event_bound()
-                    if sb is not None:
-                        if sb <= 0:
-                            stepping.append(m)
-                            continue
-                        b = min(b, sb)
-                if b >= _NO_BOUND:
-                    # deadlock: no internal event in sight -- burn to the
-                    # cap so the failure matches the sequential engine
-                    b = m.max_cycles - cl.cycle
-                jumps.append((m, min(b, m.max_cycles - cl.cycle)))
+                if (
+                    seg_spin[g]
+                    and (scu is None or scu.next_event_bound() is None)
+                    and cl._resolve_spin_phase(np.flatnonzero(part[m.sl]))
+                ):
+                    continue
+                stepping.append(m)
+                continue
+            b = seg_bound[g]
+            scu = cl.scu
+            if scu is not None:
+                sb = scu.next_event_bound()
+                if sb is not None:
+                    if sb <= 0:
+                        stepping.append(m)
+                        continue
+                    b = min(b, sb)
+            if b >= _NO_BOUND:
+                # deadlock: no internal event in sight -- burn to the
+                # cap so the failure matches the sequential engine
+                b = m.max_cycles - cl.cycle
+            jumps.append((m, min(b, m.max_cycles - cl.cycle)))
 
-            if jumps:
-                self._jump(jumps)
-            if stepping:
-                self._step(stepping)
-                finished = [
-                    m for m in stepping
-                    if m.cluster._n_done >= m.cluster.n_cores
-                ]
-                if finished:
-                    for m in finished:
-                        m.done = True
-                    live = [m for m in live if not m.done]
+        if jumps:
+            self._jump(jumps)
+        if stepping:
+            self._step(stepping)
+            for m in stepping:
+                if m.cluster._n_done >= m.cluster.n_cores:
+                    m.done = True
+                    finished.append(m)
+        return finished
 
     # ----------------------------------------------------------------- jump
     def _jump(self, jumps: List[Tuple["_FleetMember", int]]) -> None:
@@ -2048,6 +2012,323 @@ class _Fleet:
         V.counter_block[:5] += _ACCT_INC[:, stm]
         for m in stepping:
             m.cluster.cycle += 1
+
+
+class _Fleet(_FleetEngine):
+    """The fleet engine: N independent clusters on one flattened SoA core.
+
+    Every member cluster's scheduler state (:class:`_VecState`), round-robin
+    pointers and SCU base-unit registers become *views* into fleet-level
+    arrays laid out along a flattened ``(config, core)`` axis -- per-config
+    segments partition TCDM bank arbitration, SCU registers, armed-extension
+    sets and the ``next_event_bound()`` reduction, so configs never interact
+    (each keeps its own TCDM dict, SCU instance, stats and local clock).
+
+    The run loop generalizes :meth:`Cluster._run_fast` per segment:
+
+    * per-config quiescent bounds come from segment-min reductions over the
+      flattened arrays (one ``np.minimum.reduceat`` instead of N bound
+      scans), and the global jump becomes a **per-config span jump** --
+      members at different local cycles advance by their own bound in one
+      vectorized update;
+    * members whose bound is 0 first try their own spin-phase batch
+      resolver (tier 2, unchanged -- it operates on the views), then join
+      one **batched full step** whose phase kernels run over the cores of
+      every stepping config at once -- this is what makes 8-core configs
+      vectorizable for the first time (64 eight-core clusters = one
+      512-lane array program);
+    * members that finish early are masked out of every kernel.
+
+    Each tier is individually exact (a full step *is* the reference
+    semantics; any jump up to the bound is exact; the spin resolver is
+    exact), so per-config results are bit-identical to a one-at-a-time
+    ``Cluster.run()`` -- enforced by the fleet parity suite in
+    ``tests/test_scu_simulator.py``.
+    """
+
+    def __init__(self, configs: List[FleetConfig]):
+        self.members: List[_FleetMember] = []
+        total = 0
+        total_banks = 0
+        for i, cfg in enumerate(configs):
+            _check_fleet_config(cfg, f"fleet member {i}", "simulate_fleet")
+            cl = cfg.cluster
+            self.members.append(_FleetMember(i, cfg, total))
+            total += cl.n_cores
+            total_banks += cl.n_banks
+        self.total = total
+
+        # flattened (config, core) state + per-core constants
+        self._vec = _VecState(total)
+        self._rr = np.zeros(total_banks, dtype=np.int64)
+        self.seg = np.zeros(total, dtype=np.int64)  # member index per core
+        self.local_cid = np.zeros(total, dtype=np.int64)
+        self.cfg_n = np.zeros(total, dtype=np.int64)  # member n_cores per core
+        self.bank_base = np.zeros(total, dtype=np.int64)
+        self.seg_offsets = np.zeros(len(self.members), dtype=np.int64)
+        # flattened SCU base-unit registers + latched elw wait masks
+        self.ev_buf = np.zeros(total, dtype=np.int64)
+        self.ev_mask = np.zeros(total, dtype=np.int64)
+        self.irq_mask = np.zeros(total, dtype=np.int64)
+        self.ntf_target = np.zeros(total, dtype=np.int64)
+        self.elw_wait = np.zeros(total, dtype=np.int64)
+        self._step_mask = np.zeros(total, dtype=bool)  # reused per step
+        self._span_buf = np.zeros(total, dtype=np.int64)  # reused per jump
+        self._no_spin = [False] * len(self.members)  # shared, never mutated
+
+        bank_off = 0
+        for m, cfg in zip(self.members, configs):
+            cl = m.cluster
+            sl = m.sl
+            n = cl.n_cores
+            self.seg[sl] = m.index
+            self.local_cid[sl] = np.arange(n)
+            self.cfg_n[sl] = n
+            self.bank_base[sl] = bank_off
+            self.seg_offsets[m.index] = m.off
+            # adopt the member's state into the fleet arrays: the member's
+            # engine code keeps running unchanged on these views
+            self._attach_member(m, cfg, bank_off)
+            bank_off += cl.n_banks
+        # plain-int lookup tables for the scalar loops (indexing a numpy
+        # array with a Python int and converting is ~5x the list cost)
+        self._lcid_list = self.local_cid.tolist()
+        # per-core cluster + core-object tables: one list index from a
+        # flattened core id to the owning member's state
+        self._cl_list = [
+            m.cluster for m in self.members for _ in range(m.cluster.n_cores)
+        ]
+        self._core_list = [c for m in self.members for c in m.cluster.cores]
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> List[ClusterStats]:
+        try:
+            self._run()
+        finally:
+            for m in self.members:
+                cl = m.cluster
+                cl.stats.cycles = cl.cycle
+                cl.stats.cores = [c.stats for c in cl.cores]
+        return [m.cluster.stats for m in self.members]
+
+    def _run(self) -> None:
+        live = list(self.members)  # zero-core members rejected at build time
+        while live:
+            if self._round(live):
+                live = [m for m in live if not m.done]
+
+
+class SlotFleet(_FleetEngine):
+    """Slot-recycling fleet: a fixed lane geometry that admits jobs mid-run.
+
+    Where :class:`_Fleet` packs a *fixed* config list into back-to-back
+    segments and drains them all, this engine owns ``n_slots`` recyclable
+    segments of ``slot_cores`` lanes each and exposes an incremental API:
+
+    * :meth:`admit` binds a fresh :class:`FleetConfig` (``n_cores <=
+      slot_cores``) into the lowest free slot -- the same view adoption as
+      the static fleet (:meth:`_FleetEngine._attach_member`), on freshly
+      scrubbed lanes;
+    * :meth:`advance` runs **one scheduling round** over every occupied
+      slot and returns the members that completed (or failed) in it, with
+      their :class:`ClusterStats` already materialized -- safe to read
+      after the slot is recycled;
+    * :meth:`free` scrubs a finished member's lanes back to ``DONE`` and
+      returns the slot to the free list, ready for the next admission.
+
+    Empty lanes (free slots, and the tail of a slot running a job narrower
+    than ``slot_cores``) sit in the ``DONE`` state, whose column in every
+    flattened kernel is neutral: segment reductions see ``+inf`` bounds and
+    no needs, jumps multiply them by span 0, the step's accounting gather
+    reads the all-zero ``DONE`` column.  That is what makes admission
+    timing invisible to co-residents -- a job admitted while another slot
+    is mid-quiescent-span neither shortens nor lengthens that span, it just
+    changes which *scheduler round* resolves each event.  Per-member
+    results therefore stay bit-exact against one-at-a-time ``Cluster.run()``
+    calls regardless of what shared a step with them (enforced by the
+    service parity suite in ``tests/test_fleet_service.py``).
+
+    Deadlock/timeout semantics match :func:`simulate_fleet` per member: a
+    member with no internal event in sight burns to its ``max_cycles`` cap
+    and is then marked **failed** -- ``member.error`` carries the exact
+    message ``Cluster.run`` would have raised -- instead of aborting the
+    fleet, so co-resident jobs are unaffected.
+    """
+
+    def __init__(
+        self, n_slots: int, slot_cores: int, banking_factor: int = 2
+    ):
+        if n_slots < 1 or slot_cores < 1:
+            raise ValueError("SlotFleet needs at least one slot and one lane")
+        self.n_slots = n_slots
+        self.slot_cores = slot_cores
+        self.slot_banks = banking_factor * slot_cores
+        total = n_slots * slot_cores
+        self.total = total
+
+        # flattened (slot, lane) state -- fixed geometry, recycled in place
+        self._vec = _VecState(total)
+        self._vec.state[:] = _DONE  # every empty lane is neutral
+        self._rr = np.zeros(n_slots * self.slot_banks, dtype=np.int64)
+        self.seg = np.repeat(np.arange(n_slots, dtype=np.int64), slot_cores)
+        self.local_cid = np.tile(
+            np.arange(slot_cores, dtype=np.int64), n_slots
+        )
+        self.cfg_n = np.ones(total, dtype=np.int64)  # 1 on empty lanes: no %0
+        self.bank_base = np.repeat(
+            np.arange(n_slots, dtype=np.int64) * self.slot_banks, slot_cores
+        )
+        self.seg_offsets = (
+            np.arange(n_slots, dtype=np.int64) * slot_cores
+        )
+        # flattened SCU base-unit registers + latched elw wait masks
+        self.ev_buf = np.zeros(total, dtype=np.int64)
+        self.ev_mask = np.zeros(total, dtype=np.int64)
+        self.irq_mask = np.zeros(total, dtype=np.int64)
+        self.ntf_target = np.zeros(total, dtype=np.int64)
+        self.elw_wait = np.zeros(total, dtype=np.int64)
+        self._step_mask = np.zeros(total, dtype=bool)
+        self._span_buf = np.zeros(total, dtype=np.int64)
+        self._no_spin = [False] * n_slots
+
+        # slot directory: members[slot] is None while the slot is free
+        self.members: List[Optional[_FleetMember]] = [None] * n_slots
+        self._free: List[int] = list(range(n_slots))  # kept sorted
+        self._lcid_list = self.local_cid.tolist()
+        self._cl_list: List[Optional[Cluster]] = [None] * total
+        self._core_list: List[Optional[_VecCore]] = [None] * total
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupied(self) -> int:
+        return self.n_slots - len(self._free)
+
+    # ------------------------------------------------------------------ admit
+    def validate(self, cfg: FleetConfig) -> None:
+        """Admission checks without claiming a slot (queue-time screening).
+
+        Same config checks as :func:`simulate_fleet` plus the slot-width
+        fit; raises ``ValueError`` on the first violation."""
+        _check_fleet_config(cfg, "slot fleet job", "SlotFleet.admit")
+        cl = cfg.cluster
+        if cl.n_cores > self.slot_cores:
+            raise ValueError(
+                f"slot fleet job: {cl.n_cores} cores exceed the "
+                f"{self.slot_cores}-lane slot width"
+            )
+        if cl.n_banks > self.slot_banks:
+            raise ValueError(
+                f"slot fleet job: {cl.n_banks} banks exceed the "
+                f"{self.slot_banks}-bank slot range"
+            )
+
+    def admit(self, cfg: FleetConfig) -> int:
+        """Bind a fresh config into the lowest free slot; returns the slot id.
+
+        Raises ``ValueError`` on an invalid config (same checks as
+        :func:`simulate_fleet`, plus the slot-width fit) and
+        ``RuntimeError`` when no slot is free -- check :attr:`free_slots`
+        first; queueing policy belongs to the caller (see
+        ``repro.serve.fleet_service``)."""
+        self.validate(cfg)
+        cl = cfg.cluster
+        if not self._free:
+            raise RuntimeError("SlotFleet.admit: no free slot")
+        slot = self._free.pop(0)
+        off = slot * self.slot_cores
+        full = slice(off, off + self.slot_cores)
+
+        # scrub the whole slot: the previous occupant may have timed out
+        # mid-SLEEP/STALL and view adoption only overwrites the SCU
+        # registers, not the scheduler lanes
+        V = self._vec
+        V.state[full] = _DONE
+        V.busy[full] = 0
+        V.wake[full] = 0
+        V.sleep_entry[full] = 0
+        V.pend_bank[full] = -1
+        V.has_poll[full] = False
+        V.elw[full] = False
+        V.counter_block[:, full] = 0
+        self.ev_buf[full] = 0
+        self.ev_mask[full] = 0
+        self.irq_mask[full] = 0
+        self.ntf_target[full] = 0
+        self.elw_wait[full] = 0
+        self.cfg_n[full] = 1
+        bank_off = slot * self.slot_banks
+        self._rr[bank_off:bank_off + self.slot_banks] = 0
+
+        m = _FleetMember(slot, cfg, off)
+        n = cl.n_cores
+        self.cfg_n[m.sl] = n
+        self._attach_member(m, cfg, bank_off)
+        V.state[m.sl] = _ACTIVE  # lanes join the flattened passes now
+        self.members[slot] = m
+        for i in range(n):
+            self._cl_list[off + i] = cl
+            self._core_list[off + i] = cl.cores[i]
+        return slot
+
+    # ------------------------------------------------------------------ free
+    def free(self, slot: int) -> None:
+        """Recycle a finished (or failed) member's slot.
+
+        The member's stats were materialized when :meth:`advance` returned
+        it; after this call its lanes are ``DONE`` and the slot is back on
+        the free list."""
+        m = self.members[slot]
+        if m is None:
+            raise ValueError(f"SlotFleet.free: slot {slot} is already free")
+        if not m.done:
+            raise ValueError(f"SlotFleet.free: slot {slot} is still running")
+        off = slot * self.slot_cores
+        full = slice(off, off + self.slot_cores)
+        V = self._vec
+        # back to the neutral lane state (a timed-out member can leave
+        # SLEEP/STALL lanes and latched elw waits behind)
+        V.state[full] = _DONE
+        V.has_poll[full] = False
+        V.elw[full] = False
+        self.ev_buf[full] = 0
+        self.elw_wait[full] = 0
+        self.cfg_n[full] = 1
+        for i in range(off, off + self.slot_cores):
+            self._cl_list[i] = None
+            self._core_list[i] = None
+        self.members[slot] = None
+        bisect.insort(self._free, slot)
+
+    # --------------------------------------------------------------- advance
+    def advance(self) -> List[_FleetMember]:
+        """One scheduling round over every occupied slot.
+
+        Returns the members that completed this round (``error`` set on the
+        ones that hit their ``max_cycles`` cap), with ``ClusterStats``
+        materialized -- the caller reads ``member.cluster.stats`` and then
+        :meth:`free`\\ s the slot.  A fleet with no live member returns
+        ``[]`` without touching the arrays."""
+        live = [m for m in self.members if m is not None and not m.done]
+        if not live:
+            return []
+        finished = self._round(live)
+        for m in finished:
+            cl = m.cluster
+            cl.stats.cycles = cl.cycle
+            cl.stats.cores = [c.stats for c in cl.cores]
+        return finished
+
+    def _on_timeout(self, m: _FleetMember) -> None:
+        # capture exactly the message Cluster.run would have raised, but
+        # contain the failure to this member
+        try:
+            m.cluster._raise_timeout(m.max_cycles)
+        except RuntimeError as e:
+            m.error = str(e)
 
 
 def simulate_fleet(configs: List[FleetConfig]) -> List[ClusterStats]:

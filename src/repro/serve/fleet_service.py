@@ -1,0 +1,234 @@
+"""Continuous-batching sweep service over the slot-recycling fleet engine.
+
+The serving analogue of :class:`repro.serve.batching.ContinuousBatcher`, one
+level up: instead of token sequences in decode slots, the unit of work is a
+whole cluster configuration (a :class:`~repro.core.scu.engine.FleetConfig`)
+and the step is one scheduling round of a
+:class:`~repro.core.scu.engine.SlotFleet` -- the batched array program over
+every occupied slot.  Finished jobs free their lanes and queued jobs are
+admitted at the next round, so the fleet stays warm across a stream of
+heterogeneous sweep jobs instead of draining to idle between fixed batches.
+
+Time axis and latency
+---------------------
+All latency accounting is in **scheduler rounds** (calls to :meth:`step`),
+the machine-independent clock shared with :mod:`repro.serve.arrivals`.  A
+job's latency spans submit to finish inclusive; its queue wait is the
+submit-to-admission span.  Wall-clock enters only in the benchmark layer,
+as same-run throughput ratios.
+
+Backpressure (documented choice: **reject**)
+--------------------------------------------
+The queue is bounded; :meth:`submit` on a full queue raises
+:class:`QueueFull` deterministically -- the caller decides whether to
+retry, drop, or throttle (``try_submit`` is the non-raising variant).
+Rejecting keeps the service loop non-blocking and the behaviour identical
+on every machine, which blocking-with-timeout would not.
+
+Correctness
+-----------
+Admission timing is invisible to co-resident jobs (see
+:class:`~repro.core.scu.engine.SlotFleet`): every job's ``ClusterStats`` is
+bit-exact against a sequential ``Cluster.run()`` of the same config, no
+matter when it was admitted or what shared a step with it.  A job that
+hits its ``max_cycles`` cap fails alone -- same message ``Cluster.run``
+would raise, carried on ``SweepJob.error`` -- and its lanes are recycled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core.scu.engine import ClusterStats, FleetConfig, SlotFleet
+
+__all__ = ["SweepJob", "QueueFull", "FleetService"]
+
+
+class QueueFull(RuntimeError):
+    """Raised by :meth:`FleetService.submit` when the bounded queue is full."""
+
+
+@dataclasses.dataclass
+class SweepJob:
+    """One sweep job's lifecycle record (filled in by the service).
+
+    ``stats`` is a materialized snapshot -- safe to read after the job's
+    slot has been recycled.  ``error`` is ``None`` on success, otherwise
+    the timeout message the sequential engine would have raised.
+    """
+
+    job_id: int
+    config: FleetConfig
+    submitted_round: int
+    admitted_round: Optional[int] = None
+    finished_round: Optional[int] = None
+    slot: Optional[int] = None
+    stats: Optional[ClusterStats] = None
+    error: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_round is not None
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+    @property
+    def queue_rounds(self) -> Optional[int]:
+        """Rounds spent waiting for a slot (0 = admitted immediately)."""
+        if self.admitted_round is None:
+            return None
+        return self.admitted_round - self.submitted_round
+
+    @property
+    def latency_rounds(self) -> Optional[int]:
+        """Submit-to-finish span, inclusive of the finishing round."""
+        if self.finished_round is None:
+            return None
+        return self.finished_round - self.submitted_round + 1
+
+
+class FleetService:
+    """Bounded-queue sweep service over a warm :class:`SlotFleet`.
+
+    Parameters
+    ----------
+    n_slots, slot_cores, banking_factor:
+        Fleet geometry, passed through to :class:`SlotFleet` (jobs up to
+        ``slot_cores`` cores fit; narrower jobs leave their slot's tail
+        lanes idle, which the idle-lane accounting charges honestly).
+    queue_limit:
+        Bounded-queue depth; a full queue **rejects** (:class:`QueueFull`).
+    admission:
+        ``"continuous"`` (default) -- finished jobs free lanes mid-flight
+        and queued jobs take them at the next round.  ``"drain"`` -- the
+        fixed-batch baseline: new jobs are only admitted once *every* slot
+        has drained, exactly the utilization loss continuous batching
+        removes.  Both modes run the identical engine, so measured deltas
+        are scheduling policy, not implementation.
+    """
+
+    ADMISSION_MODES = ("continuous", "drain")
+
+    def __init__(
+        self,
+        n_slots: int,
+        slot_cores: int,
+        banking_factor: int = 2,
+        queue_limit: int = 64,
+        admission: str = "continuous",
+    ):
+        if admission not in self.ADMISSION_MODES:
+            raise ValueError(
+                f"admission must be one of {self.ADMISSION_MODES}, "
+                f"got {admission!r}"
+            )
+        if queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        self.fleet = SlotFleet(n_slots, slot_cores, banking_factor)
+        self.queue_limit = queue_limit
+        self.admission = admission
+        self.round = 0  # completed step() calls == current round index
+        self.queue: Deque[SweepJob] = deque()
+        self.finished: List[SweepJob] = []
+        self._by_slot: Dict[int, SweepJob] = {}
+        self._next_id = 0
+        # lane-occupancy accounting (idle = not running a live job's core;
+        # a narrow job's tail lanes count idle -- slot-width waste is real)
+        self.lane_rounds = 0
+        self.busy_lane_rounds = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, config: FleetConfig) -> SweepJob:
+        """Enqueue a job; raises :class:`QueueFull` on a full queue and
+        ``ValueError`` on a config the fleet could never admit (so the
+        queue only ever holds admissible jobs)."""
+        self.fleet.validate(config)
+        if len(self.queue) >= self.queue_limit:
+            raise QueueFull(
+                f"queue full ({self.queue_limit} jobs waiting); "
+                "retry after a step() or raise queue_limit"
+            )
+        job = SweepJob(self._next_id, config, submitted_round=self.round)
+        self._next_id += 1
+        self.queue.append(job)
+        return job
+
+    def try_submit(self, config: FleetConfig) -> Optional[SweepJob]:
+        """Non-raising :meth:`submit`: returns ``None`` instead of raising
+        :class:`QueueFull` (invalid configs still raise ``ValueError``)."""
+        try:
+            return self.submit(config)
+        except QueueFull:
+            return None
+
+    def step(self) -> List[SweepJob]:
+        """One service round: admit from the queue, advance the fleet one
+        scheduling round, collect completions.  Returns the jobs that
+        finished this round (stats materialized, failures marked)."""
+        self._admit()
+        done: List[SweepJob] = []
+        if self.fleet.occupied:
+            for m in self.fleet.advance():
+                job = self._by_slot.pop(m.index)
+                job.finished_round = self.round
+                job.stats = m.cluster.stats
+                job.error = m.error
+                self.fleet.free(m.index)
+                self.finished.append(job)
+                done.append(job)
+        # occupancy snapshot of the round just executed (post-completion:
+        # a lane freed this round was still busy during it)
+        self.lane_rounds += self.fleet.n_slots * self.fleet.slot_cores
+        self.busy_lane_rounds += sum(
+            j.config.cluster.n_cores for j in self._by_slot.values()
+        ) + sum(j.config.cluster.n_cores for j in done)
+        self.round += 1
+        return done
+
+    def run_until_drained(self, max_rounds: int = 10_000_000) -> List[SweepJob]:
+        """Step until the queue and every slot are empty; returns all jobs
+        finished along the way.  ``max_rounds`` guards against a caller
+        submitting faster than the fleet can drain (raises RuntimeError)."""
+        out: List[SweepJob] = []
+        rounds = 0
+        while self.queue or self.fleet.occupied:
+            out.extend(self.step())
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError(
+                    f"run_until_drained: not drained after {max_rounds} rounds"
+                )
+        return out
+
+    # ------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        if self.admission == "drain" and self.fleet.occupied:
+            return  # baseline: wait for the whole fleet to empty
+        while self.queue and self.fleet.free_slots:
+            job = self.queue.popleft()
+            slot = self.fleet.admit(job.config)
+            job.slot = slot
+            job.admitted_round = self.round
+            self._by_slot[slot] = job
+
+    # --------------------------------------------------------------- metrics
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def active(self) -> int:
+        return len(self._by_slot)
+
+    @property
+    def idle_lane_fraction(self) -> float:
+        """Fraction of (lane, round) cells spent idle so far (0.0 before
+        the first round).  The drain baseline's straggler tails and slot
+        fragmentation both land here."""
+        if self.lane_rounds == 0:
+            return 0.0
+        return 1.0 - self.busy_lane_rounds / self.lane_rounds

@@ -1,0 +1,98 @@
+"""Tests for the continuous-batching decode scheduler (serve/batching.py).
+
+These pin the exemplar semantics the fleet sweep service mirrors one level
+up: FIFO admission from a queue into fixed slots, slot recycling after a
+finish, and the deadline force-finish straggler guard.
+"""
+
+import numpy as np
+
+from repro.serve.batching import ContinuousBatcher, Request
+
+
+def _step(batcher, token=7):
+    """One decode step feeding every slot the same sampled token."""
+    sampled = np.full((batcher.batch_slots,), token, np.int32)
+    return batcher.observe(sampled)
+
+
+def test_fifo_admission_order():
+    """Queued requests are admitted in submission order, exactly filling
+    the free slots; the overflow waits."""
+    b = ContinuousBatcher(batch_slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=[1, 2], max_new_tokens=4) for i in range(4)]
+    for r in reqs:
+        b.submit(r)
+    admitted = b.admit()
+    assert admitted == [0, 1]
+    assert b.slots[0].rid == 0 and b.slots[1].rid == 1
+    assert b.pending == 2 and b.active == 2
+    assert b.admit() == []  # no free slot: nothing admitted, queue intact
+    assert b.pending == 2
+
+
+def test_slot_reuse_after_finish():
+    """A finished request frees its slot; the next admit() hands that slot
+    to the oldest queued request with clean decode state."""
+    b = ContinuousBatcher(batch_slots=2, max_seq=32, pad_token=0)
+    short = Request(rid=0, prompt=[1], max_new_tokens=1)
+    long = Request(rid=1, prompt=[1], max_new_tokens=8)
+    waiting = Request(rid=2, prompt=[5, 6], max_new_tokens=2)
+    for r in (short, long, waiting):
+        b.submit(r)
+    assert b.admit() == [0, 1]
+
+    done = _step(b)
+    assert [r.rid for r in done] == [0]  # short finished, long keeps going
+    assert b.slots[0] is None
+    assert b.positions[0] == 0 and b.next_tokens[0] == 0  # state scrubbed
+
+    assert b.admit() == [0]  # freed slot recycled to the FIFO head
+    assert b.slots[0].rid == 2
+    assert b.positions[0] == len(waiting.prompt)
+    assert b.next_tokens[0] == waiting.prompt[-1]
+
+    # drain: nothing left queued, both remaining requests run to completion
+    steps = 0
+    while not b.drain_done():
+        _step(b)
+        b.admit()
+        steps += 1
+        assert steps < 64
+    assert sorted(b.finished) == [0, 1, 2]
+    assert len(long.generated) == 8
+    assert len(waiting.generated) == 2
+
+
+def test_deadline_force_finishes_straggler():
+    """A request past deadline_steps is force-finished even though it has
+    token budget left -- the serving watchdog."""
+    b = ContinuousBatcher(batch_slots=1, max_seq=64)
+    straggler = Request(
+        rid=0, prompt=[1], max_new_tokens=1000, deadline_steps=3
+    )
+    b.submit(straggler)
+    b.admit()
+    done = []
+    for _ in range(3):
+        assert done == []
+        done = _step(b)
+    assert [r.rid for r in done] == [0]
+    assert straggler.age == 3
+    assert len(straggler.generated) == 3  # far short of max_new_tokens
+    assert b.slots[0] is None  # slot freed for the next request
+
+
+def test_max_seq_caps_generation():
+    """The cache bound force-finishes a request whose position would run
+    off the end of the static shape."""
+    b = ContinuousBatcher(batch_slots=1, max_seq=4)
+    r = Request(rid=0, prompt=[1], max_new_tokens=100)
+    b.submit(r)
+    b.admit()
+    steps = 0
+    while b.active:
+        _step(b)
+        steps += 1
+        assert steps < 10
+    assert steps == 2  # positions 1 -> 3 == max_seq - 1

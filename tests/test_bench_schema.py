@@ -47,7 +47,7 @@ def test_schema_requires_every_section(baseline):
     for key in (
         "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
         "chain", "chain_scaling", "work_queue", "work_queue_scaling",
-        "engine_perf", "jax_barriers_ok",
+        "engine_perf", "traffic", "jax_barriers_ok",
     ):
         broken = {k: v for k, v in baseline.items() if k != key}
         errors = bench_compare.validate_schema(broken)
@@ -78,6 +78,46 @@ def test_schema_catches_type_drift(baseline):
     broken = copy.deepcopy(baseline)
     del broken["engine_perf"]["fleet"]
     assert any("fleet" in e for e in bench_compare.validate_schema(broken))
+
+
+def test_schema_catches_traffic_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    del broken["traffic"]["scenarios"]["bursty"]["continuous"]["p99_latency_rounds"]
+    assert any(
+        "p99_latency_rounds" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    policy = next(iter(broken["traffic"]["energy_tail"]))
+    del broken["traffic"]["energy_tail"][policy]["p99_spin_pj"]
+    assert any(
+        "p99_spin_pj" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    del broken["traffic"]["speedup"]
+    assert any("speedup" in e for e in bench_compare.validate_schema(broken))
+
+
+def test_traffic_baseline_shows_continuous_batching_win(baseline):
+    """The committed baseline must carry the measured win: under bursty
+    arrivals, continuous admission beats the drain baseline on p99 latency
+    and idle-lane fraction (both deterministic round-counted metrics)."""
+    bursty = baseline["traffic"]["scenarios"]["bursty"]
+    cont, drain = bursty["continuous"], bursty["drain"]
+    assert cont["p99_latency_rounds"] < drain["p99_latency_rounds"]
+    assert cont["idle_lane_fraction"] < drain["idle_lane_fraction"]
+    assert cont["rounds"] <= drain["rounds"]
+
+
+def test_traffic_latency_metrics_are_hard_gated(baseline):
+    """Round-counted traffic metrics gate like cycle counts: a doctored
+    p99 regression must trip the hard comparison."""
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["traffic"]["scenarios"]["bursty"]["continuous"]
+    cell["p99_latency_rounds"] = cell["p99_latency_rounds"] * 1.10
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("p99_latency_rounds" in r for r in regressions)
 
 
 def test_schema_catches_chain_row_drift(baseline):
@@ -181,11 +221,13 @@ def test_throughput_soft_gate(baseline):
         perf["contended"]["speedup"] *= f
         perf["fleet"]["speedup"] *= f
         perf["fleet"]["speedup_8core"] *= f
+        doctored["traffic"]["speedup"] *= f
         return doctored
 
     fails, warns = bench_compare.compare_throughput(baseline, scaled(0.4))
     assert fails, "a 0.4x throughput collapse must fail the soft gate"
     assert any("fleet" in f for f in fails), "fleet speedup must be gated"
+    assert any("traffic" in f for f in fails), "traffic speedup must be gated"
     fails, warns = bench_compare.compare_throughput(baseline, scaled(0.8))
     assert not fails and warns, "a 0.8x dip must warn, not fail"
     fails, warns = bench_compare.compare_throughput(baseline, scaled(1.3))

@@ -1,0 +1,415 @@
+"""Tests for the continuous-batching sweep service and slot fleet engine.
+
+The load-bearing property is the tentpole guarantee: every job's
+``ClusterStats`` is **bit-exact** against a sequential ``Cluster.run()`` of
+the same config, no matter when it was admitted or what shared a batched
+step with it -- including admissions landing mid-quiescent-span of a
+co-resident slot, staggered random arrivals, slot recycling and a
+co-resident job timing out.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scu import SCU, Cluster, Compute, Scu
+from repro.core.scu.energy import DEFAULT_ENERGY, Activity
+from repro.core.scu.engine import FleetConfig, SlotFleet
+from repro.core.scu.programs import (
+    prep_barrier_bench,
+    prep_chain_bench,
+    prep_mutex_bench,
+    prep_work_queue_bench,
+)
+from repro.serve.arrivals import bursty_trace, poisson_trace
+from repro.serve.energy import job_energy
+from repro.serve.fleet_service import FleetService, QueueFull
+
+POLICIES = ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo")
+
+
+def make_cluster(n, mode="fastforward"):
+    return Cluster(n_cores=n, scu=SCU(n_cores=n), mode=mode)
+
+
+def _random_stream_benches(seed):
+    """A mixed job stream: policies x 8/16/64 cores x several shapes and
+    iteration counts, deterministic in ``seed`` (same recipe as the static
+    fleet parity suite, sized for a serving stream)."""
+    rng = random.Random(seed)
+    benches = []
+    for _ in range(rng.randint(6, 10)):
+        policy = rng.choice(POLICIES)
+        n = rng.choice((8, 8, 8, 16, 64))
+        shape = rng.choice(("barrier", "mutex", "chain", "wq")) if n <= 16 \
+            else "barrier"
+        iters = rng.randint(2, 8)
+        if shape == "barrier":
+            benches.append(prep_barrier_bench(
+                policy, n, sfr=rng.choice((0, 13, 100, 900)), iters=iters
+            ))
+        elif shape == "mutex":
+            benches.append(prep_mutex_bench(
+                policy, n, t_crit=rng.randint(0, 12),
+                sfr=rng.choice((0, 37)), iters=iters,
+            ))
+        elif shape == "chain":
+            benches.append(prep_chain_bench(
+                policy, n, sfr=rng.choice((20, 150)), iters=iters,
+                depth=rng.choice((1, 4, 8)),
+            ))
+        else:
+            benches.append(prep_work_queue_bench(
+                policy, n // 2, n - n // 2, items=2 * n,
+                t_produce=rng.randint(1, 40), t_consume=rng.randint(1, 40),
+            ))
+    return benches
+
+
+def _serve_stream(svc, benches, arrivals, max_rounds=5_000_000):
+    """Drive a service: submit bench i when the round clock passes its
+    arrival, step until everything drains.  Returns jobs in submit order."""
+    jobs = [None] * len(benches)
+    i = 0
+    rounds = 0
+    while i < len(benches) or svc.pending or svc.fleet.occupied:
+        while i < len(benches) and arrivals[i] <= svc.round:
+            jobs[i] = svc.submit(benches[i].config)
+            i += 1
+        svc.step()
+        rounds += 1
+        assert rounds < max_rounds, "service failed to drain"
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: bit-exact parity under streamed admission
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_streamed_jobs_match_sequential_bit_exact(seed):
+    """Randomized mixed-config stream with staggered Poisson arrivals:
+    every job's ClusterStats must be identical to a sequential run of the
+    same config -- the service's core contract."""
+    seq = [b.run_sequential() for b in _random_stream_benches(seed)]
+    benches = _random_stream_benches(seed)
+    arrivals = poisson_trace(rate=0.005, n_jobs=len(benches), seed=seed)
+    svc = FleetService(n_slots=3, slot_cores=64, queue_limit=64)
+    jobs = _serve_stream(svc, benches, arrivals)
+    for job, b, ref in zip(jobs, benches, seq):
+        assert job.error is None
+        assert b.finalize(job.stats) == ref, (
+            f"stream diverged (seed={seed}): {ref.variant}/{ref.primitive}"
+            f"@{ref.n_cores}"
+        )
+        assert job.latency_rounds >= 1
+        assert job.queue_rounds >= 0
+
+
+def test_admission_mid_quiescent_span_of_co_resident_slot():
+    """Adversarial timing: slot 0 runs an all-cores-asleep long compute
+    span; a FIFO churner is admitted while that span is in flight (and
+    vice versa, a sleeper admitted mid-churn).  Both must stay bit-exact,
+    and the sleeper's span must still be covered by fast-forward jumps."""
+
+    def sleeper_cfg(span=50_000):
+        from repro.core.scu.primitives import scu_barrier
+
+        cl = make_cluster(8)
+
+        def prog(cluster, cid):
+            yield Compute(span)
+            yield from scu_barrier(cluster, cid)
+
+        return FleetConfig(cluster=cl, programs=[prog] * 8)
+
+    def churner_cfg(items=200):
+        cl = make_cluster(8)
+
+        def producer(cluster, cid):
+            for v in range(items):
+                yield Compute(3)
+                yield Scu("elw", ("fifo", 1, "push_wait"), v % 256)
+
+        def consumer(cluster, cid):
+            for _ in range(items):
+                yield Scu("elw", ("fifo", 1, "pop"))
+
+        def idle(cluster, cid):
+            yield Compute(1)
+
+        return FleetConfig(cluster=cl, programs=[producer, consumer] + [idle] * 6)
+
+    ref = []
+    for mk in (sleeper_cfg, churner_cfg):
+        cfg = mk()
+        cfg.cluster.load(cfg.programs)
+        ref.append(cfg.cluster.run())
+
+    for first, second, ref_first, ref_second in (
+        (sleeper_cfg, churner_cfg, ref[0], ref[1]),
+        (churner_cfg, sleeper_cfg, ref[1], ref[0]),
+    ):
+        fleet = SlotFleet(n_slots=2, slot_cores=8)
+        cfg_a = first()
+        slot_a = fleet.admit(cfg_a)
+        # one round: A's generators advance and latch their countdowns --
+        # the admission below lands mid-quiescent-span, before A's jump
+        assert not fleet.advance()
+        cfg_b = second()
+        slot_b = fleet.admit(cfg_b)
+        done = {}
+        rounds = 0
+        while fleet.occupied:
+            for m in fleet.advance():
+                done[m.index] = m.cluster.stats
+                fleet.free(m.index)
+            rounds += 1
+            assert rounds < 10**6
+        assert done[slot_a] == ref_first
+        assert done[slot_b] == ref_second
+        if first is sleeper_cfg:
+            assert cfg_a.cluster.ff_cycles > 0.9 * ref_first.cycles, (
+                "sleeper degraded to stepping while sharing the fleet"
+            )
+
+
+def test_slot_recycling_preserves_parity():
+    """A slot that hosted a dirty job (FIFO traffic, latched elw waits)
+    must be indistinguishable from a fresh one for its next occupant."""
+    ref = prep_barrier_bench("scu", 8, sfr=10, iters=3).run_sequential()
+
+    fleet = SlotFleet(n_slots=1, slot_cores=16)
+    results = []
+    for policy in ("tas", "scu", "fifo", "scu"):
+        b = prep_barrier_bench(policy, 8, sfr=10, iters=3)
+        slot = fleet.admit(b.config)
+        assert slot == 0  # single slot, recycled every time
+        rounds = 0
+        while fleet.occupied:
+            for m in fleet.advance():
+                results.append((policy, b.finalize(m.cluster.stats)))
+                fleet.free(m.index)
+            rounds += 1
+            assert rounds < 10**6
+    for policy, res in results:
+        if policy == "scu":
+            assert res == ref, "recycled slot diverged from fresh run"
+
+
+def test_timeout_contained_to_one_slot():
+    """A deadlocked job must burn to its cap and fail alone -- with the
+    exact message the sequential engine raises -- while a co-resident job
+    finishes untouched; the failed slot must be recyclable."""
+    def sleeper(cluster, cid):
+        yield Scu("elw", ("notifier", 5, "wait"))
+
+    def finisher(cluster, cid):
+        yield Compute(3)
+
+    dead = FleetConfig(
+        cluster=make_cluster(2), programs=[sleeper, finisher], max_cycles=4096
+    )
+    # sequential reference failure
+    seq = make_cluster(2)
+    seq.load([sleeper, finisher])
+    with pytest.raises(RuntimeError, match="did not finish") as exc:
+        seq.run(max_cycles=4096)
+
+    ok_bench = prep_barrier_bench("scu", 8, sfr=10, iters=3)
+    ok_ref = prep_barrier_bench("scu", 8, sfr=10, iters=3).run_sequential()
+
+    svc = FleetService(n_slots=2, slot_cores=8)
+    j_dead = svc.submit(dead)
+    j_ok = svc.submit(ok_bench.config)
+    svc.run_until_drained()
+    assert j_ok.error is None
+    assert ok_bench.finalize(j_ok.stats) == ok_ref
+    assert j_dead.failed
+    assert j_dead.error == str(exc.value)
+    assert "SLEEP" in j_dead.error  # deadlock state captured at the cap
+    assert dead.cluster.cycle == 4096
+    # the poisoned slot must serve the next job cleanly
+    b2 = prep_barrier_bench("scu", 8, sfr=10, iters=3)
+    j2 = svc.submit(b2.config)
+    svc.run_until_drained()
+    assert j2.error is None
+    assert b2.finalize(j2.stats) == ok_ref
+
+
+# ---------------------------------------------------------------------------
+# Scheduling semantics: FIFO, backpressure, drain baseline, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_jobs_admitted_fifo():
+    """With one slot, jobs must be admitted -- and therefore finish -- in
+    submission order, whatever their relative lengths."""
+    svc = FleetService(n_slots=1, slot_cores=8, queue_limit=16)
+    jobs = [
+        svc.submit(prep_barrier_bench(p, 8, sfr=s, iters=i).config)
+        for p, s, i in (("sw", 400, 6), ("scu", 0, 2), ("tas", 10, 3))
+    ]
+    done = svc.run_until_drained()
+    assert [j.job_id for j in done] == [j.job_id for j in jobs]
+    admits = [j.admitted_round for j in jobs]
+    assert admits == sorted(admits)
+    assert all(
+        a.finished_round < b.admitted_round for a, b in zip(jobs, jobs[1:])
+    ), "one slot: next job admits only after the previous finished"
+
+
+def test_backpressure_rejects_deterministically():
+    """A full queue must reject with QueueFull (the documented choice) and
+    accept again after a slot drains the backlog."""
+    svc = FleetService(n_slots=1, slot_cores=8, queue_limit=2)
+
+    def mk():
+        return prep_barrier_bench("scu", 8, sfr=0, iters=2).config
+
+    svc.submit(mk())
+    svc.submit(mk())
+    with pytest.raises(QueueFull, match="queue full"):
+        svc.submit(mk())
+    assert svc.try_submit(mk()) is None  # non-raising twin, same decision
+    assert svc.pending == 2
+    svc.run_until_drained()
+    assert svc.try_submit(mk()) is not None  # capacity is back
+
+
+def test_submit_validates_configs_upfront():
+    """Inadmissible configs never enter the queue: too-wide jobs, wrong
+    engine mode and already-used clusters are rejected at submit()."""
+    svc = FleetService(n_slots=2, slot_cores=8)
+
+    with pytest.raises(ValueError, match="slot width"):
+        svc.submit(prep_barrier_bench("scu", 16, sfr=0, iters=2).config)
+
+    def prog(cluster, cid):
+        yield Compute(1)
+
+    with pytest.raises(ValueError, match="fastforward"):
+        svc.submit(FleetConfig(
+            cluster=make_cluster(2, mode="lockstep"), programs=[prog] * 2
+        ))
+    used = make_cluster(2)
+    used.load([prog] * 2)
+    used.run()
+    with pytest.raises(ValueError, match="fresh"):
+        svc.submit(FleetConfig(cluster=used, programs=[prog] * 2))
+    assert svc.pending == 0
+
+
+def test_continuous_beats_drain_on_stream():
+    """Same stream, same fleet geometry: continuous admission must finish
+    no later and waste fewer lane-rounds than the drain baseline -- the
+    utilization argument the service exists for."""
+    def build():
+        return [
+            prep_barrier_bench(p, n, sfr=s, iters=i)
+            for p, n, s, i in (
+                ("sw", 8, 400, 8), ("scu", 8, 0, 2), ("tas", 8, 10, 3),
+                ("scu", 16, 0, 2), ("fifo", 8, 10, 4), ("scu", 8, 900, 2),
+            )
+        ]
+
+    totals = {}
+    for mode in ("continuous", "drain"):
+        svc = FleetService(
+            n_slots=2, slot_cores=16, admission=mode, queue_limit=16
+        )
+        for b in build():
+            svc.submit(b.config)
+        svc.run_until_drained()
+        totals[mode] = (svc.round, svc.idle_lane_fraction)
+    assert totals["continuous"][0] <= totals["drain"][0]
+    assert totals["continuous"][1] < totals["drain"][1]
+
+
+def test_latency_accounting_spans_queue_and_service():
+    """latency = queue wait + service rounds (inclusive); the second job on
+    a single-slot fleet must carry the first job's service time as queue
+    rounds."""
+    svc = FleetService(n_slots=1, slot_cores=8)
+    a = svc.submit(prep_barrier_bench("scu", 8, sfr=100, iters=4).config)
+    b = svc.submit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+    svc.run_until_drained()
+    assert a.queue_rounds == 0 and a.admitted_round == 0
+    assert b.queue_rounds == a.finished_round + 1 - b.submitted_round
+    for j in (a, b):
+        assert j.latency_rounds == j.finished_round - j.submitted_round + 1
+
+
+def test_slot_fleet_rejects_misuse():
+    fleet = SlotFleet(n_slots=1, slot_cores=8)
+    with pytest.raises(ValueError, match="at least one slot"):
+        SlotFleet(n_slots=0, slot_cores=8)
+    with pytest.raises(ValueError, match="already free"):
+        fleet.free(0)
+    b = prep_barrier_bench("scu", 8, sfr=0, iters=2)
+    fleet.admit(b.config)
+    with pytest.raises(ValueError, match="still running"):
+        fleet.free(0)
+    with pytest.raises(RuntimeError, match="no free slot"):
+        fleet.admit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_traces_deterministic_and_well_formed():
+    for trace in (
+        poisson_trace(0.05, 40, seed=7),
+        bursty_trace(4, 10, gap_rounds=500, seed=7, jitter=20),
+    ):
+        assert len(trace) == 40
+        assert all(isinstance(t, int) for t in trace)
+        assert trace == sorted(trace), "arrivals must be non-decreasing"
+        assert trace[0] >= 0
+    assert poisson_trace(0.05, 40, seed=7) == poisson_trace(0.05, 40, seed=7)
+    assert poisson_trace(0.05, 40, seed=8) != poisson_trace(0.05, 40, seed=7)
+    assert bursty_trace(4, 10, 500, seed=7, jitter=20) == \
+        bursty_trace(4, 10, 500, seed=7, jitter=20)
+    # a zero-jitter burst is a same-round batch at each gap multiple
+    assert bursty_trace(3, 2, 100, seed=0) == [0, 0, 100, 100, 200, 200]
+    with pytest.raises(ValueError, match="rate"):
+        poisson_trace(0.0, 4, seed=0)
+    with pytest.raises(ValueError, match="gap_rounds"):
+        bursty_trace(2, 2, -1, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Per-job energy split
+# ---------------------------------------------------------------------------
+
+
+def test_job_energy_components_sum_exactly():
+    """The idle/spin/compute/static split is a regrouping of the calibrated
+    model: components must sum to EnergyModel.energy_pj exactly."""
+    st_ = prep_barrier_bench("tas", 8, sfr=10, iters=4).run_sequential().stats
+    e = job_energy(st_)
+    total = DEFAULT_ENERGY.energy_pj(Activity.from_stats(st_))
+    assert e.total_pj == pytest.approx(total, abs=1e-9)
+    assert e.wait_pj == pytest.approx(e.idle_pj + e.spin_pj, abs=1e-9)
+
+
+def test_job_energy_separates_disciplines():
+    """The whole point of the split: SCU mutex losers sleep clock-gated
+    (idle energy), TAS losers hammer the TCDM (spin energy)."""
+    scu_st = prep_mutex_bench(
+        "scu", 8, t_crit=12, iters=8
+    ).run_sequential().stats
+    tas_st = prep_mutex_bench(
+        "tas", 8, t_crit=12, iters=8
+    ).run_sequential().stats
+    e_scu = job_energy(scu_st)
+    e_tas = job_energy(tas_st)
+    assert e_scu.idle_pj > 0
+    assert e_tas.spin_pj > e_scu.spin_pj
+    assert e_scu.idle_pj > e_tas.idle_pj
