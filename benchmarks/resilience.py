@@ -1,0 +1,225 @@
+"""Resilience benchmark: fault-rate x recovery-mode sweep on the sweep service.
+
+A fixed, deterministic stream of 8-core SCU barrier jobs is served by the
+slot-recycling fleet (``repro.serve.fleet_service``) while a seeded
+:class:`repro.core.scu.faults.FaultPlan` injects lost barrier wake-ups into
+a fraction of the jobs (the *fault rate*).  A lost barrier wake deadlocks
+its cluster -- the victim sleeps forever on an event the SCU already
+consumed -- so an unprotected job burns its whole cycle budget and times
+out.  Four recovery modes run the identical stream:
+
+* ``none``      -- legacy fail-fast: first timeout is terminal;
+* ``retry``     -- :class:`RetryPolicy` re-runs failed jobs with exponential
+  backoff; the fault is transient (attempt 1 only), so every retry lands;
+* ``degrade``   -- the fault is *persistent* (every scu attempt loses the
+  wake), so retrying the same config cannot help; after ``degrade_after``
+  failures the service rebuilds the job on the fallback ``sw`` policy;
+* ``watchdog``  -- no retries: a release-mode :class:`Watchdog` on the SCU
+  force-wakes stuck sleepers in-run, completing every job first attempt.
+
+Reported per (fault-rate, mode) cell: failure rate, recovery latency
+(mean scheduler rounds submit-to-terminal), wasted cycles (cycle budget
+burnt by failed attempts), total attempts, degraded jobs and watchdog
+releases.  Everything is counted in cycles or scheduler rounds of a seeded
+deterministic simulation, so the numbers are bit-exact across machines and
+hard-gated by ``scripts/bench_compare.py``; the artifact is identical under
+``--fast`` and full runs.
+
+    PYTHONPATH=src python -m benchmarks.resilience [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from typing import Dict, List, Optional
+
+from repro.core.scu.faults import FaultEvent, FaultPlan, Watchdog
+from repro.core.scu.programs import prep_barrier_bench
+from repro.serve.fleet_service import FleetService, RetryPolicy
+
+# fixed stream geometry: 12 eight-core barrier jobs on a 4x8-lane fleet --
+# small enough that the benchmark is cheap, wide enough that failed jobs
+# and their retries genuinely compete for slots
+N_JOBS = 12
+N_SLOTS = 4
+SLOT_CORES = 8
+ITERS = 6
+SFR = 60
+# cycle budget per attempt: a deadlocked job burns exactly this many cycles
+# before timing out, which makes "wasted cycles" a crisp, countable cost
+MAX_CYCLES = 4000
+
+# the barrier event line (EV.BARRIER); losing it on one core deadlocks the
+# whole barrier -- everyone else arrives and sleeps waiting for round N+1
+_BARRIER_LINE_MASK = 1 << 8
+
+FAULT_RATES = (0.0, 0.5)
+MODES = ("none", "retry", "degrade", "watchdog")
+
+_SEED = 0xFA017
+
+
+def _victims(rate: float) -> List[Optional[int]]:
+    """Deterministic per-job victim core (None = job runs clean)."""
+    rng = random.Random(_SEED)
+    out: List[Optional[int]] = []
+    for _ in range(N_JOBS):
+        hit = rng.random() < rate
+        core = rng.randrange(SLOT_CORES)  # always drawn: rates share victims
+        out.append(core if hit else None)
+    return out
+
+
+def _fault_plan(victim: int) -> FaultPlan:
+    """Lose the barrier wake on ``victim`` early in the run (plans are
+    single-use, so build a fresh one per attempt)."""
+    return FaultPlan([
+        FaultEvent("lost_wake", cycle=10, core=victim, lines=_BARRIER_LINE_MASK)
+    ])
+
+
+def _config(policy: str, victim: Optional[int], watchdog: bool,
+            sink: Optional[List[Watchdog]] = None):
+    fb = prep_barrier_bench(policy, SLOT_CORES, sfr=SFR, iters=ITERS)
+    fb.config.max_cycles = MAX_CYCLES
+    cl = fb.config.cluster
+    if victim is not None:
+        cl.faults = _fault_plan(victim)
+    if watchdog and cl.scu is not None:
+        wd = Watchdog(timeout=400, mode="release")
+        cl.scu.watchdog = wd
+        if sink is not None:
+            sink.append(wd)
+    return fb.config
+
+
+def _run_cell(rate: float, mode: str) -> Dict:
+    victims = _victims(rate)
+    watchdogs: List[Watchdog] = []
+
+    retry = None
+    if mode == "retry":
+        retry = RetryPolicy(max_attempts=3, backoff_rounds=1, backoff_factor=2)
+    elif mode == "degrade":
+        retry = RetryPolicy(max_attempts=3, backoff_rounds=1, degrade_after=1)
+
+    svc = FleetService(
+        n_slots=N_SLOTS, slot_cores=SLOT_CORES,
+        queue_limit=N_JOBS, retry=retry,
+    )
+
+    jobs = []
+    for victim in victims:
+        if mode == "retry":
+            # transient fault: only the first attempt loses the wake
+            def factory(attempt, v=victim):
+                return _config("scu", v if attempt == 1 else None, False)
+            jobs.append(svc.submit(factory=factory))
+        elif mode == "degrade":
+            # persistent fault: every scu attempt loses the wake; the
+            # fallback rebuilds on the software policy (no SCU sleep to lose)
+            def factory(attempt, v=victim):
+                return _config("scu", v, False)
+
+            def fallback(attempt):
+                return _config("sw", None, False)
+            jobs.append(svc.submit(factory=factory, fallback_factory=fallback))
+        elif mode == "watchdog":
+            def factory(attempt, v=victim):
+                return _config("scu", v, True, sink=watchdogs)
+            jobs.append(svc.submit(factory=factory))
+        else:  # none
+            def factory(attempt, v=victim):
+                return _config("scu", v, False)
+            jobs.append(svc.submit(factory=factory))
+
+    svc.run_until_drained()
+
+    failed = [j for j in jobs if j.state == "failed"]
+    done = [j for j in jobs if j.state == "done"]
+    assert len(failed) + len(done) == N_JOBS
+    lat = [j.latency_rounds for j in jobs]
+    return {
+        "failure_rate": len(failed) / N_JOBS,
+        "failed_jobs": len(failed),
+        "completed_jobs": len(done),
+        "total_attempts": sum(j.attempts for j in jobs),
+        "degraded_jobs": sum(1 for j in jobs if j.degraded),
+        "wasted_cycles": sum(j.wasted_cycles for j in jobs),
+        "rounds": svc.round,
+        "mean_latency_rounds": sum(lat) / N_JOBS,
+        "watchdog_releases": sum(w.release_count for w in watchdogs),
+        "mean_completed_cycles": (
+            sum(j.stats.cycles for j in done) / len(done) if done else 0.0
+        ),
+    }
+
+
+def run(verbose: bool = True) -> Dict:
+    cells: Dict[str, Dict[str, Dict]] = {}
+    for rate in FAULT_RATES:
+        key = f"rate{rate:g}"
+        cells[key] = {mode: _run_cell(rate, mode) for mode in MODES}
+
+    # the headline claim, asserted (not just reported): at a fault rate
+    # where fail-fast loses jobs, every recovery mode completes the stream
+    faulty = cells[f"rate{FAULT_RATES[-1]:g}"]
+    assert faulty["none"]["failed_jobs"] > 0, "fault rate too low to matter"
+    for mode in ("retry", "degrade", "watchdog"):
+        assert faulty[mode]["failure_rate"] == 0.0, (
+            f"{mode} mode lost jobs: {faulty[mode]}"
+        )
+    # and clean traffic is untouched by the recovery machinery
+    clean = cells[f"rate{FAULT_RATES[0]:g}"]
+    assert all(c["failure_rate"] == 0.0 for c in clean.values())
+    assert clean["none"]["total_attempts"] == N_JOBS
+
+    result = {
+        "fleet": {"n_slots": N_SLOTS, "slot_cores": SLOT_CORES},
+        "n_jobs": N_JOBS,
+        "max_cycles": MAX_CYCLES,
+        "fault_rates": list(FAULT_RATES),
+        "cells": cells,
+    }
+
+    if verbose:
+        print(f"\n== Resilience sweep ({N_JOBS} jobs, "
+              f"{N_SLOTS}x{SLOT_CORES}-lane fleet, lost barrier wake-ups) ==")
+        print(f"{'rate':>5s} {'mode':9s} {'fail%':>6s} {'attempts':>8s} "
+              f"{'wasted cyc':>10s} {'rounds':>7s} {'mean lat':>8s} "
+              f"{'degr':>4s} {'wd rel':>6s}")
+        for rate in FAULT_RATES:
+            for mode in MODES:
+                c = cells[f"rate{rate:g}"][mode]
+                print(
+                    f"{rate:5.2f} {mode:9s} {c['failure_rate']:6.0%} "
+                    f"{c['total_attempts']:8d} {c['wasted_cycles']:10d} "
+                    f"{c['rounds']:7d} {c['mean_latency_rounds']:8.1f} "
+                    f"{c['degraded_jobs']:4d} {c['watchdog_releases']:6d}"
+                )
+        f = faulty
+        print(
+            f"\nat {FAULT_RATES[-1]:.0%} fault rate: fail-fast loses "
+            f"{f['none']['failed_jobs']}/{N_JOBS} jobs; retry/degrade/watchdog "
+            f"complete 12/12 (wasted cycles {f['none']['wasted_cycles']} -> "
+            f"{f['retry']['wasted_cycles']} / {f['degrade']['wasted_cycles']} / "
+            f"{f['watchdog']['wasted_cycles']})"
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", help="write results as JSON")
+    args = ap.parse_args()
+    result = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,11 @@ Order: Tier-1 paper reproduction (Table 1, Fig. 5, Table 2), the pipelined
 producer-consumer chain and multi-producer work-queue microbenchmarks (SCU
 event FIFO), the scaling sweeps (16/32/64/128/256-core clusters; --fast
 samples 16/64/128/256), the engine-throughput benchmark (quiescent,
-contended and fleet-dispatch sweeps) and the sweep-service traffic
+contended and fleet-dispatch sweeps), the sweep-service traffic
 benchmark (continuous batching vs drain baseline on the slot-recycling
-fleet), then the Tier-2 roofline read-out
+fleet) and the resilience sweep (deterministic fault injection x recovery
+mode: retry, degradation, watchdog release), then the Tier-2 roofline
+read-out
 from the dry-run artifacts.  The Table-1/Fig-5/chain/work-queue sweeps and
 their scaling variants dispatch through the batched fleet engine
 (``repro.core.scu.engine.simulate_fleet``); per-config numbers are
@@ -100,6 +102,7 @@ SECTIONS = (
     "scaling",
     "engine_perf",
     "traffic",
+    "resilience",
     "jax_barriers",
     "roofline",
 )
@@ -138,6 +141,7 @@ def main() -> int:
         chain_pipeline,
         engine_perf,
         fig5_overhead,
+        resilience,
         roofline,
         table1_primitives,
         table2_apps,
@@ -237,6 +241,14 @@ def main() -> int:
         # one fixed size under --fast and full: the round-count metrics are
         # deterministic and hard-gated, so the artifact must not vary
         results["traffic"] = traffic.run()
+
+    if want("resilience"):
+        print("\n" + "#" * 72)
+        print("# Resilience -- fault injection x recovery mode on the sweep service")
+        print("#" * 72)
+        # fixed size under --fast and full: every metric is cycle- or
+        # round-counted on a seeded deterministic run and hard-gated
+        results["resilience"] = resilience.run()
 
     if want("jax_barriers"):
         print("\n" + "#" * 72)

@@ -7,9 +7,10 @@ against the committed golden baseline.
 The simulator is cycle-exact and fully deterministic (seeded RNG, no
 wall-clock inputs), so the key numbers -- Table-1 primitive cycles, Fig-5
 minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain and
-work-queue cost, their 16..256-core scaling rows, and the sweep-service
+work-queue cost, their 16..256-core scaling rows, the sweep-service
 traffic latency/idle/energy-tail metrics (counted in deterministic
-scheduler rounds) -- must reproduce
+scheduler rounds), and the resilience sweep's failure/recovery metrics
+(seeded fault injection, cycle- and round-counted) -- must reproduce
 bit-for-bit on any machine (the sweeps dispatch through the batched fleet
 engine, which is bit-exact per config against sequential runs).  A current value more than ``threshold`` above the baseline fails
 the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
@@ -99,6 +100,15 @@ def extract_metrics(results: Dict) -> Metrics:
     for policy, tail in traffic.get("energy_tail", {}).items():
         for k in ("p99_spin_pj", "p99_idle_pj"):
             m[f"traffic/energy/{policy}/{k}"] = _num(tail.get(k))
+    # resilience sweep: every gated key is lower-is-better (failure_rate,
+    # not completion_rate -- the gate only flags increases) and counted in
+    # cycles or scheduler rounds of a seeded deterministic run
+    for rate, modes in results.get("resilience", {}).get("cells", {}).items():
+        for mode, c in modes.items():
+            for k in ("failure_rate", "total_attempts", "wasted_cycles",
+                      "rounds", "mean_latency_rounds", "degraded_jobs",
+                      "watchdog_releases"):
+                m[f"resilience/{rate}/{mode}/{k}"] = _num(c.get(k))
     return m
 
 
@@ -178,9 +188,10 @@ def compare(
             regressions.append(f"{key}: {base:.2f} -> inf")
             continue
         if cur > base * (1.0 + threshold) + 1e-12:
-            regressions.append(
-                f"{key}: {base:.2f} -> {cur:.2f} (+{cur / base - 1:.1%})"
-            )
+            # a zero baseline (e.g. resilience failure_rate 0.0) gates any
+            # increase absolutely -- there is no relative delta to print
+            delta = f"+{cur / base - 1:.1%}" if base else "baseline was 0"
+            regressions.append(f"{key}: {base:.2f} -> {cur:.2f} ({delta})")
         elif cur < base * (1.0 - threshold):
             notes.append(f"{key}: {base:.2f} -> {cur:.2f} ({cur / base - 1:.1%})")
     new = sorted(set(cur_m) - set(base_m))
@@ -345,6 +356,27 @@ def validate_schema(results: Dict) -> List[str]:
                          f"traffic.energy_tail.{policy}.{k}: expected finite number")
         need(_is_num(traffic.get("speedup")),
              "traffic.speedup: expected finite number")
+
+    res = results.get("resilience")
+    if need(isinstance(res, dict), "resilience: missing or not a dict"):
+        cells = res.get("cells")
+        if need(isinstance(cells, dict) and cells,
+                "resilience.cells: missing or empty"):
+            for rate, modes in cells.items():
+                if not need(isinstance(modes, dict) and modes,
+                            f"resilience.cells.{rate}: missing or empty"):
+                    continue
+                for mode, c in modes.items():
+                    ctx = f"resilience.cells.{rate}.{mode}"
+                    if not need(isinstance(c, dict), f"{ctx}: not a dict"):
+                        continue
+                    for k in ("failure_rate", "failed_jobs", "completed_jobs",
+                              "total_attempts", "degraded_jobs",
+                              "wasted_cycles", "rounds",
+                              "mean_latency_rounds", "watchdog_releases",
+                              "mean_completed_cycles"):
+                        need(_is_num(c.get(k)),
+                             f"{ctx}.{k}: expected finite number")
     return errors
 
 

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Randomized fault-injection parity fuzz (the non-gating CI step).
+
+Each trial draws a random workload (policy x core count x shape), a random
+:class:`FaultPlan` and optionally a watchdog, runs it under both engine
+modes and requires the identical outcome -- same stats on completion, same
+cycle and wait-for dump on a deadlock.  The in-tree ``tests/test_faults.py``
+suite pins a fixed seed set; this fuzz keeps rolling fresh seeds in CI so
+parity holes surface early without gating merges on an unbounded search.
+
+    PYTHONPATH=src python scripts/fault_fuzz.py [--trials N] [--seed S]
+
+The base seed is randomized per invocation unless ``--seed`` is given; on
+failure the exact reproduction command (seed + trial) is printed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+
+from repro.core.scu.faults import DeadlockError, FaultPlan, SimTimeout, Watchdog
+from repro.core.scu.programs import (
+    prep_barrier_bench,
+    prep_chain_bench,
+    prep_mutex_bench,
+)
+
+POLICIES = ("scu", "tas", "sw", "tree", "fifo")
+CORES = (8, 16, 64)
+MAX_CYCLES = 12_000
+
+
+def _prep(rng: random.Random, policy: str, n: int, mode: str):
+    shape = rng.randrange(3) if n <= 16 else 0
+    iters = rng.randint(2, 6)
+    if shape == 0:
+        return prep_barrier_bench(policy, n, sfr=rng.choice((0, 20, 150)),
+                                  iters=iters, mode=mode)
+    if shape == 1:
+        return prep_mutex_bench(policy, n, t_crit=rng.randint(0, 12),
+                                iters=iters, mode=mode)
+    return prep_chain_bench(policy, n, sfr=rng.choice((20, 100)),
+                            iters=iters, depth=rng.choice((1, 4)), mode=mode)
+
+
+def run_trial(trial_seed: int) -> bool:
+    """One parity trial; returns True when both engine modes agree."""
+    rng = random.Random(trial_seed)
+    policy = rng.choice(POLICIES)
+    n = rng.choice(CORES)
+    plan = FaultPlan.random(
+        trial_seed, n_cores=n, n_banks=2 * n, horizon=500,
+        n_events=rng.randint(1, 5),
+    )
+    use_watchdog = rng.random() < 0.3
+    wd_mode = rng.choice(("release", "raise"))
+    wd_timeout = rng.randint(100, 600)
+
+    outcomes = []
+    for mode in ("lockstep", "fastforward"):
+        sub = random.Random(trial_seed)  # identical workload draw per mode
+        fb = _prep(sub, policy, n, mode)
+        cl = fb.config.cluster
+        cl.faults = plan.clone()
+        if use_watchdog and cl.scu is not None:
+            cl.scu.watchdog = Watchdog(timeout=wd_timeout, mode=wd_mode)
+        cl.load(fb.config.programs)
+        try:
+            cl.run(MAX_CYCLES)
+            outcomes.append(("done", cl.stats))
+        except SimTimeout as e:
+            outcomes.append(("timeout", cl.cycle, str(e)))
+        except DeadlockError as e:
+            outcomes.append(("deadlock", e.graph.cycle, str(e)))
+    if outcomes[0] != outcomes[1]:
+        print(f"PARITY MISMATCH (trial seed {trial_seed}): "
+              f"{policy}@{n}, watchdog={use_watchdog}")
+        print(f"  lockstep:    {outcomes[0][:2]}")
+        print(f"  fastforward: {outcomes[1][:2]}")
+        return False
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trials", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base seed (default: randomized, printed for replay)")
+    args = ap.parse_args(argv)
+
+    base = args.seed if args.seed is not None else random.randrange(2**31)
+    print(f"[fault_fuzz] base seed {base}, {args.trials} trials "
+          f"(replay: scripts/fault_fuzz.py --seed {base} --trials {args.trials})")
+    failures = 0
+    for i in range(args.trials):
+        if not run_trial(base + i):
+            failures += 1
+            print(f"[fault_fuzz] reproduce just this trial: "
+                  f"scripts/fault_fuzz.py --seed {base + i} --trials 1")
+    if failures:
+        print(f"[fault_fuzz] {failures}/{args.trials} trials diverged "
+              f"(base seed {base})")
+        return 1
+    print(f"[fault_fuzz] OK: {args.trials} randomized trials bit-exact "
+          "across engine modes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

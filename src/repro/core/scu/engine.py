@@ -93,6 +93,8 @@ from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
+from .faults import DeadlockError, FaultPlan, SimTimeout, build_wait_graph
+
 __all__ = [
     "Compute",
     "Mem",
@@ -556,6 +558,14 @@ class Cluster:
         with at least :attr:`VEC_MIN_CORES` cores); ``"lockstep"`` -- the
         unvectorized cycle-by-cycle reference model.  Both produce bit-exact
         identical :class:`ClusterStats` (see module docstring).
+    faults:
+        An optional :class:`repro.core.scu.faults.FaultPlan` -- a
+        deterministic schedule of injected upsets (lost/spurious wake-ups,
+        transient core stalls, TCDM bank blackouts).  The plan implements
+        the ``next_event_bound()`` contract, so fault-injected runs stay
+        bit-exact between the two modes.  Plans are single-use; pass a
+        fresh (or :meth:`~repro.core.scu.faults.FaultPlan.clone`\\ d) plan
+        per cluster.
     """
 
     MODES = ("fastforward", "lockstep")
@@ -597,6 +607,7 @@ class Cluster:
         scu=None,
         banking_factor: int = 2,
         mode: str = "fastforward",
+        faults: Optional[FaultPlan] = None,
     ):
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
@@ -604,6 +615,7 @@ class Cluster:
         self.n_banks = banking_factor * n_cores
         self.scu = scu
         self.mode = mode
+        self.faults = faults
         self.vectorized = mode == "fastforward" and n_cores >= self.VEC_MIN_CORES
         if scu is not None:
             scu.attach(self)
@@ -643,23 +655,53 @@ class Cluster:
             if self.mode == "fastforward":
                 self._run_fast(max_cycles)
             else:
+                scu = self.scu
+                has_wd = scu is not None and scu.watchdog is not None
                 while self._n_done < self.n_cores:
                     if self.cycle >= max_cycles:
                         self._raise_timeout(max_cycles)
                     self.step()
+                    if has_wd and scu.watchdog.tripped is not None:
+                        raise self._watchdog_error()
         finally:
             self.stats.cycles = self.cycle
             self.stats.cores = [c.stats for c in self.cores]
         return self.stats
 
     def _raise_timeout(self, max_cycles: int) -> None:
-        raise RuntimeError(
+        graph = build_wait_graph(self)
+        raise SimTimeout(
             f"cluster did not finish within {max_cycles} cycles "
-            f"(states: {[c.state.name for c in self.cores]})"
+            f"(states: {[c.state.name for c in self.cores]})\n"
+            + graph.describe(),
+            graph=graph,
+        )
+
+    def _watchdog_error(self) -> Optional[DeadlockError]:
+        """The pending watchdog trip as a raisable error, or ``None``.
+
+        Trips are detected *after* a step completes (trip-and-report): the
+        watchdog never aborts a step half-way, which in fleet mode would
+        corrupt co-resident members sharing the batched step."""
+        scu = self.scu
+        if scu is None or scu.watchdog is None:
+            return None
+        wd = scu.watchdog
+        graph = wd.tripped
+        if graph is None:
+            return None
+        return DeadlockError(
+            f"watchdog tripped at cycle {graph.cycle}: no armed-set progress "
+            f"within {wd.timeout} cycles "
+            f"(mode={wd.mode!r}, releases={wd.release_count})\n"
+            + graph.describe(),
+            graph=graph,
         )
 
     def _run_fast(self, max_cycles: int) -> None:
         step = self._step_vec if self.vectorized else self.step
+        scu = self.scu
+        has_wd = scu is not None and scu.watchdog is not None
         while self._n_done < self.n_cores:
             if self.cycle >= max_cycles:
                 self._raise_timeout(max_cycles)
@@ -675,10 +717,18 @@ class Cluster:
             if self._resolve_spin_phase():
                 continue
             step()
+            if has_wd and scu.watchdog.tripped is not None:
+                raise self._watchdog_error()
 
     # ---------------------------------------------------------------- cycle
     def step(self) -> None:
         """Advance the whole cluster by one clock cycle (scalar reference)."""
+        # Injected upsets land before anything else sees the cycle; the
+        # fault plan's bound guarantees a full step runs on every scheduled
+        # cycle in either mode.
+        if self.faults is not None:
+            self.faults.apply(self)
+
         # Phase 0: extension comparators are registered -- events caused by
         # the *previous* cycle's triggers become visible in the buffers now.
         if self.scu is not None:
@@ -729,9 +779,24 @@ class Cluster:
         (:meth:`repro.core.scu.scu_unit.SCU.next_event_bound`): extensions
         are pure comparators over state written by core transactions, so if
         none can fire now and no core acts, none can fire during the span.
+
+        An attached :class:`FaultPlan` is a third bound source: injected
+        faults are observable events, so the plan's own
+        ``next_event_bound()`` is min'd in -- every fault cycle (and every
+        cycle of a bank-blackout window) resolves through a full step.
         """
         if self.vectorized:
-            return self._next_event_bound_vec()
+            bound = self._next_event_bound_vec()
+        else:
+            bound = self._next_event_bound_scalar()
+        faults = self.faults
+        if faults is not None and bound != 0:
+            fb = faults.next_event_bound(self.cycle)
+            if fb is not None and (bound is None or fb < bound):
+                bound = fb
+        return bound
+
+    def _next_event_bound_scalar(self) -> Optional[int]:
         # cores first: during contention phases the first stalled core
         # short-circuits the scan before any extension comparator is touched
         bound: Optional[int] = None
@@ -920,6 +985,15 @@ class Cluster:
         n = self.n_cores
         t0 = self.cycle
 
+        # -- fault plan: the resolver replays TCDM grants without the
+        #    arbitration (and blackout) machinery, so a fault due now blocks
+        #    tier 2 outright and a future fault caps the replay horizon
+        fault_bound = None
+        if self.faults is not None:
+            fault_bound = self.faults.next_event_bound(t0)
+            if fault_bound == 0:
+                return False
+
         # -- eligibility + participant set ---------------------------------
         if pids_arr is not None:
             pids = [int(c) for c in pids_arr]
@@ -972,6 +1046,8 @@ class Cluster:
                     horizon = min(horizon, core.busy)
                 elif cs is CoreState.WAKING:
                     horizon = min(horizon, core.wake_countdown - 1)
+        if fault_bound is not None and fault_bound < horizon:
+            horizon = fault_bound
         if horizon <= 0:  # pragma: no cover - eligibility guarantees >= 1
             return False
 
@@ -1268,6 +1344,10 @@ class Cluster:
         cores = self.cores
         st = V.state
 
+        # Injected upsets land before anything else sees the cycle.
+        if self.faults is not None:
+            self.faults.apply(self)
+
         # Phase 0: extension comparators.
         if self.scu is not None:
             n_ev = self.scu.evaluate(self.cycle)
@@ -1318,6 +1398,14 @@ class Cluster:
         req = np.nonzero(st == _STALL_MEM)[0]
         if req.size == 0:
             return
+        if self.faults is not None:
+            blk = self.faults.blacked_banks(self.cycle)
+            if blk:
+                # filter before the single-requester shortcut: a blacked
+                # bank grants nothing and charges no conflicts
+                req = req[~np.isin(V.pend_bank[req], tuple(blk))]
+                if req.size == 0:
+                    return
         n = self.n_cores
         if req.size == 1:
             cid = int(req[0])
@@ -1489,6 +1577,13 @@ class Cluster:
         for core in self.cores:
             if core.state is CoreState.STALL_MEM:
                 by_bank.setdefault(self._bank_of(core.pending.addr), []).append(core)
+        if by_bank and self.faults is not None:
+            blk = self.faults.blacked_banks(self.cycle)
+            if blk:
+                # blacked-out banks grant nothing; queued requests are the
+                # interconnect's fault, not contention -- no conflict charge
+                for bank in blk:
+                    by_bank.pop(bank, None)
         for bank, reqs in by_bank.items():
             # round-robin election among contenders
             rrb = int(self._rr[bank])
@@ -1845,6 +1940,13 @@ class _FleetEngine:
                         stepping.append(m)
                         continue
                     b = min(b, sb)
+            if cl.faults is not None:
+                fb = cl.faults.next_event_bound(cl.cycle)
+                if fb is not None:
+                    if fb <= 0:
+                        stepping.append(m)
+                        continue
+                    b = min(b, fb)
             if b >= _NO_BOUND:
                 # deadlock: no internal event in sight -- burn to the
                 # cap so the failure matches the sequential engine
@@ -1856,10 +1958,21 @@ class _FleetEngine:
         if stepping:
             self._step(stepping)
             for m in stepping:
+                err = m.cluster._watchdog_error()
+                if err is not None:
+                    self._on_deadlock(m, err)  # static fleet: raises
+                    m.done = True
+                    finished.append(m)
+                    continue
                 if m.cluster._n_done >= m.cluster.n_cores:
                     m.done = True
                     finished.append(m)
         return finished
+
+    def _on_deadlock(self, m: "_FleetMember", err: "DeadlockError") -> None:
+        """A member's watchdog tripped.  The static fleet aborts the run
+        (matching ``Cluster.run``); the slot fleet contains the failure."""
+        raise err
 
     # ----------------------------------------------------------------- jump
     def _jump(self, jumps: List[Tuple["_FleetMember", int]]) -> None:
@@ -1913,13 +2026,18 @@ class _FleetEngine:
         for m in stepping:
             mask[m.sl] = True
 
-        # Phase 0: per-config extension comparators (armed sets checked
-        # inline: a disarmed SCU's evaluate is a guaranteed no-op).
+        # Phase 0: injected upsets, then per-config extension comparators
+        # (armed sets checked inline: a disarmed SCU's evaluate is a
+        # guaranteed no-op -- unless a watchdog deadline is due, which
+        # fires from inside evaluate).
         for m in stepping:
             cl = m.cluster
+            if cl.faults is not None:
+                cl.faults.apply(cl)
             scu = cl.scu
             if scu is not None and (
                 scu._armed_barriers or scu._armed_mutexes or scu._armed_fifos
+                or (scu.watchdog is not None and scu.watchdog_due(cl.cycle))
             ):
                 cl.stats.scu_events += scu.evaluate(cl.cycle)
 
@@ -1967,6 +2085,20 @@ class _FleetEngine:
         # fleet's banks (bank ids offset per config, round-robin keys taken
         # modulo each config's own core count).
         req = np.nonzero(mask & (st == _STALL_MEM))[0]
+        if req.size:
+            blk_banks: Optional[List[int]] = None
+            for m in stepping:
+                f = m.cluster.faults
+                if f is not None:
+                    bb = f.blacked_banks(m.cluster.cycle)
+                    if bb:
+                        base = int(self.bank_base[m.off])
+                        if blk_banks is None:
+                            blk_banks = []
+                        blk_banks.extend(base + b for b in bb)
+            if blk_banks:
+                gb = self.bank_base[req] + V.pend_bank[req]
+                req = req[~np.isin(gb, blk_banks)]
         if req.size:
             gbank = self.bank_base[req] + V.pend_bank[req]
             key = (self.local_cid[req] - self._rr[gbank]) % self.cfg_n[req]
@@ -2329,6 +2461,11 @@ class SlotFleet(_FleetEngine):
             m.cluster._raise_timeout(m.max_cycles)
         except RuntimeError as e:
             m.error = str(e)
+
+    def _on_deadlock(self, m: _FleetMember, err: DeadlockError) -> None:
+        # same containment for watchdog trips: the member is failed, the
+        # co-resident jobs keep running
+        m.error = str(err)
 
 
 def simulate_fleet(configs: List[FleetConfig]) -> List[ClusterStats]:

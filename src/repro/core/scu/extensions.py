@@ -218,8 +218,10 @@ class EventFifo:
     def take_message(self, cid: int) -> int:
         """elw-grant hook: consume the value latched for ``cid`` (the popped
         event for a consumer, the accepted event echoed back for a blocked
-        producer)."""
-        return self.messages.pop(cid)
+        producer).  A grant with no latched value returns 0: a spurious
+        (injected) FIFO event or a watchdog force-release can wake a waiter
+        the comparator never matched."""
+        return self.messages.pop(cid, 0)
 
     def next_event_bound(self) -> Optional[int]:
         """0 while the comparator can move an event through either port this

@@ -112,7 +112,17 @@ class BaseUnit:
         self._U.ntf_target[self.cid] = value
 
     def buffer_set(self, line: int) -> None:
-        self._U.ev_buf[self.cid] |= 1 << line
+        U = self._U
+        if U._drop_armed:
+            bit = 1 << line
+            if U.drop[self.cid] & bit:
+                # armed lost-wake fault: this delivery is silently eaten
+                U.drop[self.cid] &= ~bit
+                U.dropped_events += 1
+                if not U.drop.any():
+                    U._drop_armed = False
+                return
+        U.ev_buf[self.cid] |= 1 << line
 
     def buffer_clear(self, bits: int) -> None:
         self._U.ev_buf[self.cid] &= ~bits
@@ -132,7 +142,10 @@ class BaseUnits:
     vectorized engine kernels and extension deliveries operate on.
     """
 
-    __slots__ = ("n_cores", "ev_buf", "ev_mask", "irq_mask", "ntf_target", "_views")
+    __slots__ = (
+        "n_cores", "ev_buf", "ev_mask", "irq_mask", "ntf_target", "_views",
+        "drop", "dropped_events", "_drop_armed",
+    )
 
     def __init__(self, n_cores: int):
         self.n_cores = n_cores
@@ -141,6 +154,21 @@ class BaseUnits:
         self.irq_mask = np.zeros(n_cores, dtype=np.int64)
         self.ntf_target = np.zeros(n_cores, dtype=np.int64)
         self._views = [BaseUnit(i, self) for i in range(n_cores)]
+        # lost-wake fault filter (repro.core.scu.faults): per-core one-shot
+        # drop masks -- the next delivery of a dropped line to that core is
+        # suppressed and the armed bit consumed.  ``_drop_armed`` keeps the
+        # fault-free delivery fast path branch-cheap.  Deliberately NOT part
+        # of adopt_views: drops are per-tenant state and must never leak
+        # across slot recycling.
+        self.drop = np.zeros(n_cores, dtype=np.int64)
+        self.dropped_events = 0
+        self._drop_armed = False
+
+    def arm_drop(self, cid: int, lines: int = 0xFFFFFFFF) -> None:
+        """Arm a one-shot lost-wake filter: the next delivery of any line in
+        ``lines`` to core ``cid`` is suppressed (one line consumed per hit)."""
+        self.drop[cid] |= lines
+        self._drop_armed = True
 
     def __len__(self) -> int:
         return self.n_cores
@@ -161,14 +189,33 @@ class BaseUnits:
 
     def deliver(self, line: int, target_mask: int) -> int:
         """Set event ``line`` in every targeted core's buffer (vectorized);
-        returns the number of events generated."""
+        returns the number of events actually delivered (armed lost-wake
+        drops suppress their target and are excluded from the count)."""
         full = (1 << self.n_cores) - 1
         target_mask &= full
+        if self._drop_armed:
+            return self._deliver_filtered(line, target_mask)
         if target_mask == full:
             self.ev_buf |= 1 << line
             return self.n_cores
         targets = self.target_bools(target_mask)
         self.ev_buf[targets] |= 1 << line
+        return int(targets.sum())
+
+    def _deliver_filtered(self, line: int, target_mask: int) -> int:
+        """Delivery with the lost-wake drop filter armed (fault injection)."""
+        bit = 1 << line
+        targets = self.target_bools(target_mask)
+        victims = targets & ((self.drop & bit) != 0)
+        if victims.any():
+            hit = targets & ~victims
+            self.ev_buf[hit] |= bit
+            self.drop[victims] &= ~bit
+            self.dropped_events += int(victims.sum())
+            if not self.drop.any():
+                self._drop_armed = False
+            return int(hit.sum())
+        self.ev_buf[targets] |= bit
         return int(targets.sum())
 
 
@@ -187,6 +234,7 @@ class SCU:
         n_mutexes: int = 1,
         fifo_depth: Optional[int] = None,
         n_fifos: Optional[int] = None,
+        watchdog=None,
     ):
         self.n_cores = n_cores
         n_barriers = max(1, n_cores // 2) if n_barriers is None else n_barriers
@@ -226,6 +274,13 @@ class SCU:
         # elw): lets the engine scan all pending elws against the event
         # buffers in one vectorized pass.
         self.elw_wait = np.zeros(n_cores, dtype=np.int64)
+        # Stuck-comparator watchdog (repro.core.scu.faults.Watchdog) and the
+        # cores with an in-flight elw it guards.  Progress = any SCU-visible
+        # activity (access / trigger / grant / comparator event); the
+        # watchdog's bound rides next_event_bound() so the fast-forward
+        # tiers land exactly on the firing cycle.
+        self.watchdog = watchdog
+        self._elw_pending: set = set()
 
     # ----------------------------------------------------------------- wiring
     def attach(self, cluster) -> None:
@@ -264,8 +319,16 @@ class SCU:
         self.elw_wait = elw_wait
 
     # ------------------------------------------------------------ plain access
+    def _progress(self) -> None:
+        """Record SCU-visible activity for the watchdog's progress clock."""
+        wd = self.watchdog
+        if wd is not None and self.cluster is not None:
+            wd.last_progress = self.cluster.cycle
+
     def access(self, cid: int, kind: str, addr: Any, data: int = 0) -> Optional[int]:
         """Single-cycle read/write over the private link (non-elw)."""
+        if self.watchdog is not None:
+            self._progress()
         unit = self.base[cid]
         tag = addr[0]
         if kind == "write":
@@ -338,6 +401,9 @@ class SCU:
             self.notifier.trigger(addr[1], self.base[cid].notifier_target_mask, self.base)
         # ("event","wait_any") and ("notifier", n, "wait"): no trigger action
         self.elw_wait[cid] = self._wait_mask(cid, addr)
+        self._elw_pending.add(cid)
+        if self.watchdog is not None:
+            self._progress()
 
     def _wait_mask(self, cid: int, addr: Any) -> int:
         tag = addr[0]
@@ -389,6 +455,9 @@ class SCU:
         # Auto-clear (address-controlled in hardware; we always auto-clear the
         # lines belonging to the waited-on extension, the common case).
         unit.buffer_clear(wait_mask)
+        self._elw_pending.discard(cid)
+        if self.watchdog is not None:
+            self._progress()
         return True, value
 
     # ------------------------------------------------------------- evaluate
@@ -411,7 +480,20 @@ class SCU:
             for idx in sorted(self._armed_fifos):
                 n += self.fifos[idx].evaluate(self.base)
                 self._fifo_touched(idx)
+        wd = self.watchdog
+        if wd is not None:
+            if n:
+                wd.last_progress = cycle
+            elif self._elw_pending and wd.due(cycle):
+                wd.fire(self, cycle)
         return n
+
+    def watchdog_due(self, cycle: int) -> bool:
+        """True when the watchdog deadline has elapsed with waiters parked
+        (the fleet step's phase-0 gate: evaluate must run so the watchdog
+        can fire even with every comparator disarmed)."""
+        wd = self.watchdog
+        return wd is not None and bool(self._elw_pending) and wd.due(cycle)
 
     def next_event_bound(self) -> Optional[int]:
         """Min over the armed extensions' ``next_event_bound`` hooks (see
@@ -419,9 +501,15 @@ class SCU:
         comparator could generate an event absent new core transactions.
         0 forces the engine to take a full step; ``None`` means every
         comparator is disarmed until a core acts.  All builtin extensions
-        have 0/None bounds, so armed-set membership is the whole answer."""
+        have 0/None bounds, so armed-set membership is the whole answer --
+        plus, when a watchdog guards parked elw waiters, its (timed)
+        deadline: progress only ever pushes the firing later, so the bound
+        never over-estimates."""
         if self._armed_barriers or self._armed_mutexes or self._armed_fifos:
             return 0
+        wd = self.watchdog
+        if wd is not None and self._elw_pending and self.cluster is not None:
+            return wd.bound(self.cluster.cycle)
         return None
 
     def _barrier_touched(self, idx: int) -> None:

@@ -31,23 +31,69 @@ Admission timing is invisible to co-resident jobs (see
 :class:`~repro.core.scu.engine.SlotFleet`): every job's ``ClusterStats`` is
 bit-exact against a sequential ``Cluster.run()`` of the same config, no
 matter when it was admitted or what shared a step with it.  A job that
-hits its ``max_cycles`` cap fails alone -- same message ``Cluster.run``
-would raise, carried on ``SweepJob.error`` -- and its lanes are recycled.
+hits its ``max_cycles`` cap (or trips a watchdog) fails alone -- same
+message ``Cluster.run`` would raise, carried on ``SweepJob.error`` -- and
+its lanes are recycled.
+
+Recovery (opt-in via :class:`RetryPolicy`)
+------------------------------------------
+Clusters are single-use, so a failed attempt cannot be re-run in place;
+retryable jobs are submitted with a ``factory(attempt) -> FleetConfig``
+callable that rebuilds a fresh config per attempt (attempt numbers start
+at 1).  On failure the service logs the attempt in ``SweepJob.fault_log``
+and re-queues the job after an exponential backoff in scheduler rounds
+(``backoff_rounds * backoff_factor ** (attempts - 1)``); after
+``degrade_after`` failed attempts it switches to ``fallback_factory`` when
+provided (graceful degradation, e.g. the ``scu`` policy falling back to
+``sw`` spin barriers -- marked on ``SweepJob.degraded``).  A job that
+exhausts ``max_attempts`` (or has no way to rebuild a config) goes
+**terminal**: ``state == "failed"``, ``error`` set, counted in
+``finished`` -- so :meth:`run_until_drained` terminates instead of
+spinning on permanently-failed work.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.scu.engine import ClusterStats, FleetConfig, SlotFleet
 
-__all__ = ["SweepJob", "QueueFull", "FleetService"]
+__all__ = ["SweepJob", "QueueFull", "RetryPolicy", "FleetService"]
 
 
 class QueueFull(RuntimeError):
     """Raised by :meth:`FleetService.submit` when the bounded queue is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Failure-recovery knobs for :class:`FleetService`.
+
+    ``max_attempts`` caps total attempts per job (1 = no retry);
+    ``backoff_rounds`` / ``backoff_factor`` shape the exponential backoff
+    delay (in scheduler rounds) before attempt ``k+1``:
+    ``backoff_rounds * backoff_factor ** (k - 1)``.  ``degrade_after``
+    (optional) switches the job to its ``fallback_factory`` once that many
+    attempts have failed -- graceful degradation to a more robust (slower)
+    configuration instead of repeating the failing one forever.
+    """
+
+    max_attempts: int = 3
+    backoff_rounds: int = 1
+    backoff_factor: int = 2
+    degrade_after: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.backoff_rounds < 0:
+            raise ValueError(f"backoff_rounds must be >= 0, got {self.backoff_rounds}")
+        if self.backoff_factor < 1:
+            raise ValueError(f"backoff_factor must be >= 1, got {self.backoff_factor}")
+        if self.degrade_after is not None and self.degrade_after < 1:
+            raise ValueError(f"degrade_after must be >= 1, got {self.degrade_after}")
 
 
 @dataclasses.dataclass
@@ -56,7 +102,11 @@ class SweepJob:
 
     ``stats`` is a materialized snapshot -- safe to read after the job's
     slot has been recycled.  ``error`` is ``None`` on success, otherwise
-    the timeout message the sequential engine would have raised.
+    the timeout/deadlock message the sequential engine would have raised
+    (terminal -- intermediate failures of retried attempts live in
+    ``fault_log``).  ``state`` walks ``queued -> running`` and ends in
+    ``done`` or ``failed``, with ``backoff -> queued -> running`` loops in
+    between for retried attempts.
     """
 
     job_id: int
@@ -67,6 +117,17 @@ class SweepJob:
     slot: Optional[int] = None
     stats: Optional[ClusterStats] = None
     error: Optional[str] = None
+    state: str = "queued"
+    attempts: int = 0
+    degraded: bool = False
+    wasted_cycles: int = 0  # simulated cycles burnt by failed attempts
+    fault_log: List[Dict] = dataclasses.field(default_factory=list)
+    factory: Optional[Callable[[int], FleetConfig]] = dataclasses.field(
+        default=None, repr=False
+    )
+    fallback_factory: Optional[Callable[[int], FleetConfig]] = dataclasses.field(
+        default=None, repr=False
+    )
 
     @property
     def done(self) -> bool:
@@ -109,6 +170,10 @@ class FleetService:
         has drained, exactly the utilization loss continuous batching
         removes.  Both modes run the identical engine, so measured deltas
         are scheduling policy, not implementation.
+    retry:
+        Optional :class:`RetryPolicy`; ``None`` (default) keeps the legacy
+        fail-fast behaviour (first failure is terminal).  See the module
+        docstring's Recovery section.
     """
 
     ADMISSION_MODES = ("continuous", "drain")
@@ -120,6 +185,7 @@ class FleetService:
         banking_factor: int = 2,
         queue_limit: int = 64,
         admission: str = "continuous",
+        retry: Optional[RetryPolicy] = None,
     ):
         if admission not in self.ADMISSION_MODES:
             raise ValueError(
@@ -131,10 +197,16 @@ class FleetService:
         self.fleet = SlotFleet(n_slots, slot_cores, banking_factor)
         self.queue_limit = queue_limit
         self.admission = admission
+        self.retry = retry
         self.round = 0  # completed step() calls == current round index
         self.queue: Deque[SweepJob] = deque()
         self.finished: List[SweepJob] = []
         self._by_slot: Dict[int, SweepJob] = {}
+        # (eligible_round, job) pairs waiting out a retry backoff; re-queued
+        # at the head of the round they become eligible (bypassing
+        # queue_limit: a retry never competes with fresh submissions for
+        # queue space, it already owns its place in the system)
+        self._backoff: List[Tuple[int, SweepJob]] = []
         self._next_id = 0
         # lane-occupancy accounting (idle = not running a live job's core;
         # a narrow job's tail lanes count idle -- slot-width waste is real)
@@ -142,17 +214,36 @@ class FleetService:
         self.busy_lane_rounds = 0
 
     # ------------------------------------------------------------------ api
-    def submit(self, config: FleetConfig) -> SweepJob:
+    def submit(
+        self,
+        config: Optional[FleetConfig] = None,
+        *,
+        factory: Optional[Callable[[int], FleetConfig]] = None,
+        fallback_factory: Optional[Callable[[int], FleetConfig]] = None,
+    ) -> SweepJob:
         """Enqueue a job; raises :class:`QueueFull` on a full queue and
         ``ValueError`` on a config the fleet could never admit (so the
-        queue only ever holds admissible jobs)."""
+        queue only ever holds admissible jobs).
+
+        Pass exactly one of ``config`` (single-shot, non-rebuildable) or
+        ``factory`` (``factory(attempt)`` builds a fresh config per
+        attempt; attempt numbers start at 1).  ``fallback_factory`` is the
+        degraded rebuild used after ``RetryPolicy.degrade_after`` failed
+        attempts."""
+        if (config is None) == (factory is None):
+            raise ValueError("submit: pass exactly one of config or factory")
+        if config is None:
+            config = factory(1)
         self.fleet.validate(config)
         if len(self.queue) >= self.queue_limit:
             raise QueueFull(
                 f"queue full ({self.queue_limit} jobs waiting); "
                 "retry after a step() or raise queue_limit"
             )
-        job = SweepJob(self._next_id, config, submitted_round=self.round)
+        job = SweepJob(
+            self._next_id, config, submitted_round=self.round,
+            factory=factory, fallback_factory=fallback_factory,
+        )
         self._next_id += 1
         self.queue.append(job)
         return job
@@ -166,36 +257,67 @@ class FleetService:
             return None
 
     def step(self) -> List[SweepJob]:
-        """One service round: admit from the queue, advance the fleet one
-        scheduling round, collect completions.  Returns the jobs that
-        finished this round (stats materialized, failures marked)."""
+        """One service round: re-queue backoff-expired retries, admit from
+        the queue, advance the fleet one scheduling round, collect
+        completions.  Returns the jobs that went terminal this round
+        (stats materialized, failures marked); retried attempts are not
+        returned -- they surface when they finally succeed or exhaust."""
+        if self._backoff:
+            still: List[Tuple[int, SweepJob]] = []
+            for eligible, job in self._backoff:
+                if eligible <= self.round:
+                    job.state = "queued"
+                    self.queue.append(job)
+                else:
+                    still.append((eligible, job))
+            self._backoff = still
         self._admit()
         done: List[SweepJob] = []
+        finished_cores = 0
         if self.fleet.occupied:
             for m in self.fleet.advance():
+                finished_cores += m.cluster.n_cores
                 job = self._by_slot.pop(m.index)
+                job.attempts += 1
+                self.fleet.free(m.index)
+                if m.error is not None:
+                    job.wasted_cycles += m.cluster.cycle
+                    job.fault_log.append({
+                        "attempt": job.attempts,
+                        "round": self.round,
+                        "cycles": m.cluster.cycle,
+                        "degraded": job.degraded,
+                        "error": m.error.splitlines()[0],
+                    })
+                    if self._maybe_retry(job):
+                        continue
+                    job.error = m.error
+                    job.state = "failed"
+                else:
+                    job.state = "done"
                 job.finished_round = self.round
                 job.stats = m.cluster.stats
-                job.error = m.error
-                self.fleet.free(m.index)
                 self.finished.append(job)
                 done.append(job)
         # occupancy snapshot of the round just executed (post-completion:
-        # a lane freed this round was still busy during it)
+        # a lane freed this round was still busy during it, whether the
+        # job went terminal or back to the retry queue)
         self.lane_rounds += self.fleet.n_slots * self.fleet.slot_cores
         self.busy_lane_rounds += sum(
             j.config.cluster.n_cores for j in self._by_slot.values()
-        ) + sum(j.config.cluster.n_cores for j in done)
+        ) + finished_cores
         self.round += 1
         return done
 
     def run_until_drained(self, max_rounds: int = 10_000_000) -> List[SweepJob]:
-        """Step until the queue and every slot are empty; returns all jobs
-        finished along the way.  ``max_rounds`` guards against a caller
-        submitting faster than the fleet can drain (raises RuntimeError)."""
+        """Step until the queue, the backoff list and every slot are empty;
+        returns all jobs finished along the way (terminally-failed jobs
+        included -- they drain instead of spinning the loop).
+        ``max_rounds`` guards against a caller submitting faster than the
+        fleet can drain (raises RuntimeError)."""
         out: List[SweepJob] = []
         rounds = 0
-        while self.queue or self.fleet.occupied:
+        while self.queue or self._backoff or self.fleet.occupied:
             out.extend(self.step())
             rounds += 1
             if rounds > max_rounds:
@@ -203,6 +325,43 @@ class FleetService:
                     f"run_until_drained: not drained after {max_rounds} rounds"
                 )
         return out
+
+    # --------------------------------------------------------------- recovery
+    def _maybe_retry(self, job: SweepJob) -> bool:
+        """Schedule another attempt for a failed job if policy allows;
+        returns False when the failure must go terminal."""
+        r = self.retry
+        if r is None or job.attempts >= r.max_attempts:
+            return False
+        cfg = self._next_config(job)
+        if cfg is None:
+            return False
+        try:
+            self.fleet.validate(cfg)
+        except ValueError:
+            return False  # a factory built an inadmissible config
+        job.config = cfg
+        job.slot = None
+        job.state = "backoff"
+        delay = r.backoff_rounds * (r.backoff_factor ** (job.attempts - 1))
+        self._backoff.append((self.round + 1 + delay, job))
+        return True
+
+    def _next_config(self, job: SweepJob) -> Optional[FleetConfig]:
+        """Build the config for the job's next attempt (clusters are
+        single-use), or ``None`` when the job cannot be rebuilt."""
+        nxt = job.attempts + 1
+        r = self.retry
+        if (
+            r.degrade_after is not None
+            and job.attempts >= r.degrade_after
+            and job.fallback_factory is not None
+        ):
+            job.degraded = True
+            return job.fallback_factory(nxt)
+        if job.factory is not None:
+            return job.factory(nxt)
+        return None
 
     # ------------------------------------------------------------- admission
     def _admit(self) -> None:
@@ -212,6 +371,7 @@ class FleetService:
             job = self.queue.popleft()
             slot = self.fleet.admit(job.config)
             job.slot = slot
+            job.state = "running"
             job.admitted_round = self.round
             self._by_slot[slot] = job
 

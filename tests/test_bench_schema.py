@@ -47,7 +47,7 @@ def test_schema_requires_every_section(baseline):
     for key in (
         "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
         "chain", "chain_scaling", "work_queue", "work_queue_scaling",
-        "engine_perf", "traffic", "jax_barriers_ok",
+        "engine_perf", "traffic", "resilience", "jax_barriers_ok",
     ):
         broken = {k: v for k, v in baseline.items() if k != key}
         errors = bench_compare.validate_schema(broken)
@@ -118,6 +118,50 @@ def test_traffic_latency_metrics_are_hard_gated(baseline):
     cell["p99_latency_rounds"] = cell["p99_latency_rounds"] * 1.10
     regressions, _ = bench_compare.compare(baseline, doctored)
     assert any("p99_latency_rounds" in r for r in regressions)
+
+
+def test_schema_catches_resilience_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    rate = next(iter(broken["resilience"]["cells"]))
+    del broken["resilience"]["cells"][rate]["retry"]["failure_rate"]
+    assert any(
+        "failure_rate" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    broken["resilience"]["cells"] = {}
+    assert any("cells" in e for e in bench_compare.validate_schema(broken))
+
+
+def test_resilience_metrics_are_hard_gated(baseline):
+    """Cycle- and round-counted recovery metrics gate like cycle counts: a
+    doctored wasted-cycles or failure-rate increase trips the comparison."""
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["resilience"]["cells"]["rate0.5"]["none"]
+    cell["wasted_cycles"] = cell["wasted_cycles"] * 2
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("wasted_cycles" in r for r in regressions)
+
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["resilience"]["cells"]["rate0.5"]["retry"]
+    cell["failure_rate"] = 0.5  # recovery stopped recovering
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("retry/failure_rate" in r for r in regressions)
+
+
+def test_resilience_baseline_shows_recovery_win(baseline):
+    """The committed baseline must carry the measured claim: at the faulty
+    rate, fail-fast loses jobs while every recovery mode completes the
+    stream -- and the watchdog does it without wasting a cycle."""
+    faulty = baseline["resilience"]["cells"]["rate0.5"]
+    assert faulty["none"]["failure_rate"] > 0
+    for mode in ("retry", "degrade", "watchdog"):
+        assert faulty[mode]["failure_rate"] == 0.0
+    assert faulty["watchdog"]["wasted_cycles"] == 0
+    assert faulty["watchdog"]["watchdog_releases"] > 0
+    assert faulty["degrade"]["degraded_jobs"] > 0
+    clean = baseline["resilience"]["cells"]["rate0"]
+    assert all(c["failure_rate"] == 0.0 for c in clean.values())
 
 
 def test_schema_catches_chain_row_drift(baseline):

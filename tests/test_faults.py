@@ -1,0 +1,444 @@
+"""Fault injection, watchdog recovery and structured deadlock diagnostics.
+
+The load-bearing property mirrors the engine's core contract: a
+fault-injected run must stay **bit-exact** between the ``lockstep``
+reference and every ``fastforward`` tier -- including runs that deadlock
+(same timeout cycle, same wait-for dump) -- because the
+:class:`FaultPlan` bound is minned into every fast-forward jump.  On top
+of that: the one-shot lost-wake drop filter, watchdog release/trip
+semantics, the structured :class:`SimTimeout`/:class:`DeadlockError`
+diagnostics, and fault parity through both fleet engines.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scu import SCU, Cluster, Compute, Scu
+from repro.core.scu.engine import SlotFleet, simulate_fleet
+from repro.core.scu.extensions import EventFifo
+from repro.core.scu.faults import (
+    ALL_LINES,
+    FAULT_KINDS,
+    DeadlockError,
+    FaultEvent,
+    FaultPlan,
+    SimTimeout,
+    Watchdog,
+    build_wait_graph,
+)
+from repro.core.scu.programs import (
+    prep_barrier_bench,
+    prep_chain_bench,
+    prep_mutex_bench,
+)
+from repro.core.scu.scu_unit import BaseUnits
+
+# fault kinds that cannot deadlock a well-formed program (a lost or
+# spurious wake can -- e.g. a swallowed barrier edge or a stale mutex
+# election -- which is correct behaviour, just not drainable in a static
+# fleet that aborts on the first failure)
+SAFE_KINDS = ("stall", "bank_blackout")
+
+_BARRIER_LINE = 8
+
+
+def _lost_barrier_plan(victim=3, cycle=10):
+    return FaultPlan([
+        FaultEvent("lost_wake", cycle=cycle, core=victim,
+                   lines=1 << _BARRIER_LINE)
+    ])
+
+
+def _run_with_plan(policy, n_cores, mode, plan, sfr=20, iters=6,
+                   max_cycles=20_000, watchdog=None):
+    """One injected run; returns a comparable outcome tuple for either a
+    completion or a timeout (both must match across engine modes)."""
+    fb = prep_barrier_bench(policy, n_cores, sfr=sfr, iters=iters, mode=mode)
+    cl = fb.config.cluster
+    cl.faults = plan.clone() if plan is not None else None
+    if watchdog is not None and cl.scu is not None:
+        cl.scu.watchdog = Watchdog(**watchdog)
+    cl.load(fb.config.programs)
+    try:
+        cl.run(max_cycles)
+        return ("done", cl.stats, cl.faults.applied if cl.faults else [])
+    except SimTimeout as e:
+        return ("timeout", cl.cycle, str(e))
+    except DeadlockError as e:
+        return ("deadlock", e.graph.cycle, str(e))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: schedule, bounds, cursor
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("cosmic_ray", cycle=0, core=0)
+    with pytest.raises(ValueError, match="cycle"):
+        FaultEvent("stall", cycle=-1, core=0, span=3)
+    with pytest.raises(ValueError, match="target core"):
+        FaultEvent("lost_wake", cycle=0)
+    with pytest.raises(ValueError, match="span"):
+        FaultEvent("stall", cycle=0, core=0, span=0)
+    with pytest.raises(ValueError, match="bank"):
+        FaultEvent("bank_blackout", cycle=0, span=4)
+
+
+def test_next_event_bound_contract():
+    """0 on a fault cycle or inside a blackout window, distance to the
+    next fault otherwise, None when exhausted -- the exact contract the
+    SCU extensions implement."""
+    plan = FaultPlan([
+        FaultEvent("stall", cycle=5, core=0, span=2),
+        FaultEvent("bank_blackout", cycle=10, span=4, banks=(1, 3)),
+        FaultEvent("spurious_wake", cycle=20, core=1, line=8),
+    ])
+    assert plan.next_event_bound(0) == 5
+    assert plan.next_event_bound(5) == 0
+    assert plan.next_event_bound(6) == 4
+    assert plan.next_event_bound(10) == 0
+    assert plan.next_event_bound(13) == 0  # inside [10, 14)
+    assert plan.next_event_bound(14) == 6
+    assert plan.next_event_bound(20) == 0
+    assert plan.next_event_bound(21) is None
+    assert plan.blacked_banks(9) == frozenset()
+    assert plan.blacked_banks(10) == {1, 3}
+    assert plan.blacked_banks(13) == {1, 3}
+    assert plan.blacked_banks(14) == frozenset()
+    assert FaultPlan().next_event_bound(0) is None
+
+
+def test_plan_is_single_use_and_clone_resets():
+    plan = FaultPlan([FaultEvent("stall", cycle=2, core=0, span=3)])
+    out = _run_with_plan("scu", 8, "fastforward", plan)
+    assert out[0] == "done"
+    assert out[2] and out[2][0]["kind"] == "stall"
+    fresh = plan.clone()
+    assert fresh._next == 0 and fresh.applied == []
+    assert fresh.events == plan.events
+
+
+def test_random_plan_is_seed_deterministic():
+    a = FaultPlan.random(7, n_cores=8, n_banks=16, horizon=300)
+    b = FaultPlan.random(7, n_cores=8, n_banks=16, horizon=300)
+    c = FaultPlan.random(8, n_cores=8, n_banks=16, horizon=300)
+    assert a.events == b.events
+    assert a.events != c.events
+    assert all(e.kind in FAULT_KINDS for e in a.events)
+
+
+# ---------------------------------------------------------------------------
+# Lost-wake drop filter + spurious-wake tolerance (unit level)
+# ---------------------------------------------------------------------------
+
+
+def test_drop_filter_is_one_shot():
+    """An armed lost-wake drop eats exactly the next matching delivery on
+    the target core, then disarms -- per line, per core."""
+    u = BaseUnits(4)
+    u.arm_drop(2, 1 << 8)
+    delivered = u.deliver(8, 0b1111)
+    assert delivered == 3
+    assert u.ev_buf[2] == 0 and all(u.ev_buf[c] == 1 << 8 for c in (0, 1, 3))
+    assert u.dropped_events == 1
+    # disarmed: the same delivery now lands
+    assert u.deliver(8, 0b0100) == 1
+    assert u.ev_buf[2] == 1 << 8
+    # a drop armed on line 8 does not touch other lines
+    u.arm_drop(1, 1 << 8)
+    assert u.deliver(9, 0b0010) == 1
+    assert u.ev_buf[1] & (1 << 9)
+
+
+def test_drop_filter_via_buffer_set():
+    """Extensions that deliver through per-core buffer_set (mutex election,
+    FIFO grants) hit the same filter."""
+    u = BaseUnits(2)
+    u.arm_drop(0, ALL_LINES)
+    u[0].buffer_set(9)
+    assert u.ev_buf[0] == 0 and u.dropped_events == 1
+    u[0].buffer_set(9)
+    assert u.ev_buf[0] == 1 << 9
+
+
+def test_spurious_fifo_grant_returns_zero():
+    """A waiter woken by an injected FIFO event (or a watchdog release)
+    has no latched message; take_message must hand back 0, not raise."""
+    f = EventFifo()
+    assert f.take_message(5) == 0
+    f.register_popper(1)
+    f.push(42)
+    f.evaluate(BaseUnits(2))
+    assert f.take_message(1) == 42
+    assert f.take_message(1) == 0
+
+
+# ---------------------------------------------------------------------------
+# The tentpole: fault-injected runs are bit-exact across engine modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_cores", (8, 16, 64))
+@pytest.mark.parametrize("policy", ("scu", "tas", "fifo"))
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_fault_parity_lockstep_vs_fastforward(policy, n_cores, seed):
+    """Randomized plans over every fault kind: completions must match
+    stat-for-stat, deadlocks must time out at the same cycle with the
+    identical wait-for dump."""
+    plan = FaultPlan.random(
+        seed, n_cores=n_cores, n_banks=2 * n_cores, horizon=400, n_events=4
+    )
+    ref = _run_with_plan(policy, n_cores, "lockstep", plan, max_cycles=20_000)
+    ff = _run_with_plan(policy, n_cores, "fastforward", plan, max_cycles=20_000)
+    assert ref == ff, f"seed={seed}: {policy}@{n_cores} diverged"
+
+
+@pytest.mark.parametrize("kind", FAULT_KINDS)
+def test_single_kind_parity(kind):
+    """Each fault kind in isolation, on the sleep-heavy SCU barrier (the
+    adversarial case for the quiescent-span jump)."""
+    if kind == "lost_wake":
+        plan = _lost_barrier_plan()
+    elif kind == "spurious_wake":
+        plan = FaultPlan([FaultEvent("spurious_wake", 40, core=2, line=8)])
+    elif kind == "stall":
+        plan = FaultPlan([FaultEvent("stall", 15, core=5, span=37)])
+    else:
+        plan = FaultPlan([FaultEvent("bank_blackout", 8, span=20, banks=(0, 5))])
+    ref = _run_with_plan("scu", 8, "lockstep", plan, max_cycles=8_000)
+    ff = _run_with_plan("scu", 8, "fastforward", plan, max_cycles=8_000)
+    assert ref == ff
+
+
+def test_mutex_and_chain_shapes_under_faults():
+    for mk in (
+        lambda mode: prep_mutex_bench("scu", 8, t_crit=9, iters=5, mode=mode),
+        lambda mode: prep_chain_bench("fifo", 8, sfr=30, iters=4, depth=4,
+                                      mode=mode),
+    ):
+        plan = FaultPlan([
+            FaultEvent("stall", 12, core=1, span=23),
+            FaultEvent("bank_blackout", 30, span=11, banks=(2,)),
+        ])
+        out = {}
+        for mode in ("lockstep", "fastforward"):
+            fb = mk(mode)
+            cl = fb.config.cluster
+            cl.faults = plan.clone()
+            cl.load(fb.config.programs)
+            cl.run(50_000)
+            out[mode] = cl.stats
+        assert out["lockstep"] == out["fastforward"]
+
+
+def test_empty_plan_is_bit_exact_noop():
+    """Cluster(faults=FaultPlan()) must reproduce the no-faults run exactly
+    -- the property that lets the golden benchmark baseline stand."""
+    ref = _run_with_plan("scu", 16, "fastforward", None)
+    empty = _run_with_plan("scu", 16, "fastforward", FaultPlan())
+    assert ref == empty
+
+
+# ---------------------------------------------------------------------------
+# Structured timeout + wait-for graph
+# ---------------------------------------------------------------------------
+
+
+def test_sim_timeout_keeps_legacy_prefix_and_adds_graph():
+    fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+    cl = fb.config.cluster
+    cl.faults = _lost_barrier_plan()
+    cl.load(fb.config.programs)
+    with pytest.raises(SimTimeout, match="did not finish") as exc:
+        cl.run(max_cycles=4096)
+    e = exc.value
+    assert isinstance(e, DeadlockError) and isinstance(e, RuntimeError)
+    msg = str(e)
+    assert msg.startswith("cluster did not finish within 4096 cycles")
+    assert "wait-for graph at cycle 4096" in msg
+    for cid in range(8):
+        assert f"core {cid}:" in msg
+    assert "lost_wake" in msg  # the blame list names the injected fault
+    assert e.graph is not None and e.graph.cycle == 4096
+    assert len(e.graph.cores) == 8
+    assert any(f["kind"] == "lost_wake" for f in e.graph.faults)
+
+
+def test_wait_graph_snapshots_comparators():
+    cl = Cluster(n_cores=2, scu=SCU(n_cores=2))
+
+    def sleeper(cluster, cid):
+        yield Scu("elw", ("barrier", 0, "arrive_wait"))
+
+    def runner(cluster, cid):
+        yield Compute(100_000)
+
+    cl.load([sleeper, runner])
+    with pytest.raises(SimTimeout):
+        cl.run(max_cycles=512)
+    g = build_wait_graph(cl)
+    assert any("barrier[0]" in s for s in g.comparators)
+    assert any("elw pending" in s for s in g.comparators)
+    assert g.describe() == build_wait_graph(cl).describe()  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: release recovery, trip escalation, bit-exact timing
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_release_recovers_lost_wake_bit_exact():
+    wd = dict(timeout=150, mode="release")
+    ref = _run_with_plan("scu", 8, "lockstep", _lost_barrier_plan(),
+                         max_cycles=100_000, watchdog=wd)
+    ff = _run_with_plan("scu", 8, "fastforward", _lost_barrier_plan(),
+                        max_cycles=100_000, watchdog=wd)
+    assert ref == ff
+    assert ref[0] == "done", "release-mode watchdog must complete the run"
+
+
+def test_watchdog_raise_trips_with_graph_same_cycle_both_modes():
+    wd = dict(timeout=150, mode="raise")
+    out = {}
+    for mode in ("lockstep", "fastforward"):
+        out[mode] = _run_with_plan("scu", 8, mode, _lost_barrier_plan(),
+                                   max_cycles=10**7, watchdog=wd)
+    assert out["lockstep"] == out["fastforward"]
+    status, cycle, msg = out["fastforward"]
+    assert status == "deadlock"
+    assert cycle < 10_000, "trip must fire at the deadline, not the cap"
+    assert "watchdog tripped" in msg and "wait-for graph" in msg
+
+
+def test_watchdog_escalates_after_max_releases():
+    """A comparator that stays stuck through releases is a hard fault: with
+    the release budget exhausted the watchdog trips instead."""
+    fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+    cl = fb.config.cluster
+    cl.faults = _lost_barrier_plan()
+    cl.scu.watchdog = Watchdog(timeout=150, mode="release", max_releases=0)
+    cl.load(fb.config.programs)
+    with pytest.raises(DeadlockError, match="watchdog tripped"):
+        cl.run(max_cycles=10**6)
+
+
+def test_watchdog_is_noop_on_healthy_run():
+    ref = _run_with_plan("scu", 16, "fastforward", None)
+    wd = _run_with_plan("scu", 16, "fastforward", None,
+                        watchdog=dict(timeout=5_000, mode="raise"))
+    assert ref == wd
+
+
+def test_watchdog_validation():
+    with pytest.raises(ValueError, match="timeout"):
+        Watchdog(timeout=0)
+    with pytest.raises(ValueError, match="mode"):
+        Watchdog(timeout=10, mode="reboot")
+    with pytest.raises(ValueError, match="max_releases"):
+        Watchdog(timeout=10, max_releases=-1)
+
+
+# ---------------------------------------------------------------------------
+# Fleet engines under faults
+# ---------------------------------------------------------------------------
+
+
+def _prep_faulty(policy, n, seed, mode="fastforward"):
+    fb = prep_barrier_bench(policy, n, sfr=25, iters=5, mode=mode)
+    fb.config.cluster.faults = FaultPlan.random(
+        seed, n_cores=n, n_banks=2 * n, horizon=300, n_events=3,
+        kinds=SAFE_KINDS,
+    )
+    return fb
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_static_fleet_parity_under_faults(seed):
+    """simulate_fleet with per-cluster fault plans: every member bit-exact
+    against its own sequential run (non-deadlocking kinds -- the static
+    fleet aborts the whole batch on a member failure, by design)."""
+    shapes = [("scu", 8), ("tas", 8), ("fifo", 8), ("scu", 16), ("scu", 64)]
+    seq = []
+    for i, (p, n) in enumerate(shapes):
+        fb = _prep_faulty(p, n, seed + i)
+        fb.config.cluster.load(fb.config.programs)
+        seq.append(fb.config.cluster.run(50_000))
+    fleet_stats = simulate_fleet(
+        [_prep_faulty(p, n, seed + i).config
+         for i, (p, n) in enumerate(shapes)]
+    )
+    assert list(fleet_stats) == seq, f"seed={seed}: fleet diverged"
+
+
+def test_slot_fleet_contains_fault_deadlock():
+    """A fault-deadlocked tenant fails alone with the sequential engine's
+    exact message; a co-resident clean job stays bit-exact and the slot
+    recycles cleanly."""
+    def faulty_cfg():
+        fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+        fb.config.cluster.faults = _lost_barrier_plan()
+        fb.config.max_cycles = 4096
+        return fb.config
+
+    seq_cfg = faulty_cfg()
+    seq_cfg.cluster.load(seq_cfg.programs)
+    with pytest.raises(SimTimeout) as exc:
+        seq_cfg.cluster.run(4096)
+
+    ok_bench = prep_barrier_bench("scu", 8, sfr=10, iters=3)
+    ok_ref = prep_barrier_bench("scu", 8, sfr=10, iters=3).run_sequential()
+
+    fleet = SlotFleet(n_slots=2, slot_cores=8)
+    s_bad = fleet.admit(faulty_cfg())
+    s_ok = fleet.admit(ok_bench.config)
+    errors, stats = {}, {}
+    rounds = 0
+    while fleet.occupied:
+        for m in fleet.advance():
+            errors[m.index], stats[m.index] = m.error, m.cluster.stats
+            fleet.free(m.index)
+        rounds += 1
+        assert rounds < 10**6
+    assert errors[s_ok] is None
+    assert ok_bench.finalize(stats[s_ok]) == ok_ref
+    assert errors[s_bad] == str(exc.value)
+    assert "lost_wake" in errors[s_bad]
+    # the poisoned slot serves the next tenant cleanly
+    b2 = prep_barrier_bench("scu", 8, sfr=10, iters=3)
+    fleet.admit(b2.config)
+    while fleet.occupied:
+        for m in fleet.advance():
+            assert m.error is None
+            assert b2.finalize(m.cluster.stats) == ok_ref
+            fleet.free(m.index)
+
+
+def test_slot_fleet_watchdog_release_matches_sequential():
+    """Watchdog-recovered runs stay bit-exact through the batched fleet."""
+    def mk():
+        fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+        cl = fb.config.cluster
+        cl.faults = _lost_barrier_plan()
+        cl.scu.watchdog = Watchdog(timeout=150, mode="release")
+        return fb
+
+    seq_fb = mk()
+    seq_fb.config.cluster.load(seq_fb.config.programs)
+    ref = seq_fb.config.cluster.run(100_000)
+
+    fb = mk()
+    fleet = SlotFleet(n_slots=1, slot_cores=8)
+    fleet.admit(fb.config)
+    rounds = 0
+    while fleet.occupied:
+        for m in fleet.advance():
+            assert m.error is None
+            assert m.cluster.stats == ref
+            fleet.free(m.index)
+        rounds += 1
+        assert rounds < 10**6

@@ -25,7 +25,8 @@ from repro.core.scu.programs import (
 )
 from repro.serve.arrivals import bursty_trace, poisson_trace
 from repro.serve.energy import job_energy
-from repro.serve.fleet_service import FleetService, QueueFull
+from repro.core.scu.faults import FaultEvent, FaultPlan
+from repro.serve.fleet_service import FleetService, QueueFull, RetryPolicy
 
 POLICIES = ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo")
 
@@ -356,6 +357,242 @@ def test_slot_fleet_rejects_misuse():
         fleet.free(0)
     with pytest.raises(RuntimeError, match="no free slot"):
         fleet.admit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+
+
+# ---------------------------------------------------------------------------
+# Recovery: retry with backoff, degradation, terminal failures
+# ---------------------------------------------------------------------------
+
+
+def _lost_wake_plan(victim=3):
+    # lose the barrier wake (EV.BARRIER = line 8) on one core: the whole
+    # barrier deadlocks and the job burns to its cycle cap
+    return FaultPlan([FaultEvent("lost_wake", cycle=10, core=victim,
+                                 lines=1 << 8)])
+
+
+def _transient_factory(attempt):
+    """Faulty on attempt 1, clean after -- the retryable failure."""
+    fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+    fb.config.max_cycles = 4096
+    if attempt == 1:
+        fb.config.cluster.faults = _lost_wake_plan()
+    return fb.config
+
+
+def _persistent_factory(attempt):
+    """Every scu attempt loses the wake -- only degradation can help."""
+    fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+    fb.config.max_cycles = 4096
+    fb.config.cluster.faults = _lost_wake_plan()
+    return fb.config
+
+
+def _sw_fallback(attempt):
+    fb = prep_barrier_bench("sw", 8, sfr=20, iters=6)
+    return fb.config
+
+
+def test_run_until_drained_terminates_on_permanent_failures():
+    """Regression (the satellite fix): a queue holding only jobs that fail
+    terminally must drain -- failed jobs leave the system instead of
+    spinning the loop to max_rounds."""
+    svc = FleetService(n_slots=1, slot_cores=8,
+                       retry=RetryPolicy(max_attempts=2, backoff_rounds=1))
+    jobs = [svc.submit(factory=_persistent_factory) for _ in range(3)]
+    done = svc.run_until_drained(max_rounds=200_000)
+    assert len(done) == 3
+    assert all(j.state == "failed" and j.failed for j in jobs)
+    assert all(j.attempts == 2 and len(j.fault_log) == 2 for j in jobs)
+    assert all(j.finished_round is not None for j in jobs)
+    assert not svc.queue and not svc._backoff and not svc.fleet.occupied
+
+
+def test_retry_recovers_transient_fault():
+    svc = FleetService(n_slots=2, slot_cores=8,
+                       retry=RetryPolicy(max_attempts=3))
+    j = svc.submit(factory=_transient_factory)
+    svc.run_until_drained()
+    assert j.state == "done" and j.error is None
+    assert j.attempts == 2 and j.degraded is False
+    assert len(j.fault_log) == 1
+    log = j.fault_log[0]
+    assert log["attempt"] == 1 and log["cycles"] == 4096
+    assert "did not finish" in log["error"]
+    assert j.wasted_cycles == 4096  # exactly the failed attempt's burn
+    assert j.stats is not None
+
+
+def test_no_retry_policy_keeps_fail_fast():
+    svc = FleetService(n_slots=1, slot_cores=8)
+    j = svc.submit(factory=_persistent_factory)
+    svc.run_until_drained()
+    assert j.state == "failed" and j.attempts == 1
+    assert j.error is not None and "did not finish" in j.error
+
+
+def test_backoff_grows_exponentially():
+    """With backoff_rounds=2, factor=3 the re-queue delays are 2 then 6
+    rounds: the gap between consecutive failures must grow while the
+    per-attempt service time stays constant."""
+    svc = FleetService(
+        n_slots=1, slot_cores=8,
+        retry=RetryPolicy(max_attempts=3, backoff_rounds=2, backoff_factor=3),
+    )
+    j = svc.submit(factory=_persistent_factory)
+    svc.run_until_drained()
+    assert j.attempts == 3 and j.state == "failed"
+    r1, r2, r3 = (e["round"] for e in j.fault_log)
+    assert r2 - r1 >= 1 + 2  # backoff + re-service
+    assert (r3 - r2) - (r2 - r1) == 4  # delay grew 2 -> 6
+    assert all(e["degraded"] is False for e in j.fault_log)
+
+
+def test_degrade_to_fallback_policy():
+    svc = FleetService(
+        n_slots=2, slot_cores=8,
+        retry=RetryPolicy(max_attempts=3, degrade_after=1),
+    )
+    j = svc.submit(factory=_persistent_factory, fallback_factory=_sw_fallback)
+    svc.run_until_drained()
+    assert j.state == "done" and j.degraded is True
+    assert j.attempts == 2 and j.error is None
+    # the successful attempt ran the sw fallback: stats match a clean sw run
+    ref = prep_barrier_bench("sw", 8, sfr=20, iters=6).run_sequential()
+    assert j.stats == ref.stats
+
+
+def test_degrade_without_fallback_exhausts_attempts():
+    svc = FleetService(
+        n_slots=1, slot_cores=8,
+        retry=RetryPolicy(max_attempts=3, degrade_after=1),
+    )
+    j = svc.submit(factory=_persistent_factory)  # no fallback given
+    svc.run_until_drained()
+    assert j.state == "failed" and j.attempts == 3 and j.degraded is False
+
+
+def test_submit_requires_config_xor_factory():
+    svc = FleetService(n_slots=1, slot_cores=8)
+    with pytest.raises(ValueError, match="exactly one"):
+        svc.submit()
+    with pytest.raises(ValueError, match="exactly one"):
+        svc.submit(prep_barrier_bench("scu", 8, iters=2).config,
+                   factory=_transient_factory)
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="backoff_rounds"):
+        RetryPolicy(backoff_rounds=-1)
+    with pytest.raises(ValueError, match="backoff_factor"):
+        RetryPolicy(backoff_factor=0)
+    with pytest.raises(ValueError, match="degrade_after"):
+        RetryPolicy(degrade_after=0)
+
+
+def test_retry_config_leaves_clean_traffic_untouched():
+    """The recovery machinery must be invisible to jobs that never fail:
+    same stream, with and without a RetryPolicy, identical outcomes."""
+    def run(retry):
+        svc = FleetService(n_slots=2, slot_cores=16, retry=retry,
+                           queue_limit=16)
+        benches = [
+            prep_barrier_bench(p, n, sfr=s, iters=i)
+            for p, n, s, i in (
+                ("scu", 8, 0, 3), ("tas", 8, 40, 3), ("scu", 16, 10, 2),
+                ("fifo", 8, 25, 4),
+            )
+        ]
+        jobs = [svc.submit(b.config) for b in benches]
+        svc.run_until_drained()
+        return [(j.state, j.attempts, j.stats, j.finished_round)
+                for j in jobs], svc.round
+
+    plain, rounds_plain = run(None)
+    with_retry, rounds_retry = run(RetryPolicy(max_attempts=3))
+    assert plain == with_retry and rounds_plain == rounds_retry
+    assert all(state == "done" and attempts == 1
+               for state, attempts, _, _ in plain)
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation under faults (slot scrub fuzz)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_tenant_isolation_under_fault_chains(seed):
+    """Randomized admit/fail/free/admit chains on a recycled slot: however
+    the previous tenant died (deadlock, blackout, armed-but-unfired drop
+    filters), the next tenant's run is bit-exact against a fresh fleet and
+    its SCU base-unit fault state starts scrubbed."""
+    rng = random.Random(seed)
+    ref = prep_barrier_bench("scu", 8, sfr=10, iters=3).run_sequential()
+
+    fleet = SlotFleet(n_slots=2, slot_cores=8)
+    for _ in range(rng.randint(2, 4)):
+        # a faulty tenant: random kind, possibly deadlocking
+        kind = rng.choice(("lost_wake", "stall", "bank_blackout", "spurious"))
+        fb = prep_barrier_bench(
+            rng.choice(("scu", "tas", "fifo")), 8,
+            sfr=rng.choice((0, 20)), iters=rng.randint(2, 5),
+        )
+        if kind == "lost_wake":
+            # arm drops on several lines; some never fire before death
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("lost_wake", cycle=rng.randrange(5, 50),
+                           core=rng.randrange(8), lines=0xFFFFFFFF)
+            ])
+            fb.config.max_cycles = 2048
+        elif kind == "stall":
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("stall", rng.randrange(5, 50),
+                           core=rng.randrange(8), span=rng.randrange(1, 60))
+            ])
+        elif kind == "bank_blackout":
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("bank_blackout", rng.randrange(5, 50),
+                           span=rng.randrange(1, 30), banks=(0, 3))
+            ])
+        else:
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("spurious_wake", rng.randrange(5, 50),
+                           core=rng.randrange(8),
+                           line=rng.choice((0, 8, 9, 10)))
+            ])
+            fb.config.max_cycles = 2048
+        slot = fleet.admit(fb.config)
+        done_first = False
+        rounds = 0
+        while not done_first:
+            for m in fleet.advance():
+                done_first = done_first or m.index == slot
+                fleet.free(m.index)
+            rounds += 1
+            assert rounds < 10**6
+
+        # the recycled slot must serve a clean tenant bit-exactly
+        b2 = prep_barrier_bench("scu", 8, sfr=10, iters=3)
+        s2 = fleet.admit(b2.config)
+        assert s2 == slot or fleet.n_slots > 1
+        # scrubbed fault state: no armed drops leak across tenants
+        scu = b2.config.cluster.scu
+        assert not scu.base.drop.any() and not scu.base._drop_armed
+        assert scu.base.dropped_events == 0
+        rounds = 0
+        while fleet.occupied:
+            for m in fleet.advance():
+                if m.index == s2:
+                    assert m.error is None
+                    assert b2.finalize(m.cluster.stats) == ref, (
+                        f"seed={seed}: recycled slot leaked fault state"
+                    )
+                fleet.free(m.index)
+            rounds += 1
+            assert rounds < 10**6
 
 
 # ---------------------------------------------------------------------------
