@@ -15,6 +15,12 @@ Three sweeps:
   only run (and parity-asserted) on the smallest cluster -- reference-
   stepping a contended 256-core cluster is exactly the cost the vectorized
   engine exists to avoid.
+* **Compiled** (the PR-8 headline): the fleet sweep's 8-core spin-heavy
+  barrier/mutex shapes executed twice -- as plain generator programs and as
+  static micro-op traces (``repro.core.scu.trace``), which drop per-micro-op
+  generator resumption and let the period-collapse monitor jump over
+  repeated whole-cluster periods.  Per-config stats are asserted
+  bit-identical; the ratio is the compiled-dispatch speedup.
 * **Fleet** (the PR-5 headline): a fixed 64-config combined
   Table-1 + Fig-5 + chain + work-queue sweep, run once config-at-a-time
   (the sequential dispatch the benchmarks used before the fleet engine)
@@ -326,6 +332,94 @@ def run_fleet(verbose: bool = True) -> Dict:
     return result
 
 
+# the compiled-trace row: the fleet sweep's 8-core spin-heavy shapes (the
+# barrier/mutex configs where every cycle is spin or lock traffic) at enough
+# iterations for the period-collapse monitor to amortize its detection
+# warmup (the sw/tas whole-cluster state has period 8 iterations -- the
+# round-robin pointers rotate with the arrival order -- so ~3 periods are
+# simulated before the first jump lands)
+COMPILED_POLICIES = ("sw", "tas", "tree", "tree4")
+COMPILED_SFRS = (0, 100)
+COMPILED_ITERS = 128
+
+
+def _compiled_benches(compiled: bool):
+    from repro.core.scu.programs import prep_barrier_bench, prep_mutex_bench
+
+    benches = []
+    for p in COMPILED_POLICIES:
+        for sfr in COMPILED_SFRS:
+            benches.append(
+                prep_barrier_bench(
+                    p, 8, sfr=sfr, iters=COMPILED_ITERS, compiled=compiled
+                )
+            )
+        benches.append(
+            prep_mutex_bench(
+                p, 8, t_crit=10, iters=COMPILED_ITERS, compiled=compiled
+            )
+        )
+    return benches
+
+
+def run_compiled(verbose: bool = True) -> Dict:
+    """Compiled-trace vs generator execution on the spin-heavy 8-core subset.
+
+    Both passes run identical programs through the same fastforward engine;
+    the compiled pass lowers them to static micro-op traces
+    (:mod:`repro.core.scu.trace`) first, which (a) replaces per-micro-op
+    generator resumption with table fetches and (b) arms the whole-cluster
+    period-collapse monitor.  Per-config ``ClusterStats`` are asserted
+    bit-identical, so the wall-clock ratio is a same-run, same-machine
+    dispatch measure like the fleet row (lowering happens at prep time, is
+    excluded from the ratio, and is reported as ``lower_s``).
+    """
+    gen_benches = _compiled_benches(False)
+    t0 = time.perf_counter()
+    gen_results = [b.run_sequential() for b in gen_benches]
+    t_gen = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    comp_benches = _compiled_benches(True)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp_results = [b.run_sequential() for b in comp_benches]
+    t_comp = time.perf_counter() - t0
+
+    for g, c in zip(gen_results, comp_results):
+        if g.stats != c.stats:
+            raise AssertionError(
+                f"compiled trace diverged from generator on "
+                f"{g.variant}/{g.primitive}@{g.n_cores}"
+            )
+    jumps = sum(b.config.cluster.trace_jumps for b in comp_benches)
+    jumped = sum(b.config.cluster.trace_jump_cycles for b in comp_benches)
+    total_cycles = sum(r.cycles_total for r in gen_results)
+
+    result = {
+        "configs": len(gen_benches),
+        "iters": COMPILED_ITERS,
+        "cycles": total_cycles,
+        "wall_s": {"generator": t_gen, "compiled": t_comp},
+        "lower_s": t_lower,
+        "trace_jumps": jumps,
+        "trace_jump_cycles": jumped,
+        # same-run dispatch ratio (the soft-gated key)
+        "speedup": t_gen / max(t_comp, 1e-9),
+        "speedup_incl_lowering": t_gen / max(t_comp + t_lower, 1e-9),
+    }
+    if verbose:
+        print(f"\n== Compiled traces ({len(gen_benches)} spin-heavy 8-core "
+              "configs, barrier/mutex) ==")
+        print(
+            f"generator {t_gen:6.2f}s  compiled {t_comp:6.2f}s "
+            f"(+{t_lower:.2f}s lowering)  -> {result['speedup']:.2f}x  "
+            f"(bit-exact per config; {jumps} jumps collapsed "
+            f"{jumped}/{total_cycles} cycles)"
+        )
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="PATH", help="write results as JSON")
@@ -335,6 +429,7 @@ def main() -> None:
     result = run(n_cores=args.n_cores, iters=args.iters)
     result["contended"] = run_contended()
     result["fleet"] = run_fleet()
+    result["compiled"] = run_compiled()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)

@@ -21,8 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_axis_mesh, shard_map
-from repro.kernels.scu_barrier.ops import barrier
-from repro.sync import available_policies
+from repro.sync import available_policies, get_policy
 
 REGION_SIZES = [1, 2, 4, 8, 16, 32, 64]  # matmul repetitions between barriers
 N_BARRIERS = 16
@@ -35,7 +34,7 @@ def _make_step(mesh, strategy: str, region: int):
         for _ in range(N_BARRIERS):
             for _ in range(region):
                 x = jnp.tanh(x @ a)
-            cnt = barrier(jnp.ones((), jnp.float32), "x", strategy)
+            cnt = get_policy(strategy).chip_barrier(jnp.ones((), jnp.float32), "x")
             x = x + cnt * 0  # keep the barrier on the graph
         return x
 

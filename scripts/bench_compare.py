@@ -128,6 +128,11 @@ THROUGHPUT_KEYS = (
      lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup")),
     ("engine_perf/fleet/speedup_8core",
      lambda r: r.get("engine_perf", {}).get("fleet", {}).get("speedup_8core")),
+    # compiled-trace dispatch ratio: trace-lowered programs (static micro-op
+    # tables + whole-cluster period collapse) vs the same programs as
+    # generators, on the spin-heavy 8-core subset, same run / same machine
+    ("engine_perf/compiled/speedup",
+     lambda r: r.get("engine_perf", {}).get("compiled", {}).get("speedup")),
     # sweep-service dispatch ratio: drain-baseline wall over continuous
     # wall on the identical job stream, same run / same machine
     ("traffic/speedup",
@@ -331,6 +336,13 @@ def validate_schema(results: Dict) -> List[str]:
              "engine_perf.fleet.speedup: expected finite number")
         need(_is_num(fleet.get("speedup_8core")),
              "engine_perf.fleet.speedup_8core: expected finite number")
+    compiled = perf.get("compiled")
+    if need(isinstance(compiled, dict),
+            "engine_perf.compiled: missing or not a dict"):
+        need(_is_num(compiled.get("configs")),
+             "engine_perf.compiled.configs: expected finite number")
+        need(_is_num(compiled.get("speedup")),
+             "engine_perf.compiled.speedup: expected finite number")
 
     traffic = results.get("traffic")
     if need(isinstance(traffic, dict), "traffic: missing or not a dict"):

@@ -2,7 +2,8 @@
 # Offline smoke gate: the tier-1 verify command plus the fast benchmark pass.
 #
 #   ./scripts/ci.sh          # full tier-1 suite + fast benchmarks
-#   ./scripts/ci.sh --tests  # tests only (skip the benchmark pass)
+#   ./scripts/ci.sh --fast   # tests + no-jax compiled smoke, skip benchmarks
+#   ./scripts/ci.sh --tests  # tests only (skip smoke and benchmark passes)
 #
 # Everything runs offline: the suite needs no network and no optional
 # dependencies (hypothesis falls back to tests/_hypothesis_compat.py).
@@ -15,6 +16,13 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 verify: pytest =="
 python -m pytest -x -q
 
+if [[ "${1:-}" != "--tests" ]]; then
+    echo "== compiled-trace smoke without jax (REPRO_NO_JAX=1, numpy path) =="
+    # Exercises the PR-8 compiled dispatcher -- lowering, trace cursors,
+    # run_traces_xp -- in a process that never imports jax.
+    python scripts/compiled_smoke.py
+fi
+
 echo "== fault-injection parity fuzz (non-gating) =="
 # Fresh random seeds every run; tests/test_faults.py pins a fixed seed set,
 # this keeps rolling new ones.  A divergence prints the replay seed and
@@ -24,7 +32,7 @@ if ! python scripts/fault_fuzz.py --trials 20; then
          "non-gating, continuing"
 fi
 
-if [[ "${1:-}" != "--tests" ]]; then
+if [[ "${1:-}" != "--tests" && "${1:-}" != "--fast" ]]; then
     echo "== benchmark smoke: benchmarks/run.py --fast --json BENCH_tier1.json =="
     # --json seeds the perf trajectory (Table-1/Fig-5 key numbers + engine
     # throughput per mode); a jax_barriers subprocess failure exits nonzero.

@@ -1,0 +1,111 @@
+"""No-jax smoke for the compiled trace path (the ``REPRO_NO_JAX=1`` CI lane).
+
+Proves the numpy tier of the PR-8 dispatcher end to end without importing
+jax anywhere in the process:
+
+1. generator programs lower to static traces (``lower_or_fallback``) and the
+   cursor run is bit-exact against the plain generator run;
+2. ``run_traces_xp`` (the batched array executor, ``xp=numpy``) reproduces
+   the engine's counters cycle for cycle on the same traces;
+3. an untraceable (data-dependent-loop) program falls back to its generator
+   and stays bit-exact;
+4. ``sys.modules`` contains no jax at exit -- the real no-jax guarantee.
+
+Run from the repo root with ``PYTHONPATH=src`` (scripts/ci.sh does); the
+module force-sets ``REPRO_NO_JAX`` before anything from :mod:`repro` loads.
+"""
+
+import os
+import sys
+
+os.environ["REPRO_NO_JAX"] = "1"
+
+if __package__ is None and "src" not in sys.path:  # direct invocation
+    sys.path.insert(0, "src")
+
+from repro.compat import HAS_JAX  # noqa: E402
+from repro.core.scu import SCU, Cluster, Compute, Mem  # noqa: E402
+from repro.core.scu.engine import _COUNTERS  # noqa: E402
+from repro.core.scu.trace import (  # noqa: E402
+    TraceBuilder,
+    lower_or_fallback,
+    run_traces_xp,
+)
+
+N = 8
+
+
+def make_cluster():
+    return Cluster(n_cores=N, scu=SCU(n_cores=N), mode="fastforward")
+
+
+def traceable(cluster, cid):
+    # value-independent: fixed trip count, pure TCDM traffic
+    for it in range(6):
+        yield Compute(2 + cid)
+        yield Mem("sw", 0x80 + 4 * cid, 10 * cid + it)
+        yield Mem("lw", 0x80 + 4 * ((cid + 1) % N))
+        yield Mem("lw", 0x40)  # shared word: forced bank conflicts
+
+
+def data_dependent(cluster, cid):
+    yield Mem("sw", 0x200 + 4 * cid, cid % 3)
+    v = yield Mem("lw", 0x200 + 4 * cid)
+    for _ in range(v):  # trip count is a loaded value: untraceable
+        yield Compute(3)
+
+
+def check(name, got, want):
+    if got != want:
+        sys.exit(f"compiled_smoke: {name} mismatch:\n  got  {got}\n  want {want}")
+
+
+def main():
+    assert not HAS_JAX, "REPRO_NO_JAX must gate repro.compat.HAS_JAX"
+
+    # 1. lowered cursors vs generator engine
+    cl_ref = make_cluster()
+    cl_ref.load([traceable] * N)
+    ref = cl_ref.run()
+
+    cl = make_cluster()
+    lowered = [lower_or_fallback(traceable, cl, cid) for cid in range(N)]
+    assert all(p.is_traced for p in lowered), "traceable program fell back"
+    cl.load(lowered)
+    check("cursor stats", cl.run(), ref)
+
+    # 2. batched array executor vs engine counters
+    cl2 = make_cluster()
+    tables = [lower_or_fallback(traceable, cl2, cid) for cid in range(N)]
+    res = run_traces_xp(tables, n_banks=cl2.n_banks)
+    check("xp cycles", res["cycles"], ref.cycles)
+    check("xp conflicts", res["bank_conflicts"], ref.bank_conflicts)
+    for i, cname in enumerate(_COUNTERS):
+        check(
+            f"xp counter {cname}",
+            res["counters"][cname].tolist(),
+            [getattr(c, cname) for c in ref.cores],
+        )
+
+    # 3. untraceable program: declared fallback, still bit-exact
+    cl3 = make_cluster()
+    cl3.load([data_dependent] * N)
+    ref3 = cl3.run()
+    cl4 = make_cluster()
+    fb = [lower_or_fallback(data_dependent, cl4, cid) for cid in range(N)]
+    assert not any(p.is_traced for p in fb), "untraceable program got traced"
+    cl4.load(fb)
+    check("fallback stats", cl4.run(), ref3)
+
+    # 4. the whole run never touched jax
+    leaked = [m for m in sys.modules if m == "jax" or m.startswith("jax.")]
+    assert not leaked, f"jax leaked into the no-jax lane: {leaked[:3]}"
+
+    print(
+        f"compiled_smoke: OK -- {N} cores, cursor+xp+fallback bit-exact, "
+        f"cycles={ref.cycles}, no jax imported"
+    )
+
+
+if __name__ == "__main__":
+    main()

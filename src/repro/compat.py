@@ -1,18 +1,49 @@
-"""jax version-portability shims.
+"""jax availability + version-portability shims.
 
 The repo targets current jax APIs (``jax.shard_map``, ``jax.sharding.
 AxisType``, ``pltpu.CompilerParams``); the pinned container jax may predate
 them.  Every version-sensitive construct is funneled through this module so
 the rest of the code reads as if it were written against one jax.
+
+The simulator core and the compiled trace path are pure numpy and must run
+where jax is absent (or deliberately disabled with ``REPRO_NO_JAX=1``, the
+CI fast lane): :data:`HAS_JAX` is the single gate, and the shims below raise
+a clear ImportError only when actually called without jax.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.experimental.pallas import tpu as pltpu
-from jax.sharding import Mesh
+import os
 
-__all__ = ["CompilerParams", "axis_size", "make_axis_mesh", "shard_map"]
+__all__ = [
+    "HAS_JAX",
+    "CompilerParams",
+    "axis_size",
+    "make_axis_mesh",
+    "require_jax",
+    "shard_map",
+]
+
+if os.environ.get("REPRO_NO_JAX"):
+    jax = None
+else:
+    try:
+        import jax
+    except ImportError:  # pragma: no cover - container always ships jax
+        jax = None
+
+HAS_JAX = jax is not None
+
+
+def require_jax(feature: str = "this feature"):
+    """Return the jax module or raise a actionable ImportError."""
+    if jax is None:
+        raise ImportError(
+            f"{feature} needs jax, which is unavailable "
+            "(REPRO_NO_JAX set or jax not installed); the numpy simulator "
+            "and compiled-trace paths work without it"
+        )
+    return jax
 
 
 def axis_size(axis: str) -> int:
@@ -21,28 +52,37 @@ def axis_size(axis: str) -> int:
     ``jax.lax.axis_size`` where it exists; otherwise ``psum(1, axis)``,
     which constant-folds to a concrete int under a bound axis.
     """
-    fn = getattr(jax.lax, "axis_size", None)
+    j = require_jax("axis_size")
+    fn = getattr(j.lax, "axis_size", None)
     if fn is not None:
         return fn(axis)
-    return jax.lax.psum(1, axis)
-
-# pltpu.TPUCompilerParams was renamed to pltpu.CompilerParams in newer jax.
-CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams"
-)
+    return j.lax.psum(1, axis)
 
 
-def make_axis_mesh(shape, axes) -> Mesh:
+if HAS_JAX:
+    from jax.experimental.pallas import tpu as pltpu
+
+    # pltpu.TPUCompilerParams was renamed to pltpu.CompilerParams in newer jax.
+    CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+else:
+    CompilerParams = None
+
+
+def make_axis_mesh(shape, axes):
     """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
-    axis_type = getattr(jax.sharding, "AxisType", None)
+    j = require_jax("make_axis_mesh")
+    axis_type = getattr(j.sharding, "AxisType", None)
     if axis_type is not None:
-        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+        return j.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return j.make_mesh(shape, axes)
 
 
 def shard_map(f, mesh, in_specs, out_specs):
     """``jax.shard_map``, falling back to the experimental spelling."""
-    sm = getattr(jax, "shard_map", None)
+    j = require_jax("shard_map")
+    sm = getattr(j, "shard_map", None)
     if sm is None:
         from jax.experimental.shard_map import shard_map as sm
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

@@ -633,6 +633,11 @@ class Cluster:
         self.ff_cycles = 0  # cycles covered by those jumps
         self.ff_batch_spans = 0  # number of spin-phase batch jumps taken
         self.ff_batch_cycles = 0  # cycles covered by those jumps
+        # compiled-trace fast path (armed by load() when every core runs a
+        # pure TraceProgram cursor; see repro.core.scu.trace)
+        self._trace_monitor = None
+        self.trace_jumps = 0  # whole-cluster period collapses taken
+        self.trace_jump_cycles = 0  # cycles covered by those collapses
 
     # ------------------------------------------------------------------ api
     def load(self, programs: List[Program]) -> None:
@@ -648,6 +653,26 @@ class Cluster:
             self.cores = [_Core(i, prog(self, i)) for i, prog in enumerate(programs)]
         self.stats = ClusterStats()
         self._n_done = 0
+        # Arm the compiled-trace period collapse when the *entire* cluster
+        # state is static trace state: every core a pure table cursor, no
+        # fault plan rewriting state mid-run, no watchdog measuring wall
+        # progress.  (Generator fallbacks hold opaque Python frames the
+        # digest cannot cover, so one fallback disables the whole monitor.)
+        self._trace_monitor = None
+        if (
+            self.mode == "fastforward"
+            and self.faults is None
+            and (self.scu is None or self.scu.watchdog is None)
+            and self.cores
+            and all(
+                getattr(c.gen, "_is_trace_cursor", False) for c in self.cores
+            )
+        ):
+            from .trace import TraceRunMonitor  # deferred: trace imports us
+
+            self._trace_monitor = TraceRunMonitor(
+                self, [c.gen for c in self.cores]
+            )
 
     def run(self, max_cycles: int = 10_000_000) -> ClusterStats:
         self.max_cycles = max_cycles
@@ -702,7 +727,13 @@ class Cluster:
         step = self._step_vec if self.vectorized else self.step
         scu = self.scu
         has_wd = scu is not None and scu.watchdog is not None
+        monitor = self._trace_monitor
         while self._n_done < self.n_cores:
+            if monitor is not None:
+                # compiled-trace tier: digest the full cluster state at
+                # loop-head crossings; a recurring digest collapses all
+                # remaining periods into one multiply of the stat deltas
+                monitor.poll()
             if self.cycle >= max_cycles:
                 self._raise_timeout(max_cycles)
             bound = self.next_event_bound()

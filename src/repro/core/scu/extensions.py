@@ -110,6 +110,11 @@ class Barrier:
             return n
         return 0
 
+    def state_key(self):
+        """Hashable snapshot of every field ``evaluate`` reads or writes
+        (the compiled-trace monitor's recurrence digest)."""
+        return (self.worker_mask, self.target_mask, self.status)
+
 
 @dataclasses.dataclass
 class Mutex:
@@ -148,6 +153,10 @@ class Mutex:
             base_units[elected].buffer_set(_EV_MUTEX)
             return 1
         return 0
+
+    def state_key(self):
+        """Hashable snapshot for the compiled-trace recurrence digest."""
+        return (self.owner, self.message, tuple(self.pending))
 
 
 @dataclasses.dataclass
@@ -249,3 +258,15 @@ class EventFifo:
             base_units[cid].buffer_set(_EV_FIFO)
             n += 1
         return n
+
+    def state_key(self):
+        """Hashable snapshot for the compiled-trace recurrence digest.
+
+        Deliberately includes the monotone ``pushed``/``dropped`` counters:
+        they are observable in benchmark output, so a state carrying them
+        never recurs and FIFO-driven programs are simply never collapsed
+        (correct by construction rather than by a special case)."""
+        return (
+            tuple(self.fifo), tuple(self.poppers), tuple(self.pushers),
+            tuple(sorted(self.messages.items())), self.dropped, self.pushed,
+        )

@@ -226,8 +226,125 @@ def scu_mutex_section(
     yield Scu("write", ("mutex", mutex_id, "unlock"), 0)
 
 
-# Legacy spelling of the paper's triad, kept for backward compatibility.
-# The authoritative list of disciplines (including extensions such as the
-# log-depth tree barrier) is ``repro.sync.available_policies()``; these
-# uppercase names resolve there via aliases.
-VARIANTS = ("SCU", "TAS", "SW")
+# ---------------------------------------------------------------------------
+# Trace-IR emitters (repro.core.scu.trace)
+#
+# The SW/TAS barrier and the TAS mutex are the value-*dependent* primitives:
+# their generators branch on loaded values (the arrival count, the TAS
+# re-test), so sentinel tracing rejects them.  These twins express the same
+# control flow as explicit BR/JMP rows over the trace register R, which
+# mirrors the engine's resume_value -- the row streams they produce are
+# bit-identical to the generators under every schedule (the lowering parity
+# suite in tests/test_trace.py holds them to that at 8/64/256 cores).
+# ---------------------------------------------------------------------------
+
+
+def trace_sw_barrier_body(tb, cid: int, st: BarrierState, cm: CostModel,
+                          idle_wait: bool) -> None:
+    """One sense-reversal barrier iteration as trace rows (SW/TAS twins).
+
+    Mirrors :func:`_sw_barrier_body` row for row; the last-arrival decision
+    becomes ``BR_EQ(n-1)`` on the loaded counter value.  Mutates the shared
+    ``local_sense`` exactly like the generator -- the trace *replaces* the
+    generator, consuming the same one build of the barrier state.
+    """
+    n = st.n_cores
+    sense = st.local_sense[cid] ^ 1
+    st.local_sense[cid] = sense
+    tb.compute(cm.call + cm.sense_setup)
+    tb.poll(
+        "tas", A_BAR_LOCK, _TAS_FREE,
+        hit_cycles=1, miss_cycles=1 + cm.branch_taken,
+        hit_instr=1, miss_instr=1,
+    )
+    if cm.crit_extra > 0:
+        tb.compute(cm.crit_extra)
+    tb.mem("lw", A_BAR_COUNT)  # R = c
+    tb.compute(1 + cm.load_use)
+    br_last = tb.br_eq(n - 1)  # c + 1 == n -> last arrival
+    # -- not the last arrival: publish c+1, release the lock, wait ----------
+    tb.compute(1)
+    tb.mem_delta("sw", A_BAR_COUNT, 1)  # store R + 1
+    tb.mem("sw", A_BAR_LOCK, 0)
+    if idle_wait:
+        recheck = tb.label()
+        tb.mem("lw", A_BAR_SENSE)  # R = s
+        tb.compute(1 + cm.load_use)
+        br_out = tb.br_eq(sense)
+        tb.compute(cm.mask_setup)
+        tb.scu("elw", ("notifier", 0, "wait"))
+        tb.compute(1 + cm.branch_taken)
+        tb.jmp(recheck)
+        tb.set_target(br_out, tb.label())
+    else:
+        tb.poll(
+            "lw", A_BAR_SENSE, sense,
+            hit_cycles=1 + cm.load_use,
+            miss_cycles=1 + cm.load_use + cm.branch_taken,
+            hit_instr=1, miss_instr=2,
+        )
+    tb.compute(cm.ret)
+    j_end = tb.jmp()
+    # -- last arrival: reset, flip the shared sense, release ----------------
+    tb.set_target(br_last, tb.label())
+    tb.compute(1)
+    tb.mem("sw", A_BAR_COUNT, 0)
+    tb.mem("sw", A_BAR_SENSE, sense)
+    tb.mem("sw", A_BAR_LOCK, 0)
+    if idle_wait:
+        tb.scu("write", ("notifier", 0, "trigger"), 0)
+    tb.compute(cm.ret)
+    tb.set_target(j_end, tb.label())
+
+
+def trace_tas_mutex_section(tb, cid: int, t_crit: int, cm: CostModel) -> None:
+    """One TAS idle-wait critical section as trace rows.
+
+    Mirrors :func:`tas_mutex_section`: the test-and-test-and-set re-test
+    loop becomes BR rows on the TAS / re-test load values.
+    """
+    tb.mem("tas", A_MUTEX)  # R = v
+    br_acq0 = tb.br_eq(_TAS_FREE)
+    tb.compute(1 + cm.branch_taken)  # first-attempt bnez taken
+    wait = tb.label()
+    tb.compute(cm.mask_setup)
+    tb.scu("elw", ("notifier", 1, "wait"))
+    tb.mem("lw", A_MUTEX)  # R = t (re-test before the atomic)
+    tb.compute(1 + cm.load_use)
+    br_retry = tb.br_eq(_TAS_FREE)
+    tb.compute(cm.branch_taken)
+    tb.jmp(wait)  # someone else was elected; back to sleep
+    tb.set_target(br_retry, tb.label())
+    tb.mem("tas", A_MUTEX)  # R = v
+    br_acq1 = tb.br_eq(_TAS_FREE)
+    tb.jmp(wait)  # lost the race; no first-attempt branch this time
+    acquired = tb.label()
+    tb.set_target(br_acq0, acquired)
+    tb.set_target(br_acq1, acquired)
+    tb.compute(1)  # bnez falls through
+    if t_crit > 0:
+        tb.compute(t_crit)
+    tb.mem("sw", A_MUTEX, 0)
+    tb.scu("write", ("notifier", 1, "trigger"), 0)
+
+
+def _deprecated_variants():
+    import warnings
+
+    warnings.warn(
+        "repro.core.scu.primitives.VARIANTS is deprecated; use "
+        "repro.sync.available_policies() (legacy uppercase spellings "
+        "resolve via aliases)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return ("SCU", "TAS", "SW")
+
+
+def __getattr__(name: str):
+    # Legacy spelling of the paper's triad, kept as a deprecation shim only.
+    # The authoritative list of disciplines (including extensions such as
+    # the tree and fifo policies) is ``repro.sync.available_policies()``.
+    if name == "VARIANTS":
+        return _deprecated_variants()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -56,6 +56,75 @@ def _make_cluster(n_cores: int, mode: str = "fastforward") -> Cluster:
     return Cluster(n_cores=n_cores, scu=SCU(n_cores=n_cores), mode=mode)
 
 
+def _lower_loop_programs(
+    cl: Cluster,
+    n_cores: int,
+    programs,
+    n_iters: int,
+    emit_iter=None,
+    frag_iter=None,
+    label: str = "",
+):
+    """Lower per-core iteration-loop programs to :class:`TraceProgram`s.
+
+    Strategy per core: the policy's explicit per-iteration trace emitter
+    when it has one (``emit_iter``), marked per-iteration sentinel tracing
+    when the policy declared its fragment trace-safe (``frag_iter``), else a
+    declared generator fallback -- policies whose fragments depend on
+    cross-core execution order (shared Python state the sentinel cannot
+    observe) must never be sentinel-traced, so the absence of both hooks
+    forces the fallback rather than attempting it.
+    """
+    from .trace import TraceProgram, lower_or_fallback
+
+    out = []
+    for cid in range(n_cores):
+        program = programs[cid]
+        if emit_iter is not None:
+
+            def emit(tb, cid=cid):
+                for it in range(n_iters):
+                    tb.mark()
+                    emit_iter(tb, cid, it)
+
+            out.append(
+                lower_or_fallback(program, cl, cid, emit=emit, label=f"{label}:{cid}")
+            )
+        elif frag_iter is not None:
+
+            def frags(cid=cid):
+                return [
+                    (lambda cid=cid, it=it: frag_iter(cid, it))
+                    for it in range(n_iters)
+                ]
+
+            out.append(
+                lower_or_fallback(
+                    program, cl, cid, fragments=frags, label=f"{label}:{cid}"
+                )
+            )
+        else:
+            out.append(TraceProgram(fallback=program, label=f"{label}:fb:{cid}"))
+    return out
+
+
+def _lower_whole_programs(cl: Cluster, programs, trace_safe: bool, label: str = ""):
+    """Lower pre-built (monolithic) per-core programs: whole-program sentinel
+    tracing when the policy declared the fragments order-independent, else
+    declared generator fallbacks for every core."""
+    from .trace import TraceProgram, lower_or_fallback
+
+    if not trace_safe:
+        return [
+            TraceProgram(fallback=p, label=f"{label}:fb:{cid}")
+            for cid, p in enumerate(programs)
+        ]
+    return [
+        lower_or_fallback(p, cl, cid, label=f"{label}:{cid}")
+        for cid, p in enumerate(programs)
+    ]
+
+
 def _finalizer(
     variant: str,
     primitive: str,
@@ -137,9 +206,14 @@ def make_fleet(benches: Sequence[FleetBench]) -> List[MicrobenchResult]:
 
 def prep_barrier_bench(
     variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None,
-    mode: str = "fastforward",
+    mode: str = "fastforward", compiled: bool = False,
 ) -> FleetBench:
-    """Prepare (without running) a barrier microbenchmark config."""
+    """Prepare (without running) a barrier microbenchmark config.
+
+    ``compiled=True`` lowers every core's program to a static trace
+    (:mod:`repro.core.scu.trace`) -- bit-exact stats, and fully-traced runs
+    collapse repeated whole-cluster periods instead of simulating them.
+    """
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
 
     policy = get_policy(variant)
@@ -153,15 +227,36 @@ def prep_barrier_bench(
                 yield Compute(sfr)
             yield from policy.sim_barrier(cluster, cid, state, cm)
 
+    programs = [program] * n_cores
+    if compiled:
+        emit_iter = frag_iter = None
+        if policy.trace_barrier is not None:
+
+            def emit_iter(tb, cid, it):
+                if sfr > 0:
+                    tb.compute(sfr)
+                policy.trace_barrier(tb, cl, cid, state, cm)
+
+        elif policy.trace_safe_barrier:
+
+            def frag_iter(cid, it):
+                if sfr > 0:
+                    yield Compute(sfr)
+                yield from policy.sim_barrier(cl, cid, state, cm)
+
+        programs = _lower_loop_programs(
+            cl, n_cores, programs, iters, emit_iter, frag_iter,
+            label=f"{variant}:barrier",
+        )
     return FleetBench(
-        config=FleetConfig(cluster=cl, programs=[program] * n_cores),
+        config=FleetConfig(cluster=cl, programs=programs),
         finalize=_finalizer(variant, "barrier", n_cores, sfr, iters, float(sfr)),
     )
 
 
 def run_barrier_bench(
     variant: str, n_cores: int, sfr: int = 0, iters: int = 256, cost_model=None,
-    mode: str = "fastforward",
+    mode: str = "fastforward", compiled: bool = False,
 ) -> MicrobenchResult:
     """Loop of ``iters`` (SFR-compute + barrier) on every core.
 
@@ -171,13 +266,14 @@ def run_barrier_bench(
     ``"lockstep"`` is the cycle-by-cycle reference -- identical stats).
     """
     return prep_barrier_bench(
-        variant, n_cores, sfr=sfr, iters=iters, cost_model=cost_model, mode=mode
+        variant, n_cores, sfr=sfr, iters=iters, cost_model=cost_model,
+        mode=mode, compiled=compiled,
     ).run_sequential()
 
 
 def prep_mutex_bench(
     variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
-    cost_model=None, mode: str = "fastforward",
+    cost_model=None, mode: str = "fastforward", compiled: bool = False,
 ) -> FleetBench:
     """Prepare (without running) a mutex microbenchmark config."""
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
@@ -193,9 +289,30 @@ def prep_mutex_bench(
                 yield Compute(sfr)
             yield from policy.sim_mutex(cluster, cid, t_crit, state, cm)
 
+    programs = [program] * n_cores
+    if compiled:
+        emit_iter = frag_iter = None
+        if policy.trace_mutex is not None:
+
+            def emit_iter(tb, cid, it):
+                if sfr > 0:
+                    tb.compute(sfr)
+                policy.trace_mutex(tb, cl, cid, t_crit, state, cm)
+
+        elif policy.trace_safe_mutex:
+
+            def frag_iter(cid, it):
+                if sfr > 0:
+                    yield Compute(sfr)
+                yield from policy.sim_mutex(cl, cid, t_crit, state, cm)
+
+        programs = _lower_loop_programs(
+            cl, n_cores, programs, iters, emit_iter, frag_iter,
+            label=f"{variant}:mutex",
+        )
     ideal = float(n_cores * t_crit + sfr)
     return FleetBench(
-        config=FleetConfig(cluster=cl, programs=[program] * n_cores),
+        config=FleetConfig(cluster=cl, programs=programs),
         finalize=_finalizer(
             variant, f"mutex_t{t_crit}", n_cores, sfr, iters, ideal
         ),
@@ -204,7 +321,7 @@ def prep_mutex_bench(
 
 def run_mutex_bench(
     variant: str, n_cores: int, t_crit: int = 0, sfr: int = 0, iters: int = 256,
-    cost_model=None, mode: str = "fastforward",
+    cost_model=None, mode: str = "fastforward", compiled: bool = False,
 ) -> MicrobenchResult:
     """Loop of (SFR-compute + critical section) on every core.
 
@@ -214,7 +331,7 @@ def run_mutex_bench(
     """
     return prep_mutex_bench(
         variant, n_cores, t_crit=t_crit, sfr=sfr, iters=iters,
-        cost_model=cost_model, mode=mode,
+        cost_model=cost_model, mode=mode, compiled=compiled,
     ).run_sequential()
 
 
@@ -275,6 +392,7 @@ def prep_chain_bench(
     depth: int = 8,
     cost_model=None,
     mode: str = "fastforward",
+    compiled: bool = False,
 ) -> FleetBench:
     """Prepare (without running) a pipelined-chain microbenchmark config."""
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
@@ -282,10 +400,49 @@ def prep_chain_bench(
     policy = get_policy(variant)
     cl = _make_cluster(n_cores, mode)
     state = policy.make_sim_state(n_cores)
+    cm = cost_model or DEFAULT_COSTS
     work = [[sfr] * n_cores for _ in range(iters)]
     programs = make_pipeline_programs(
         policy, cl, n_cores, work, state, cost_model, depth
     )
+    if compiled:
+        if getattr(policy, "make_pipeline_programs", None) is not None:
+            # native (FIFO) chain: monolithic per-core programs, traced whole
+            programs = _lower_whole_programs(
+                cl, programs, policy.trace_safe_barrier,
+                label=f"{variant}:chain",
+            )
+        else:
+            # barrier-synchronous emulation: per-tick loop, same lowering
+            # split as the barrier bench
+            emit_iter = frag_iter = None
+
+            def _tick_work(cid, tick):
+                item = tick - cid
+                if 0 <= item < iters:
+                    return int(work[item][cid])
+                return 0
+
+            if policy.trace_barrier is not None:
+
+                def emit_iter(tb, cid, tick):
+                    w = _tick_work(cid, tick)
+                    if w > 0:
+                        tb.compute(w)
+                    policy.trace_barrier(tb, cl, cid, state, cm)
+
+            elif policy.trace_safe_barrier:
+
+                def frag_iter(cid, tick):
+                    w = _tick_work(cid, tick)
+                    if w > 0:
+                        yield Compute(w)
+                    yield from policy.sim_barrier(cl, cid, state, cm)
+
+            programs = _lower_loop_programs(
+                cl, n_cores, programs, iters + n_cores - 1, emit_iter,
+                frag_iter, label=f"{variant}:chain",
+            )
     return FleetBench(
         config=FleetConfig(cluster=cl, programs=programs),
         finalize=_finalizer(
@@ -302,6 +459,7 @@ def run_chain_bench(
     depth: int = 8,
     cost_model=None,
     mode: str = "fastforward",
+    compiled: bool = False,
 ) -> MicrobenchResult:
     """Pipelined producer-consumer chain: ``n_cores`` stages, ``iters`` items.
 
@@ -315,7 +473,7 @@ def run_chain_bench(
     """
     return prep_chain_bench(
         variant, n_cores, sfr=sfr, iters=iters, depth=depth,
-        cost_model=cost_model, mode=mode,
+        cost_model=cost_model, mode=mode, compiled=compiled,
     ).run_sequential()
 
 
@@ -429,6 +587,7 @@ def prep_work_queue_bench(
     t_consume: int = 30,
     cost_model=None,
     mode: str = "fastforward",
+    compiled: bool = False,
 ) -> FleetBench:
     """Prepare (without running) a multi-producer work-queue config."""
     from repro.sync import get_policy  # deferred: repro.sync imports this pkg
@@ -441,6 +600,16 @@ def prep_work_queue_bench(
         policy, n_producers, n_consumers, items, t_produce, t_consume,
         state, cost_model,
     )
+    if compiled:
+        # the native FIFO queue programs are value- and order-independent
+        # (trace-safe); the generic mutex-protected queue branches on shared
+        # Python-side occupancy in cross-core execution order, so every
+        # non-native policy is a declared generator fallback
+        native = getattr(policy, "make_work_queue_programs", None) is not None
+        programs = _lower_whole_programs(
+            cl, programs, native and policy.trace_safe_barrier,
+            label=f"{variant}:wq",
+        )
     ideal = items * max(t_produce / n_producers, t_consume / n_consumers)
     return FleetBench(
         config=FleetConfig(cluster=cl, programs=programs),
@@ -460,6 +629,7 @@ def run_work_queue_bench(
     t_consume: int = 30,
     cost_model=None,
     mode: str = "fastforward",
+    compiled: bool = False,
 ) -> MicrobenchResult:
     """Multi-producer work queue: P producers feed C consumers through one
     shared queue; every policy supplies its own queue discipline (see
@@ -473,6 +643,7 @@ def run_work_queue_bench(
     return prep_work_queue_bench(
         variant, n_producers, n_consumers, items=items, t_produce=t_produce,
         t_consume=t_consume, cost_model=cost_model, mode=mode,
+        compiled=compiled,
     ).run_sequential()
 
 

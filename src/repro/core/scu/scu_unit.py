@@ -286,6 +286,26 @@ class SCU:
     def attach(self, cluster) -> None:
         self.cluster = cluster
 
+    def state_key(self):
+        """Hashable snapshot of the complete SCU state.
+
+        Used by the compiled-trace monitor (:mod:`repro.core.scu.trace`) as
+        part of its whole-cluster recurrence digest: two equal keys mean the
+        unit will evolve identically from both points.  Covers the per-core
+        register file, every extension instance's own ``state_key`` and the
+        latched elw wait masks; the armed sets are derivable from extension
+        state and the drop filter is fault-only (the monitor is disabled
+        under fault plans), so neither is included."""
+        base = self.base
+        return (
+            base.ev_buf.tobytes(), base.ev_mask.tobytes(),
+            base.irq_mask.tobytes(), base.ntf_target.tobytes(),
+            self.elw_wait.tobytes(), frozenset(self._elw_pending),
+            tuple(b.state_key() for b in self.barriers),
+            tuple(m.state_key() for m in self.mutexes),
+            tuple(f.state_key() for f in self.fifos),
+        )
+
     def adopt_views(
         self,
         ev_buf: np.ndarray,

@@ -1,9 +1,16 @@
-"""Legacy home of the training-layer sync strategies.
+"""DEPRECATED legacy home of the training-layer sync strategies.
 
-The implementations moved to the unified :mod:`repro.sync` policy registry;
-:mod:`repro.core.sync.strategies` remains as a compatibility shim.
+The implementations live in the unified :mod:`repro.sync` policy registry;
+this package only forwards (with a :class:`DeprecationWarning`) through
+:mod:`repro.core.sync.strategies`.
 """
 
-from repro.core.sync.strategies import STRATEGIES, opt_state_specs, shape_gradients
-
 __all__ = ["STRATEGIES", "opt_state_specs", "shape_gradients"]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        from repro.core.sync import strategies
+
+        return getattr(strategies, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

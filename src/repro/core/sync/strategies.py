@@ -1,38 +1,45 @@
-"""Backward-compat shim over the unified ``repro.sync`` policy registry.
+"""DEPRECATED compatibility shim -- use the :mod:`repro.sync` registry.
 
-The training-schedule implementations that used to live here (the paper's
-three disciplines transplanted to the gradient-synchronization schedule of
-a data-parallel step -- see ``repro/sync/policies.py`` for the mapping)
-are now layer (c) of the :class:`repro.sync.SyncPolicy` objects.  This
-module keeps the old string-keyed call surface working:
-
-  * ``STRATEGIES``                 -- the paper's original triad (frozen for
-    compatibility; use :func:`repro.sync.available_policies` to enumerate
-    every registered discipline, including extensions like ``tree``),
-  * ``shape_gradients(strategy, ...)`` / ``opt_state_specs(strategy, ...)``
-    -- dispatch through the registry.
+The training-schedule implementations that used to live here are layer (c)
+of the :class:`repro.sync.SyncPolicy` objects; every attribute below is a
+one-line deprecation wrapper that warns and forwards.  Enumerate
+disciplines with :func:`repro.sync.available_policies` and dispatch with
+:func:`repro.sync.get_policy` instead.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
-
-from jax.sharding import Mesh
-
-from repro.sync import get_policy
 
 __all__ = ["STRATEGIES", "shape_gradients", "opt_state_specs"]
 
-STRATEGIES = ("scu", "tas", "sw")
+
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.sync.strategies.{name} is deprecated; use the "
+        "repro.sync registry (get_policy / available_policies)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
-def shape_gradients(
-    strategy: str, grads: Any, params_shape: Any, mesh: Mesh, cfg=None
-) -> Any:
-    """Impose the named policy's synchronization discipline on the grads."""
+def shape_gradients(strategy: str, grads: Any, params_shape: Any, mesh, cfg=None):
+    _warn("shape_gradients")
+    from repro.sync import get_policy
+
     return get_policy(strategy).shape_gradients(grads, params_shape, mesh, cfg=cfg)
 
 
-def opt_state_specs(strategy: str, params_shape: Any, mesh: Mesh, cfg=None) -> Any:
-    """Sharding specs for master/m/v under the named policy."""
+def opt_state_specs(strategy: str, params_shape: Any, mesh, cfg=None):
+    _warn("opt_state_specs")
+    from repro.sync import get_policy
+
     return get_policy(strategy).opt_state_specs(params_shape, mesh, cfg=cfg)
+
+
+def __getattr__(name: str):
+    if name == "STRATEGIES":
+        _warn("STRATEGIES")
+        return ("scu", "tas", "sw")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

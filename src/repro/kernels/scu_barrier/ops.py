@@ -6,8 +6,9 @@ paper's Fig. 5 at device scale with real wall-clock timings (host devices
 here, TPUs in production).
 
 The per-discipline collective bodies live on the ``repro.sync`` policy
-objects (``repro/sync/policies.py`` and ``repro/sync/tree.py``); this
-module is the backward-compatible call surface.  Every discipline returns
+objects (``repro/sync/policies.py`` and ``repro/sync/tree.py``); dispatch
+through ``repro.sync.get_policy(name).chip_barrier`` -- :func:`barrier`
+remains only as a deprecated alias.  Every discipline returns
 the same value -- the arrival count, derived from the values it actually
 exchanged -- and differs only in collective structure, like the paper's
 variants (``ref_barrier_count`` is the test oracle for that equivalence).
@@ -29,14 +30,21 @@ def ref_barrier_count(arrive: jnp.ndarray, axis: str) -> jnp.ndarray:
 
 
 def barrier(arrive: jnp.ndarray, axis: str, strategy: str = "scu") -> jnp.ndarray:
-    """Inside shard_map/pmap: synchronize the ``axis`` group.
+    """DEPRECATED alias: call ``get_policy(strategy).chip_barrier`` directly.
 
-    ``arrive`` is this device's arrival word (1).  Returns the summed count
-    (== group size), with collective structure per the named ``repro.sync``
-    policy (``scu``, ``tas``, ``sw``, ``tree``, or any registered since).
+    Kept as a one-line warning wrapper for external callers; every in-repo
+    call site dispatches through the :mod:`repro.sync` registry.
     """
+    import warnings
+
     from repro.sync import get_policy
 
+    warnings.warn(
+        "repro.kernels.scu_barrier.ops.barrier is deprecated; use "
+        "repro.sync.get_policy(strategy).chip_barrier(arrive, axis)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return get_policy(strategy).chip_barrier(arrive, axis)
 
 

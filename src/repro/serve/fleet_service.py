@@ -59,8 +59,29 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.scu.engine import ClusterStats, FleetConfig, SlotFleet
+from repro.core.scu.trace import TraceProgram
 
 __all__ = ["SweepJob", "QueueFull", "RetryPolicy", "FleetService"]
+
+
+def _fresh_traces(config: FleetConfig) -> FleetConfig:
+    """Clone any single-use :class:`TraceProgram`s in a config.
+
+    Trace programs are consumed on first call (mirroring ``FaultPlan``), but
+    a retry ``factory(attempt)`` commonly rebuilds only the cluster and
+    reuses the lowered tables -- lowering is the expensive part.  Cloning at
+    admission-config construction keeps that pattern valid: every attempt
+    gets fresh cursors over the same immutable row tables.
+    """
+    if not any(isinstance(p, TraceProgram) for p in config.programs):
+        return config
+    return dataclasses.replace(
+        config,
+        programs=[
+            p.clone() if isinstance(p, TraceProgram) else p
+            for p in config.programs
+        ],
+    )
 
 
 class QueueFull(RuntimeError):
@@ -233,7 +254,7 @@ class FleetService:
         if (config is None) == (factory is None):
             raise ValueError("submit: pass exactly one of config or factory")
         if config is None:
-            config = factory(1)
+            config = _fresh_traces(factory(1))
         self.fleet.validate(config)
         if len(self.queue) >= self.queue_limit:
             raise QueueFull(
@@ -358,9 +379,9 @@ class FleetService:
             and job.fallback_factory is not None
         ):
             job.degraded = True
-            return job.fallback_factory(nxt)
+            return _fresh_traces(job.fallback_factory(nxt))
         if job.factory is not None:
-            return job.factory(nxt)
+            return _fresh_traces(job.factory(nxt))
         return None
 
     # ------------------------------------------------------------- admission

@@ -108,6 +108,24 @@ class PolicyDef:
     # consumers).  Policies without it fall back to the mutex-protected
     # shared-queue emulation in ``core/scu/programs.py``.
     make_work_queue_programs: Optional[Callable[..., Any]] = None
+    # --- compiled-trace lowering hooks (repro.core.scu.trace) -------------
+    # ``trace_barrier(tb, cluster, cid, state, cost_model)`` /
+    # ``trace_mutex(tb, cluster, cid, t_crit, state, cost_model)`` emit ONE
+    # iteration of the primitive as static trace rows into a
+    # ``TraceBuilder`` -- needed when the generator's op stream depends on
+    # runtime values (the sense-reversal count check, the TAS re-test), so
+    # the value-dependent control flow must be expressed as explicit BR/JMP
+    # rows.  ``trace_safe_barrier``/``trace_safe_mutex`` declare the
+    # generator fragment free of *cross-core-order-dependent shared Python
+    # state*, which makes per-core sentinel tracing sound (value-dependence
+    # is proven mechanically by the sentinel; order-dependence -- e.g. the
+    # fifo mutex's seed-once token -- cannot be, hence the explicit flag).
+    # With neither an emitter nor a safety flag, lowering falls back to the
+    # generator path: always correct, never collapsed.
+    trace_barrier: Optional[Callable[..., Any]] = None
+    trace_mutex: Optional[Callable[..., Any]] = None
+    trace_safe_barrier: bool = False
+    trace_safe_mutex: bool = False
 
 
 # name (and alias) -> policy, in registration order (order is meaningful:

@@ -350,4 +350,9 @@ FIFO = register_policy(PolicyDef(
     opt_state_specs=zero_opt_state_specs,
     make_pipeline_programs=fifo_pipeline_programs,
     make_work_queue_programs=fifo_work_queue_programs,
+    # the barrier's push/elw sequence is fixed by (cid, n) alone; the mutex
+    # is NOT trace-safe: ``mutex_seeded`` is shared Python state mutated in
+    # cross-core execution order, which per-core sentinel tracing cannot
+    # observe -- it stays on the generator fallback
+    trace_safe_barrier=True,
 ))

@@ -46,6 +46,8 @@ from repro.core.scu.primitives import (
     sw_mutex_section,
     tas_barrier,
     tas_mutex_section,
+    trace_sw_barrier_body,
+    trace_tas_mutex_section,
 )
 
 __all__ = ["SCU", "TAS", "SW"]
@@ -83,6 +85,25 @@ def _tas_sim_barrier(cluster, cid, state, cost_model=None):
 
 def _tas_sim_mutex(cluster, cid, t_crit, state, cost_model=None):
     yield from tas_mutex_section(cluster, cid, t_crit, cost_model or DEFAULT_COSTS)
+
+
+# Trace-IR lowerings (repro.core.scu.trace).  The sw/tas barriers and the
+# tas mutex branch on *observed* TCDM values (arrival count, lock word), so
+# sentinel tracing cannot linearize them -- they get explicit emitters that
+# encode the branches as BR rows.  The sw mutex and both scu fragments are
+# value-independent, so per-core sentinel tracing is declared safe instead.
+
+
+def _sw_trace_barrier(tb, cluster, cid, state, cost_model=None):
+    trace_sw_barrier_body(tb, cid, state, cost_model or DEFAULT_COSTS, idle_wait=False)
+
+
+def _tas_trace_barrier(tb, cluster, cid, state, cost_model=None):
+    trace_sw_barrier_body(tb, cid, state, cost_model or DEFAULT_COSTS, idle_wait=True)
+
+
+def _tas_trace_mutex(tb, cluster, cid, t_crit, state, cost_model=None):
+    trace_tas_mutex_section(tb, cid, t_crit, cost_model or DEFAULT_COSTS)
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +249,8 @@ SCU = register_policy(PolicyDef(
     chip_barrier=scu_chip_barrier,
     shape_gradients=zero_shape_gradients,
     opt_state_specs=zero_opt_state_specs,
+    trace_safe_barrier=True,
+    trace_safe_mutex=True,
 ))
 
 TAS = register_policy(PolicyDef(
@@ -243,6 +266,8 @@ TAS = register_policy(PolicyDef(
     chip_barrier=tas_chip_barrier,
     shape_gradients=tas_shape_gradients,
     opt_state_specs=replicated_opt_state_specs,
+    trace_barrier=_tas_trace_barrier,
+    trace_mutex=_tas_trace_mutex,
 ))
 
 SW = register_policy(PolicyDef(
@@ -258,4 +283,6 @@ SW = register_policy(PolicyDef(
     chip_barrier=sw_chip_barrier,
     shape_gradients=sw_shape_gradients,
     opt_state_specs=replicated_opt_state_specs,
+    trace_barrier=_sw_trace_barrier,
+    trace_safe_mutex=True,
 ))

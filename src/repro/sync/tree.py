@@ -196,6 +196,12 @@ def make_tree_policy(
         chip_barrier=tree_chip_barrier,
         shape_gradients=zero_shape_gradients,
         opt_state_specs=zero_opt_state_specs,
+        # the tournament's control flow is fixed by (cid, n, radix): every
+        # poll/elw wait is a linear wait on a statically-known address, so
+        # per-core sentinel tracing is sound (the mutex is sw_mutex_section,
+        # also value-independent)
+        trace_safe_barrier=True,
+        trace_safe_mutex=True,
     )
 
 

@@ -431,6 +431,36 @@ def test_no_retry_policy_keeps_fail_fast():
     assert j.error is not None and "did not finish" in j.error
 
 
+def test_retry_relowers_trace_configs():
+    """Regression (PR-8 satellite): ``TraceProgram``s are single-use
+    (cursor semantics mirror ``FaultPlan``), and a retry factory commonly
+    rebuilds only the cluster while reusing the lowered traces -- lowering
+    is the expensive part.  The service must hand every attempt fresh
+    cursors instead of letting attempt 2 crash on the consumed programs."""
+    fb = prep_barrier_bench("tas", 8, sfr=20, iters=6, compiled=True)
+    traced = fb.config.programs
+    assert all(getattr(p, "is_traced", False) for p in traced)
+    ref = prep_barrier_bench("tas", 8, sfr=20, iters=6).run_sequential().stats
+
+    def factory(attempt):
+        fresh = prep_barrier_bench("tas", 8, sfr=20, iters=6)
+        # attempt 1 is capped far below the real runtime, so it fails and
+        # forces a retry over the *same* trace objects
+        cap = 64 if attempt == 1 else 4_000_000
+        return FleetConfig(
+            cluster=fresh.config.cluster, programs=traced, max_cycles=cap
+        )
+
+    svc = FleetService(
+        n_slots=2, slot_cores=8, retry=RetryPolicy(max_attempts=3)
+    )
+    j = svc.submit(factory=factory)
+    svc.run_until_drained()
+    assert j.state == "done" and j.error is None
+    assert j.attempts == 2
+    assert j.stats == ref  # retried attempt is still bit-exact
+
+
 def test_backoff_grows_exponentially():
     """With backoff_rounds=2, factor=3 the re-queue delays are 2 then 6
     rounds: the gap between consecutive failures must grow while the

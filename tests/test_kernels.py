@@ -10,7 +10,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.scu_barrier.kernel import scu_self_signal_kernel
-from repro.kernels.scu_barrier.ops import barrier
+from repro.sync import get_policy
 from repro.kernels.scu_barrier.ref import self_signal_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
@@ -147,7 +147,7 @@ def test_barrier_strategies_equivalent(strategy):
     @jax.jit
     def run(a):
         return shard_map(
-            lambda v: barrier(v, "x", strategy),
+            lambda v: get_policy(strategy).chip_barrier(v, "x"),
             mesh=mesh,
             in_specs=P("x"),
             out_specs=P("x"),
