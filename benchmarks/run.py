@@ -17,9 +17,11 @@ event FIFO), the scaling sweeps (16/32/64/128/256-core clusters; --fast
 samples 16/64/128/256), the engine-throughput benchmark (quiescent,
 contended, fleet-dispatch and compiled-trace sweeps), the sweep-service
 traffic benchmark (continuous batching vs drain baseline on the
-slot-recycling fleet) and the resilience sweep (deterministic fault
-injection x recovery mode: retry, degradation, watchdog release), then the
-Tier-2 roofline read-out from the dry-run artifacts.  The
+slot-recycling fleet), the resilience sweep (deterministic fault
+injection x recovery mode: retry, degradation, watchdog release) and the
+fault-domain chaos sweep (domain fault rate x routing policy on the
+multi-fleet pool), then the Tier-2 roofline read-out from the dry-run
+artifacts.  The
 Table-1/Fig-5/chain/work-queue sweeps and their scaling variants dispatch
 through the batched fleet engine
 (``repro.core.scu.engine.simulate_fleet``); per-config numbers are
@@ -300,6 +302,19 @@ def _run_resilience(args):
     # fixed size under --fast and full: every metric is cycle- or
     # round-counted on a seeded deterministic run and hard-gated
     return {"resilience": resilience.run()}, 0
+
+
+@register_bench(
+    "fault_domains",
+    "Fault domains -- chaos sweep x routing policy on the fleet pool",
+    ("fault_domains",),
+)
+def _run_fault_domains(args):
+    from benchmarks import fault_domains
+
+    # fixed size under --fast and full: every metric is cycle- or
+    # round-counted on a seeded deterministic run and hard-gated
+    return {"fault_domains": fault_domains.run()}, 0
 
 
 @register_bench(

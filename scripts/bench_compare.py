@@ -9,8 +9,10 @@ wall-clock inputs), so the key numbers -- Table-1 primitive cycles, Fig-5
 minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain and
 work-queue cost, their 16..256-core scaling rows, the sweep-service
 traffic latency/idle/energy-tail metrics (counted in deterministic
-scheduler rounds), and the resilience sweep's failure/recovery metrics
-(seeded fault injection, cycle- and round-counted) -- must reproduce
+scheduler rounds), the resilience sweep's failure/recovery metrics
+(seeded fault injection, cycle- and round-counted), and the fault-domain
+chaos sweep's routing metrics (reroutes, quarantines, wasted cycles on
+the multi-fleet pool) -- must reproduce
 bit-for-bit on any machine (the sweeps dispatch through the batched fleet
 engine, which is bit-exact per config against sequential runs).  A current value more than ``threshold`` above the baseline fails
 the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
@@ -109,6 +111,15 @@ def extract_metrics(results: Dict) -> Metrics:
                       "rounds", "mean_latency_rounds", "degraded_jobs",
                       "watchdog_releases"):
                 m[f"resilience/{rate}/{mode}/{k}"] = _num(c.get(k))
+    # fault-domain chaos sweep: same story -- failure_rate, wasted cycles,
+    # reroutes and quarantines are lower-is-better counts of a seeded
+    # deterministic run (zero baselines gate any increase absolutely)
+    for rate, policies in results.get("fault_domains", {}).get("cells", {}).items():
+        for policy, c in policies.items():
+            for k in ("failure_rate", "total_attempts", "wasted_cycles",
+                      "reroutes", "quarantines", "rounds",
+                      "mean_latency_rounds", "watchdog_trips"):
+                m[f"fault_domains/{rate}/{policy}/{k}"] = _num(c.get(k))
     return m
 
 
@@ -387,6 +398,26 @@ def validate_schema(results: Dict) -> List[str]:
                               "wasted_cycles", "rounds",
                               "mean_latency_rounds", "watchdog_releases",
                               "mean_completed_cycles"):
+                        need(_is_num(c.get(k)),
+                             f"{ctx}.{k}: expected finite number")
+
+    fd = results.get("fault_domains")
+    if need(isinstance(fd, dict), "fault_domains: missing or not a dict"):
+        cells = fd.get("cells")
+        if need(isinstance(cells, dict) and cells,
+                "fault_domains.cells: missing or empty"):
+            for rate, policies in cells.items():
+                if not need(isinstance(policies, dict) and policies,
+                            f"fault_domains.cells.{rate}: missing or empty"):
+                    continue
+                for policy, c in policies.items():
+                    ctx = f"fault_domains.cells.{rate}.{policy}"
+                    if not need(isinstance(c, dict), f"{ctx}: not a dict"):
+                        continue
+                    for k in ("failure_rate", "failed_jobs", "completed_jobs",
+                              "total_attempts", "reroutes", "quarantines",
+                              "wasted_cycles", "rounds",
+                              "mean_latency_rounds", "watchdog_trips"):
                         need(_is_num(c.get(k)),
                              f"{ctx}.{k}: expected finite number")
     return errors

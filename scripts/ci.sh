@@ -31,6 +31,12 @@ if ! python scripts/fault_fuzz.py --trials 20; then
     echo "WARN: fault_fuzz found an engine-mode divergence (see seed above);" \
          "non-gating, continuing"
 fi
+# Domain lane: correlated droop/scu_blackout/bank_blackout plans over whole
+# fault domains (stresses blackout-window replay across engine tiers).
+if ! python scripts/fault_fuzz.py --trials 10 --domain-only; then
+    echo "WARN: fault_fuzz --domain-only found an engine-mode divergence" \
+         "(see seed above); non-gating, continuing"
+fi
 
 if [[ "${1:-}" != "--tests" && "${1:-}" != "--fast" ]]; then
     echo "== benchmark smoke: benchmarks/run.py --fast --json BENCH_tier1.json =="

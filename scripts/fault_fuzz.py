@@ -4,14 +4,20 @@
 Each trial draws a random workload (policy x core count x shape), a random
 :class:`FaultPlan` and optionally a watchdog, runs it under both engine
 modes and requires the identical outcome -- same stats on completion, same
-cycle and wait-for dump on a deadlock.  The in-tree ``tests/test_faults.py``
+cycle and wait-for dump on a deadlock.  A fraction of trials sample
+*domain-scoped* plans (``FaultPlan.random_domain``: correlated droop /
+scu_blackout / bank_blackout events over contiguous core and bank groups)
+instead of independent per-core events; ``--domain-only`` restricts the
+run to those (the dedicated CI lane).  The in-tree ``tests/test_faults.py``
 suite pins a fixed seed set; this fuzz keeps rolling fresh seeds in CI so
 parity holes surface early without gating merges on an unbounded search.
 
     PYTHONPATH=src python scripts/fault_fuzz.py [--trials N] [--seed S]
+                                                [--domain-only]
 
 The base seed is randomized per invocation unless ``--seed`` is given; on
-failure the exact reproduction command (seed + trial) is printed.
+failure the exact reproduction command (seed + trial) and the minimal
+eval-able ``FaultPlan`` repr are printed.
 """
 
 from __future__ import annotations
@@ -45,15 +51,24 @@ def _prep(rng: random.Random, policy: str, n: int, mode: str):
                             iters=iters, depth=rng.choice((1, 4)), mode=mode)
 
 
-def run_trial(trial_seed: int) -> bool:
+def run_trial(trial_seed: int, domain_only: bool = False) -> bool:
     """One parity trial; returns True when both engine modes agree."""
     rng = random.Random(trial_seed)
     policy = rng.choice(POLICIES)
     n = rng.choice(CORES)
-    plan = FaultPlan.random(
-        trial_seed, n_cores=n, n_banks=2 * n, horizon=500,
-        n_events=rng.randint(1, 5),
-    )
+    # ~40% of mixed trials (and every --domain-only trial) draw correlated
+    # domain-scoped plans; the rest keep the independent per-core sampler
+    domain = domain_only or rng.random() < 0.4
+    if domain:
+        plan = FaultPlan.random_domain(
+            trial_seed, n_cores=n, n_banks=2 * n, horizon=500,
+            n_events=rng.randint(1, 4), n_domains=rng.choice((2, 4)),
+        )
+    else:
+        plan = FaultPlan.random(
+            trial_seed, n_cores=n, n_banks=2 * n, horizon=500,
+            n_events=rng.randint(1, 5),
+        )
     use_watchdog = rng.random() < 0.3
     wd_mode = rng.choice(("release", "raise"))
     wd_timeout = rng.randint(100, 600)
@@ -76,9 +91,10 @@ def run_trial(trial_seed: int) -> bool:
             outcomes.append(("deadlock", e.graph.cycle, str(e)))
     if outcomes[0] != outcomes[1]:
         print(f"PARITY MISMATCH (trial seed {trial_seed}): "
-              f"{policy}@{n}, watchdog={use_watchdog}")
+              f"{policy}@{n}, watchdog={use_watchdog}, domain={domain}")
         print(f"  lockstep:    {outcomes[0][:2]}")
         print(f"  fastforward: {outcomes[1][:2]}")
+        print(f"  plan: {plan!r}")  # eval-able: paste into a pinned test
         return False
     return True
 
@@ -88,17 +104,21 @@ def main(argv=None) -> int:
     ap.add_argument("--trials", type=int, default=20)
     ap.add_argument("--seed", type=int, default=None,
                     help="base seed (default: randomized, printed for replay)")
+    ap.add_argument("--domain-only", action="store_true",
+                    help="draw only domain-scoped plans (the CI domain lane)")
     args = ap.parse_args(argv)
 
     base = args.seed if args.seed is not None else random.randrange(2**31)
+    lane = " --domain-only" if args.domain_only else ""
     print(f"[fault_fuzz] base seed {base}, {args.trials} trials "
-          f"(replay: scripts/fault_fuzz.py --seed {base} --trials {args.trials})")
+          f"(replay: scripts/fault_fuzz.py --seed {base} "
+          f"--trials {args.trials}{lane})")
     failures = 0
     for i in range(args.trials):
-        if not run_trial(base + i):
+        if not run_trial(base + i, domain_only=args.domain_only):
             failures += 1
             print(f"[fault_fuzz] reproduce just this trial: "
-                  f"scripts/fault_fuzz.py --seed {base + i} --trials 1")
+                  f"scripts/fault_fuzz.py --seed {base + i} --trials 1{lane}")
     if failures:
         print(f"[fault_fuzz] {failures}/{args.trials} trials diverged "
               f"(base seed {base})")

@@ -52,6 +52,7 @@ from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
 __all__ = [
     "ALL_LINES",
     "FAULT_KINDS",
+    "DOMAIN_KINDS",
     "FaultEvent",
     "FaultPlan",
     "Watchdog",
@@ -63,7 +64,19 @@ __all__ = [
 
 ALL_LINES = 0xFFFFFFFF  # every event line (32, Sec. 4.2)
 
-FAULT_KINDS = ("lost_wake", "spurious_wake", "stall", "bank_blackout")
+# "droop"/"scu_blackout" are appended so the sort index of the original four
+# kinds -- and therefore the event order of every pre-existing plan -- is
+# unchanged.
+FAULT_KINDS = (
+    "lost_wake", "spurious_wake", "stall", "bank_blackout",
+    "droop", "scu_blackout",
+)
+
+# Kinds that model *correlated* failure of a whole fault domain (a voltage
+# island / cluster group) rather than an independent per-core upset.  A
+# domain-wide bank blackout is an ordinary ``bank_blackout`` whose ``banks``
+# enumerate the domain's banks.
+DOMAIN_KINDS = ("droop", "scu_blackout", "bank_blackout")
 
 # event lines a spurious upset plausibly lands on (notifiers 0/1 and the
 # three extension lines -- see repro.core.scu.scu_unit.EV)
@@ -106,6 +119,19 @@ class FaultEvent:
                           in ``banks`` grant nothing; requests stay queued
                           (and are not charged as bank conflicts -- the
                           interconnect, not contention, is at fault).
+    ``droop``          -- at ``cycle``, one correlated voltage droop freezes
+                          *every* core in ``cores`` for ``span`` extra
+                          cycles (same per-core semantics as ``stall``,
+                          applied to the whole domain at the same cycle).
+    ``scu_blackout``   -- during ``[cycle, cycle + span)``, the SCU's
+                          comparators neither evaluate nor grant: triggers
+                          still latch (armed state is preserved) and event
+                          deliveries still buffer, but nothing fires or
+                          wakes until the window ends, when the armed
+                          comparators replay on the first ungated evaluate.
+
+    ``domain`` is a free-form blame label ("" = not domain-scoped) carried
+    into the :attr:`FaultPlan.applied` log and :class:`WaitForGraph`.
     """
 
     kind: str
@@ -113,8 +139,10 @@ class FaultEvent:
     core: int = -1
     lines: int = ALL_LINES  # lost_wake: drop mask over event lines
     line: int = 0  # spurious_wake: event line to set
-    span: int = 0  # stall: freeze cycles; bank_blackout: window length
+    span: int = 0  # stall/droop: freeze cycles; *_blackout: window length
     banks: Tuple[int, ...] = ()  # bank_blackout: local bank ids
+    cores: Tuple[int, ...] = ()  # droop: every core of the domain
+    domain: str = ""  # blame label for domain-scoped events
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -123,10 +151,13 @@ class FaultEvent:
             raise ValueError(f"fault cycle must be >= 0, got {self.cycle}")
         if self.kind in ("lost_wake", "spurious_wake", "stall") and self.core < 0:
             raise ValueError(f"{self.kind} needs a target core")
-        if self.kind in ("stall", "bank_blackout") and self.span < 1:
+        if self.kind in ("stall", "bank_blackout", "droop", "scu_blackout") \
+                and self.span < 1:
             raise ValueError(f"{self.kind} needs span >= 1, got {self.span}")
         if self.kind == "bank_blackout" and not self.banks:
             raise ValueError("bank_blackout needs at least one bank")
+        if self.kind == "droop" and not self.cores:
+            raise ValueError("droop needs at least one core in its domain")
 
 
 class FaultPlan:
@@ -154,9 +185,20 @@ class FaultPlan:
             if e.kind == "bank_blackout"
         )
         self._blk_cache: Tuple[int, FrozenSet[int]] = (-1, frozenset())
+        self._scu_windows: List[Tuple[int, int]] = sorted(
+            (e.cycle, e.cycle + e.span)
+            for e in self.events
+            if e.kind == "scu_blackout"
+        )
+        self._scu_cache: Tuple[int, bool] = (-1, False)
 
     def __len__(self) -> int:
         return len(self.events)
+
+    def __repr__(self) -> str:
+        # eval-able (given FaultEvent/FaultPlan in scope): the minimal
+        # reproducer printed by scripts/fault_fuzz.py on a parity mismatch
+        return f"FaultPlan({self.events!r})"
 
     def clone(self) -> "FaultPlan":
         """A fresh plan with the same schedule and a reset cursor (for
@@ -207,6 +249,59 @@ class FaultPlan:
                 )
         return cls(events)
 
+    @classmethod
+    def random_domain(
+        cls,
+        seed: int,
+        n_cores: int,
+        n_banks: int,
+        horizon: int,
+        n_events: int = 3,
+        n_domains: int = 2,
+        kinds: Sequence[str] = DOMAIN_KINDS,
+    ) -> "FaultPlan":
+        """A seed-derived plan of *domain-scoped* events: the cluster's
+        cores/banks are split into ``n_domains`` contiguous groups and every
+        event hits one whole group (correlated droop, SCU blackout, or a
+        domain-wide bank blackout).  Same seed -> same schedule, always."""
+        rng = _random.Random(seed)
+        kinds = tuple(kinds)
+        n_domains = max(1, min(n_domains, n_cores))
+        events: List[FaultEvent] = []
+        for _ in range(n_events):
+            kind = rng.choice(kinds)
+            d = rng.randrange(n_domains)
+            name = f"dom{d}"
+            cycle = rng.randrange(max(1, horizon))
+            if kind == "droop":
+                cores = tuple(
+                    c for c in range(n_cores) if c * n_domains // n_cores == d
+                )
+                events.append(
+                    FaultEvent(
+                        "droop", cycle, cores=cores,
+                        span=rng.randrange(1, 64), domain=name,
+                    )
+                )
+            elif kind == "scu_blackout":
+                events.append(
+                    FaultEvent(
+                        "scu_blackout", cycle,
+                        span=rng.randrange(1, 32), domain=name,
+                    )
+                )
+            else:
+                banks = tuple(
+                    b for b in range(n_banks) if b * n_domains // n_banks == d
+                ) or (0,)
+                events.append(
+                    FaultEvent(
+                        "bank_blackout", cycle,
+                        span=rng.randrange(1, 32), banks=banks, domain=name,
+                    )
+                )
+        return cls(events)
+
     # --------------------------------------------------------- engine hooks
     def next_event_bound(self, cycle: int) -> Optional[int]:
         """Fast-forward bound contract (same semantics as the SCU
@@ -225,7 +320,29 @@ class FaultPlan:
                 break
             if cycle < end:
                 return 0
+        # an SCU blackout forces full steps through its whole window: gated
+        # grants/evaluates are cycle-addressed state the fast paths must not
+        # jump over (and the first post-window step replays the armed state)
+        for start, end in self._scu_windows:
+            if start > cycle:
+                break
+            if cycle < end:
+                return 0
         return nxt
+
+    def scu_blacked(self, cycle: int) -> bool:
+        """True while an ``scu_blackout`` window covers ``cycle`` (the SCU
+        gates comparator evaluation and elw grants on this)."""
+        if not self._scu_windows:
+            return False
+        c, blacked = self._scu_cache
+        if c == cycle:
+            return blacked
+        blacked = any(
+            start <= cycle < end for start, end in self._scu_windows
+        )
+        self._scu_cache = (cycle, blacked)
+        return blacked
 
     def blacked_banks(self, cycle: int) -> FrozenSet[int]:
         """Local bank ids blacked out at ``cycle`` (empty set = none)."""
@@ -261,11 +378,26 @@ class FaultPlan:
                 self._apply_one(ev, cluster)
         self._next = i
 
+    @staticmethod
+    def _stall_core(core, span: int) -> str:
+        """Extend one core's countdown by ``span`` (stall/droop semantics);
+        returns the per-core effect string."""
+        state = core.state.name
+        if state == "ACTIVE":
+            core.busy = core.busy + span
+        elif state == "WAKING":
+            core.wake_countdown = core.wake_countdown + span
+        else:
+            return f"noop({state})"
+        return "applied"
+
     def _apply_one(self, ev: FaultEvent, cluster) -> None:
         entry: Dict[str, Any] = {
             "cycle": ev.cycle, "kind": ev.kind, "core": ev.core,
             "effect": "applied",
         }
+        if ev.domain:
+            entry["domain"] = ev.domain
         if ev.kind == "lost_wake":
             scu = cluster.scu
             if scu is None:
@@ -281,14 +413,27 @@ class FaultPlan:
                 scu.base.ev_buf[ev.core] |= 1 << ev.line
         elif ev.kind == "stall":
             entry["span"] = ev.span
-            core = cluster.cores[ev.core]
-            state = core.state.name
-            if state == "ACTIVE":
-                core.busy = core.busy + ev.span
-            elif state == "WAKING":
-                core.wake_countdown = core.wake_countdown + ev.span
-            else:
-                entry["effect"] = f"noop({state})"
+            entry["effect"] = self._stall_core(cluster.cores[ev.core], ev.span)
+        elif ev.kind == "droop":
+            # correlated droop: one stall applied to every core of the
+            # domain at the same cycle
+            entry["core"] = -1
+            entry["span"] = ev.span
+            entry["cores"] = list(ev.cores)
+            effects = {
+                cid: self._stall_core(cluster.cores[cid], ev.span)
+                for cid in ev.cores
+            }
+            noops = sorted(c for c, e in effects.items() if e != "applied")
+            if noops:
+                entry["effect"] = f"partial(noop cores={noops})"
+        elif ev.kind == "scu_blackout":
+            # the window is enforced by scu_blacked() -- the SCU gates its
+            # comparator evaluation and elw grant paths on it
+            entry["core"] = -1
+            entry["span"] = ev.span
+            if cluster.scu is None:
+                entry["effect"] = "noop(no scu)"
         else:  # bank_blackout: the window is enforced by blacked_banks()
             entry["core"] = -1
             entry["span"] = ev.span

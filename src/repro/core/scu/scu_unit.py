@@ -439,6 +439,23 @@ class SCU:
             return self.base[cid].event_mask or 0xFFFFFFFF
         raise ValueError(addr)
 
+    def scu_blacked(self, cycle: Optional[int] = None) -> bool:
+        """True while an injected ``scu_blackout`` fault window covers the
+        cluster's current cycle (see :class:`repro.core.scu.faults.FaultEvent`):
+        comparators neither evaluate nor grant.  Triggers still latch and
+        deliveries still buffer -- the armed state replays on the first
+        ungated evaluate after the window, and buffered grants release then.
+        The fault plan pins its ``next_event_bound`` to 0 through the whole
+        window, so every engine tier takes full steps across it and the
+        gating stays bit-exact between lockstep and fastforward."""
+        cl = self.cluster
+        if cl is None:
+            return False
+        plan = getattr(cl, "faults", None)
+        if plan is None:
+            return False
+        return plan.scu_blacked(cl.cycle if cycle is None else cycle)
+
     def elw_would_grant(self, cid: int, addr: Any) -> bool:
         """Side-effect-free preview of :meth:`elw_poll`'s grant decision.
 
@@ -446,18 +463,26 @@ class SCU:
         event is not buffered cannot wake during a quiescent span (events are
         only generated by core transactions or armed comparators, both of
         which force a full step)."""
+        if self.scu_blacked():
+            return False
         return bool(self.base.ev_buf[cid] & self._wait_mask(cid, addr))
 
     def elw_any_grantable(self, cids: np.ndarray) -> bool:
         """Vectorized :meth:`elw_would_grant` over cores with in-flight elws."""
+        if self.scu_blacked():
+            return False
         return bool(np.any(self.base.ev_buf[cids] & self.elw_wait[cids]))
 
     def elw_grantable_mask(self, cids: np.ndarray) -> np.ndarray:
         """Bool mask over ``cids``: whose waited-on event is buffered now."""
+        if self.scu_blacked():
+            return np.zeros(len(cids), dtype=bool)
         return (self.base.ev_buf[cids] & self.elw_wait[cids]) != 0
 
     def elw_poll(self, cid: int, addr: Any) -> Tuple[bool, int]:
         """Grant decision for a pending elw; returns (granted, response)."""
+        if self.scu_blacked():
+            return False, 0
         unit = self.base[cid]
         wait_mask = self._wait_mask(cid, addr)
         hit = unit.event_buffer & wait_mask
@@ -486,8 +511,17 @@ class SCU:
 
         Only armed instances are visited; the armed sets are maintained at
         the mutation points (see the class docstring), and re-derived after
-        each evaluation because firing usually disarms the comparator."""
+        each evaluation because firing usually disarms the comparator.
+        During an injected ``scu_blackout`` window the comparator visits are
+        gated (armed state persists and replays at window end); the watchdog
+        branch still runs -- a blackout reads as zero progress, which is
+        exactly the escalation signal the service layer quarantines on."""
         n = 0
+        if self.scu_blacked(cycle):
+            wd = self.watchdog
+            if wd is not None and self._elw_pending and wd.due(cycle):
+                wd.fire(self, cycle)
+            return 0
         if self._armed_barriers:
             for idx in sorted(self._armed_barriers):
                 n += self.barriers[idx].evaluate(self.base)

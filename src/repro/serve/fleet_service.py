@@ -99,12 +99,17 @@ class RetryPolicy:
     (optional) switches the job to its ``fallback_factory`` once that many
     attempts have failed -- graceful degradation to a more robust (slower)
     configuration instead of repeating the failing one forever.
+    ``reroute`` asks for the retry to land on a *different healthy fault
+    domain* when one exists (falling back to in-place retry otherwise);
+    it only has meaning under :class:`repro.serve.fleet_pool.FleetPool`
+    (a single-fleet :class:`FleetService` has one domain and ignores it).
     """
 
     max_attempts: int = 3
     backoff_rounds: int = 1
     backoff_factor: int = 2
     degrade_after: Optional[int] = None
+    reroute: bool = False
 
     def __post_init__(self):
         if self.max_attempts < 1:
@@ -127,7 +132,9 @@ class SweepJob:
     (terminal -- intermediate failures of retried attempts live in
     ``fault_log``).  ``state`` walks ``queued -> running`` and ends in
     ``done`` or ``failed``, with ``backoff -> queued -> running`` loops in
-    between for retried attempts.
+    between for retried attempts.  ``domain`` is the fault-domain (fleet)
+    index the job last ran on -- always ``None`` under the single-fleet
+    :class:`FleetService`, set by :class:`repro.serve.fleet_pool.FleetPool`.
     """
 
     job_id: int
@@ -136,6 +143,7 @@ class SweepJob:
     admitted_round: Optional[int] = None
     finished_round: Optional[int] = None
     slot: Optional[int] = None
+    domain: Optional[int] = None
     stats: Optional[ClusterStats] = None
     error: Optional[str] = None
     state: str = "queued"

@@ -47,7 +47,8 @@ def test_schema_requires_every_section(baseline):
     for key in (
         "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
         "chain", "chain_scaling", "work_queue", "work_queue_scaling",
-        "engine_perf", "traffic", "resilience", "jax_barriers_ok",
+        "engine_perf", "traffic", "resilience", "fault_domains",
+        "jax_barriers_ok",
     ):
         broken = {k: v for k, v in baseline.items() if k != key}
         errors = bench_compare.validate_schema(broken)
@@ -162,6 +163,54 @@ def test_resilience_baseline_shows_recovery_win(baseline):
     assert faulty["degrade"]["degraded_jobs"] > 0
     clean = baseline["resilience"]["cells"]["rate0"]
     assert all(c["failure_rate"] == 0.0 for c in clean.values())
+
+
+def test_schema_catches_fault_domain_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    rate = next(iter(broken["fault_domains"]["cells"]))
+    del broken["fault_domains"]["cells"][rate]["reroute"]["wasted_cycles"]
+    assert any(
+        "wasted_cycles" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    broken["fault_domains"]["cells"] = {}
+    assert any("cells" in e for e in bench_compare.validate_schema(broken))
+
+
+def test_fault_domain_metrics_are_hard_gated(baseline):
+    """Routing metrics gate like cycle counts: a doctored wasted-cycles
+    increase or a lost job under reroute trips the hard comparison (the
+    zero failure-rate baseline gates any increase absolutely)."""
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["fault_domains"]["cells"]["rate1"]["quarantine"]
+    cell["wasted_cycles"] = cell["wasted_cycles"] * 2
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("quarantine/wasted_cycles" in r for r in regressions)
+
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["fault_domains"]["cells"]["rate1"]["reroute"]
+    cell["failure_rate"] = 0.25  # rerouting stopped rescuing jobs
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("reroute/failure_rate" in r for r in regressions)
+
+
+def test_fault_domain_baseline_shows_routing_win(baseline):
+    """The committed baseline must carry the measured claim: with a sick
+    domain, in-place retry loses jobs while reroute and reroute+quarantine
+    complete the stream, and quarantine strictly cuts wasted cycles."""
+    faulty = baseline["fault_domains"]["cells"]["rate1"]
+    assert faulty["inplace"]["failed_jobs"] > 0
+    for policy in ("reroute", "quarantine"):
+        assert faulty[policy]["failure_rate"] == 0.0
+    assert faulty["reroute"]["reroutes"] > 0
+    assert faulty["quarantine"]["quarantines"] > 0
+    assert (faulty["quarantine"]["wasted_cycles"]
+            < faulty["reroute"]["wasted_cycles"])
+    clean = baseline["fault_domains"]["cells"]["rate0"]
+    for c in clean.values():
+        assert c["failure_rate"] == 0.0
+        assert c["reroutes"] == 0 and c["quarantines"] == 0
 
 
 def test_schema_catches_chain_row_drift(baseline):

@@ -19,6 +19,7 @@ from repro.core.scu.engine import SlotFleet, simulate_fleet
 from repro.core.scu.extensions import EventFifo
 from repro.core.scu.faults import (
     ALL_LINES,
+    DOMAIN_KINDS,
     FAULT_KINDS,
     DeadlockError,
     FaultEvent,
@@ -37,8 +38,10 @@ from repro.core.scu.scu_unit import BaseUnits
 # fault kinds that cannot deadlock a well-formed program (a lost or
 # spurious wake can -- e.g. a swallowed barrier edge or a stale mutex
 # election -- which is correct behaviour, just not drainable in a static
-# fleet that aborts on the first failure)
-SAFE_KINDS = ("stall", "bank_blackout")
+# fleet that aborts on the first failure).  The domain kinds all qualify:
+# droop is a correlated stall, and both blackouts are finite windows that
+# defer (never destroy) progress.
+SAFE_KINDS = ("stall", "bank_blackout", "droop", "scu_blackout")
 
 _BARRIER_LINE = 8
 
@@ -85,6 +88,12 @@ def test_fault_event_validation():
         FaultEvent("stall", cycle=0, core=0, span=0)
     with pytest.raises(ValueError, match="bank"):
         FaultEvent("bank_blackout", cycle=0, span=4)
+    with pytest.raises(ValueError, match="span"):
+        FaultEvent("droop", cycle=0, cores=(0, 1))
+    with pytest.raises(ValueError, match="core"):
+        FaultEvent("droop", cycle=0, span=3)
+    with pytest.raises(ValueError, match="span"):
+        FaultEvent("scu_blackout", cycle=0)
 
 
 def test_next_event_bound_contract():
@@ -109,6 +118,54 @@ def test_next_event_bound_contract():
     assert plan.blacked_banks(13) == {1, 3}
     assert plan.blacked_banks(14) == frozenset()
     assert FaultPlan().next_event_bound(0) is None
+
+
+def test_next_event_bound_covers_scu_blackout_window():
+    """The bound pins to 0 through the whole scu_blackout window -- every
+    fast-forward tier must take full steps across it so the gated grants
+    stay cycle-addressed."""
+    plan = FaultPlan([FaultEvent("scu_blackout", cycle=6, span=5)])
+    assert plan.next_event_bound(0) == 6
+    for c in range(6, 11):
+        assert plan.next_event_bound(c) == 0, f"cycle {c} inside the window"
+        assert plan.scu_blacked(c)
+    assert plan.next_event_bound(11) is None
+    assert not plan.scu_blacked(5) and not plan.scu_blacked(11)
+    assert not FaultPlan().scu_blacked(0)
+
+
+def test_droop_schedules_one_event_for_the_whole_domain():
+    """One droop = one plan cycle; the bound contract sees a single event
+    and apply() extends every domain core's countdown at that cycle."""
+    plan = FaultPlan([FaultEvent("droop", cycle=9, cores=(0, 2, 3), span=7)])
+    assert plan.next_event_bound(0) == 9
+    assert plan.next_event_bound(9) == 0
+    assert plan.next_event_bound(10) is None
+
+
+def test_plan_repr_round_trips():
+    """repr(plan) is an eval-able reproducer (the fault_fuzz mismatch
+    printout) carrying every field including domain scoping."""
+    plan = FaultPlan.random_domain(
+        3, n_cores=8, n_banks=16, horizon=200, n_events=4, n_domains=2
+    )
+    clone = eval(repr(plan), {"FaultPlan": FaultPlan, "FaultEvent": FaultEvent})
+    assert clone.events == plan.events
+
+
+def test_random_domain_is_seed_deterministic():
+    a = FaultPlan.random_domain(11, n_cores=8, n_banks=16, horizon=300)
+    b = FaultPlan.random_domain(11, n_cores=8, n_banks=16, horizon=300)
+    c = FaultPlan.random_domain(12, n_cores=8, n_banks=16, horizon=300)
+    assert a.events == b.events
+    assert a.events != c.events
+    assert all(e.kind in DOMAIN_KINDS for e in a.events)
+    assert all(e.domain for e in a.events)
+    for e in a.events:
+        if e.kind == "droop":
+            assert len(e.cores) == 4  # 8 cores / 2 domains
+        if e.kind == "bank_blackout":
+            assert len(e.banks) == 8  # 16 banks / 2 domains
 
 
 def test_plan_is_single_use_and_clone_resets():
@@ -207,11 +264,82 @@ def test_single_kind_parity(kind):
         plan = FaultPlan([FaultEvent("spurious_wake", 40, core=2, line=8)])
     elif kind == "stall":
         plan = FaultPlan([FaultEvent("stall", 15, core=5, span=37)])
+    elif kind == "droop":
+        plan = FaultPlan([
+            FaultEvent("droop", 15, cores=(0, 1, 2, 3), span=37, domain="dom0")
+        ])
+    elif kind == "scu_blackout":
+        plan = FaultPlan([
+            FaultEvent("scu_blackout", 20, span=45, domain="dom0")
+        ])
     else:
         plan = FaultPlan([FaultEvent("bank_blackout", 8, span=20, banks=(0, 5))])
     ref = _run_with_plan("scu", 8, "lockstep", plan, max_cycles=8_000)
     ff = _run_with_plan("scu", 8, "fastforward", plan, max_cycles=8_000)
     assert ref == ff
+    assert ref[0] == "done" or kind in ("lost_wake",)
+
+
+@pytest.mark.parametrize("n_cores", (8, 16, 64))
+@pytest.mark.parametrize("policy", ("scu", "tas", "fifo"))
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_domain_plan_parity_lockstep_vs_fastforward(policy, n_cores, seed):
+    """The tentpole acceptance property for the new kinds: randomized
+    *domain-scoped* plans (correlated droop, SCU blackout, domain-wide bank
+    blackout) stay bit-exact across engine modes."""
+    plan = FaultPlan.random_domain(
+        seed, n_cores=n_cores, n_banks=2 * n_cores, horizon=400,
+        n_events=3, n_domains=2,
+    )
+    ref = _run_with_plan(policy, n_cores, "lockstep", plan, max_cycles=20_000)
+    ff = _run_with_plan(policy, n_cores, "fastforward", plan, max_cycles=20_000)
+    assert ref == ff, f"seed={seed}: {policy}@{n_cores} diverged"
+
+
+def test_scu_blackout_preserves_and_replays_armed_state():
+    """During the window nothing fires or grants; the arrivals latched
+    inside it replay on the first ungated evaluate, so the run completes --
+    just later than the clean run -- and the blame log names the domain."""
+    def run(plan):
+        fb = prep_barrier_bench("scu", 8, sfr=20, iters=4, mode="fastforward")
+        cl = fb.config.cluster
+        cl.faults = plan
+        cl.load(fb.config.programs)
+        stats = cl.run(50_000)
+        return cl, stats
+
+    _, clean = run(None)
+    blackout = FaultPlan([
+        FaultEvent("scu_blackout", cycle=10, span=200, domain="dom0")
+    ])
+    cl, faulted = run(blackout)
+    assert faulted.cycles > clean.cycles, \
+        "a blackout across barrier traffic must defer completion"
+    assert cl.faults.applied and cl.faults.applied[0]["domain"] == "dom0"
+
+
+def test_scu_blackout_gates_grants_but_buffers_deliveries():
+    """Unit-level window semantics: a notifier delivery during the window
+    lands in the buffer but elw_poll refuses to grant until the window
+    ends (armed state preserved, grant replayed)."""
+    scu = SCU(n_cores=2)
+    cl = Cluster(n_cores=2, scu=scu)
+    cl.faults = FaultPlan([FaultEvent("scu_blackout", cycle=0, span=50)])
+    cl.cycle = 0
+    scu.elw_trigger(0, ("barrier", 0, "arrive_wait"))
+    scu.elw_trigger(1, ("barrier", 0, "arrive_wait"))
+    assert scu.scu_blacked()
+    assert scu.evaluate(0) == 0, "comparators must not fire inside the window"
+    assert scu.barriers[0].status, "the arrival must stay latched (armed)"
+    assert not scu.elw_would_grant(0, ("barrier", 0, "arrive_wait"))
+    granted, _ = scu.elw_poll(0, ("barrier", 0, "arrive_wait"))
+    assert not granted
+    cl.cycle = 50  # first cycle past the window
+    assert not scu.scu_blacked()
+    assert scu.evaluate(50) > 0, "armed state replays on the ungated evaluate"
+    granted, _ = scu.elw_poll(0, ("barrier", 0, "arrive_wait"))
+    assert granted
 
 
 def test_mutex_and_chain_shapes_under_faults():

@@ -25,7 +25,8 @@ from repro.core.scu.programs import (
 )
 from repro.serve.arrivals import bursty_trace, poisson_trace
 from repro.serve.energy import job_energy
-from repro.core.scu.faults import FaultEvent, FaultPlan
+from repro.core.scu.faults import FaultEvent, FaultPlan, Watchdog
+from repro.serve.fleet_pool import BreakerPolicy, DomainHealth, FleetPool
 from repro.serve.fleet_service import FleetService, QueueFull, RetryPolicy
 
 POLICIES = ("scu", "tas", "sw", "tree", "tree4", "tree_ew", "fifo")
@@ -522,6 +523,36 @@ def test_retry_policy_validation():
         RetryPolicy(degrade_after=0)
 
 
+def test_backoff_requeue_bypasses_queue_bound():
+    """Satellite contract: a retry re-queue never competes with fresh
+    submissions for queue space -- it lands even when the queue is at its
+    bound (where try_submit is already rejecting)."""
+    svc = FleetService(
+        n_slots=1, slot_cores=8, queue_limit=1,
+        retry=RetryPolicy(max_attempts=2, backoff_rounds=3),
+    )
+    j = svc.submit(factory=_persistent_factory)
+    # run until the first failure puts the job into backoff
+    rounds = 0
+    while j.state != "backoff":
+        svc.step()
+        rounds += 1
+        assert rounds < 200_000
+    # fill the queue to its bound while the retry waits out the backoff
+    filler = svc.submit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+    assert svc.try_submit(
+        prep_barrier_bench("scu", 8, sfr=0, iters=2).config
+    ) is None, "the bound must reject fresh submissions"
+    while j.state == "backoff":
+        svc.step()
+        assert len(svc.queue) <= svc.queue_limit + 1
+    assert j.state in ("queued", "running", "failed"), \
+        "the requeue must have bypassed the full queue"
+    svc.run_until_drained()
+    assert filler.state == "done"
+    assert j.state == "failed" and j.attempts == 2
+
+
 def test_retry_config_leaves_clean_traffic_untouched():
     """The recovery machinery must be invisible to jobs that never fail:
     same stream, with and without a RetryPolicy, identical outcomes."""
@@ -565,7 +596,10 @@ def test_tenant_isolation_under_fault_chains(seed):
     fleet = SlotFleet(n_slots=2, slot_cores=8)
     for _ in range(rng.randint(2, 4)):
         # a faulty tenant: random kind, possibly deadlocking
-        kind = rng.choice(("lost_wake", "stall", "bank_blackout", "spurious"))
+        kind = rng.choice((
+            "lost_wake", "stall", "bank_blackout", "spurious",
+            "droop", "scu_blackout", "domain_blackout",
+        ))
         fb = prep_barrier_bench(
             rng.choice(("scu", "tas", "fifo")), 8,
             sfr=rng.choice((0, 20)), iters=rng.randint(2, 5),
@@ -586,6 +620,27 @@ def test_tenant_isolation_under_fault_chains(seed):
             fb.config.cluster.faults = FaultPlan([
                 FaultEvent("bank_blackout", rng.randrange(5, 50),
                            span=rng.randrange(1, 30), banks=(0, 3))
+            ])
+        elif kind == "droop":
+            # correlated domain droop: half the cores stall at one cycle
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("droop", rng.randrange(5, 50),
+                           cores=tuple(range(4)), span=rng.randrange(1, 60),
+                           domain="dom0")
+            ])
+        elif kind == "scu_blackout":
+            # a window where the dying tenant's SCU neither fires nor
+            # grants -- armed state must not leak into the next tenant
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("scu_blackout", rng.randrange(5, 50),
+                           span=rng.randrange(1, 40), domain="dom0")
+            ])
+        elif kind == "domain_blackout":
+            # domain-wide bank blackout: every bank of one domain half
+            fb.config.cluster.faults = FaultPlan([
+                FaultEvent("bank_blackout", rng.randrange(5, 50),
+                           span=rng.randrange(1, 30),
+                           banks=tuple(range(8)), domain="dom0")
             ])
         else:
             fb.config.cluster.faults = FaultPlan([
@@ -623,6 +678,279 @@ def test_tenant_isolation_under_fault_chains(seed):
                 fleet.free(m.index)
             rounds += 1
             assert rounds < 10**6
+
+
+# ---------------------------------------------------------------------------
+# FleetPool: fault domains, health-aware routing, quarantine, reroute
+# ---------------------------------------------------------------------------
+
+
+def _clean_factory(attempt):
+    fb = prep_barrier_bench("scu", 8, sfr=20, iters=4)
+    fb.config.max_cycles = 4096
+    return fb.config
+
+
+def _victim_inject(victims):
+    """An inject hook arming a deadlocking lost-wake plan on every config
+    admitted to a victim domain -- faults tied to the *domain*, which is
+    why rerouting escapes them."""
+    def inject(domain, config):
+        if domain in victims:
+            config.cluster.faults = _lost_wake_plan()
+        return config
+    return inject
+
+
+def test_pool_validation():
+    with pytest.raises(ValueError, match="n_domains"):
+        FleetPool(n_domains=0, n_slots=1, slot_cores=8)
+    with pytest.raises(ValueError, match="placement"):
+        FleetPool(n_domains=2, n_slots=1, slot_cores=8, placement="random")
+    with pytest.raises(ValueError, match="queue_limit"):
+        FleetPool(n_domains=2, n_slots=1, slot_cores=8, queue_limit=0)
+    with pytest.raises(ValueError, match="probation_after"):
+        BreakerPolicy(probation_after=0)
+    with pytest.raises(ValueError, match="cooldown_rounds"):
+        BreakerPolicy(cooldown_rounds=0)
+    with pytest.raises(ValueError, match="probe_successes"):
+        BreakerPolicy(probe_successes=0)
+    with pytest.raises(ValueError, match="window"):
+        DomainHealth(window=0)
+
+
+def test_pool_placement_is_deterministic():
+    """round-robin cycles domains in index order; least-loaded picks the
+    emptiest domain with ties to the lower id -- both pure functions of
+    the pool state, no randomness anywhere."""
+    rr = FleetPool(n_domains=3, n_slots=2, slot_cores=8,
+                   placement="round-robin")
+    doms = [rr.submit(_clean_factory(1)).domain for _ in range(6)]
+    assert doms == [0, 1, 2, 0, 1, 2]
+
+    ll = FleetPool(n_domains=3, n_slots=2, slot_cores=8,
+                   placement="least-loaded")
+    doms = [ll.submit(_clean_factory(1)).domain for _ in range(6)]
+    assert doms == [0, 1, 2, 0, 1, 2]  # load ties break to the lower id
+
+
+def test_pool_clean_stream_matches_single_fleet_service():
+    """With one domain and no faults the pool must be indistinguishable
+    from the plain FleetService: same stats, same rounds, same lane
+    accounting -- the new layer adds routing, not scheduling drift."""
+    def build():
+        return [
+            prep_barrier_bench(p, 8, sfr=s, iters=i)
+            for p, s, i in (
+                ("scu", 0, 3), ("tas", 40, 3), ("fifo", 25, 4), ("sw", 10, 2),
+            )
+        ]
+
+    svc = FleetService(n_slots=2, slot_cores=8, queue_limit=16)
+    svc_jobs = [svc.submit(b.config) for b in build()]
+    svc.run_until_drained()
+
+    pool = FleetPool(n_domains=1, n_slots=2, slot_cores=8, queue_limit=16)
+    pool_jobs = [pool.submit(b.config) for b in build()]
+    pool.run_until_drained()
+
+    for a, b in zip(svc_jobs, pool_jobs):
+        assert a.stats == b.stats
+        assert (a.state, a.admitted_round, a.finished_round) == \
+            (b.state, b.admitted_round, b.finished_round)
+    assert svc.round == pool.round
+    assert svc.idle_lane_fraction == pool.idle_lane_fraction
+
+
+def test_pool_fifo_fairness_per_domain():
+    """Jobs placed on the same domain are admitted in submission order --
+    and a rerouted retry joins the *tail* of its new domain's queue, never
+    jumping the fresh submissions already waiting there."""
+    pool = FleetPool(
+        n_domains=2, n_slots=1, slot_cores=8, placement="round-robin",
+        retry=RetryPolicy(max_attempts=2, backoff_rounds=0, reroute=True),
+        inject=_victim_inject({0}),
+    )
+    # six jobs alternate 0,1,0,1,0,1; domain-0 jobs fail and reroute to 1
+    jobs = [pool.submit(factory=_clean_factory) for _ in range(6)]
+    pool.run_until_drained(max_rounds=500_000)
+    assert all(j.state == "done" for j in jobs), \
+        "every domain-0 casualty must complete after its reroute"
+    assert pool.reroutes == 3
+    d1_first = [j for j in jobs if j.domain == 1 and j.attempts == 1]
+    rerouted = [j for j in jobs if j.attempts == 2]
+    assert all(j.domain == 1 for j in rerouted)
+    # FIFO per domain: among same-domain admissions, submit order holds,
+    # and every fresh domain-1 job was admitted before any rerouted one
+    # arrived in that queue
+    for bucket in (d1_first, rerouted):
+        admits = [j.admitted_round for j in bucket]
+        assert admits == sorted(admits)
+    assert max(j.admitted_round for j in d1_first) <= \
+        min(j.admitted_round for j in rerouted)
+
+
+def test_reroute_completes_jobs_inplace_retry_loses():
+    """The tentpole serve claim, in miniature: a domain-pinned fault kills
+    in-place retries (every attempt lands back in the blast radius) while
+    reroute=True completes the same job on a healthy domain."""
+    def run(reroute):
+        pool = FleetPool(
+            n_domains=2, n_slots=1, slot_cores=8,
+            retry=RetryPolicy(max_attempts=2, backoff_rounds=1,
+                              reroute=reroute),
+            inject=_victim_inject({0}),
+        )
+        job = pool.submit(factory=_clean_factory)
+        assert job.domain == 0  # least-loaded tie breaks to the victim
+        pool.run_until_drained(max_rounds=500_000)
+        return job, pool
+
+    lost, _ = run(reroute=False)
+    assert lost.state == "failed" and lost.attempts == 2
+    assert all(e["domain"] == 0 for e in lost.fault_log)
+
+    saved, pool = run(reroute=True)
+    assert saved.state == "done" and saved.attempts == 2
+    assert saved.domain == 1 and pool.reroutes == 1
+    assert saved.fault_log[0]["domain"] == 0  # blame names the sick domain
+
+
+def test_breaker_walks_the_state_machine():
+    """healthy -> probation (window failures) -> quarantined (probation
+    failure) -> probation (cooldown expiry) -> healthy (probe successes),
+    all round-counted and observable."""
+    sick = {"on": True}
+
+    def inject(domain, config):
+        if sick["on"]:
+            config.cluster.faults = _lost_wake_plan()
+        return config
+
+    breaker = BreakerPolicy(probation_after=2, cooldown_rounds=4,
+                            probe_successes=2)
+    pool = FleetPool(
+        n_domains=1, n_slots=2, slot_cores=8, breaker=breaker,
+        retry=RetryPolicy(max_attempts=1), inject=inject,
+    )
+    # two failures in the window drop the domain to probation
+    for _ in range(2):
+        pool.submit(factory=_clean_factory)
+    pool.run_until_drained(max_rounds=500_000)
+    assert pool.states[0] == "probation"
+    # a probation (probe) failure quarantines with a round-counted cooldown
+    pool.submit(factory=_clean_factory)
+    pool.run_until_drained(max_rounds=500_000)
+    assert pool.states[0] == "quarantined"
+    assert pool.quarantines == 1
+    until = pool._cooldown_until[0]
+    # a job queued against the quarantined domain waits out the cooldown
+    sick["on"] = False
+    j = pool.submit(factory=_clean_factory)
+    pool.run_until_drained(max_rounds=500_000)
+    assert j.state == "done"
+    assert j.admitted_round >= until, "no admission before cooldown expiry"
+    assert pool.states[0] == "probation"  # one success < probe_successes
+    pool.submit(factory=_clean_factory)
+    pool.run_until_drained(max_rounds=500_000)
+    assert pool.states[0] == "healthy"  # second consecutive probe success
+
+
+def test_quarantine_cuts_wasted_cycles_vs_reroute_alone():
+    """With a stream arriving over rounds, reroute alone keeps feeding the
+    victim domain (every placement there burns a full failed attempt);
+    the breaker stops the bleeding after it trips -- strictly fewer wasted
+    cycles, same 100% completion."""
+    def run(breaker):
+        pool = FleetPool(
+            n_domains=2, n_slots=1, slot_cores=8,
+            retry=RetryPolicy(max_attempts=3, backoff_rounds=0, reroute=True),
+            breaker=breaker, inject=_victim_inject({0}),
+        )
+        # initial burst: least-loaded alternates 0,1,0,1 so the victim
+        # domain holds a queued job when its first admission fails -- that
+        # job becomes the probation probe whose failure quarantines
+        jobs = [pool.submit(factory=_clean_factory) for _ in range(4)]
+        for _ in range(2):
+            for _ in range(40):  # stagger the tail across rounds
+                pool.step()
+            jobs.append(pool.submit(factory=_clean_factory))
+        pool.run_until_drained(max_rounds=500_000)
+        return jobs, pool
+
+    jobs_r, pool_r = run(None)
+    jobs_q, pool_q = run(BreakerPolicy(probation_after=1, cooldown_rounds=50,
+                                       probe_successes=1))
+    assert all(j.state == "done" for j in jobs_r)
+    assert all(j.state == "done" for j in jobs_q)
+    assert pool_q.quarantines >= 1
+    assert pool_q.wasted_cycles < pool_r.wasted_cycles, (
+        "quarantine must stop feeding the victim domain"
+    )
+
+
+def test_watchdog_trip_escalates_to_domain_blame():
+    """The escalation chain: a slot-level watchdog trip surfaces as the
+    member's DeadlockError, lands in the job's fault_log with domain blame
+    and the WaitForGraph dump, counts on the domain's health record, and
+    the breaker quarantines the domain."""
+    def factory(attempt):
+        fb = prep_barrier_bench("scu", 8, sfr=20, iters=6)
+        fb.config.cluster.faults = _lost_wake_plan()
+        fb.config.cluster.scu.watchdog = Watchdog(timeout=150, mode="raise")
+        return fb.config
+
+    pool = FleetPool(
+        n_domains=2, n_slots=1, slot_cores=8,
+        breaker=BreakerPolicy(probation_after=1, cooldown_rounds=10,
+                              probe_successes=1),
+        retry=RetryPolicy(max_attempts=1),
+        inject=None,
+    )
+    j = pool.submit(factory=factory)
+    d = j.domain
+    pool.run_until_drained(max_rounds=500_000)
+    assert j.state == "failed"
+    assert "watchdog tripped" in j.error and "wait-for graph" in j.error
+    entry = j.fault_log[0]
+    assert entry["domain"] == d and entry["watchdog"] is True
+    assert pool.health[d].watchdog_trips == 1
+    assert pool.watchdog_trips == 1
+    assert pool.states[d] == "probation", \
+        "one window failure (probation_after=1) must demote the domain"
+    report = pool.domain_report()
+    assert report[d]["watchdog_trips"] == 1
+    assert report[d]["state"] == "probation"
+
+
+def test_pool_backpressure_and_requeue_bypass():
+    """The global queue bound rejects fresh submissions (QueueFull /
+    try_submit None) but a retry requeue bypasses it -- the pool-level
+    twin of the FleetService satellite contract."""
+    pool = FleetPool(
+        n_domains=2, n_slots=1, slot_cores=8, queue_limit=2,
+        retry=RetryPolicy(max_attempts=2, backoff_rounds=3, reroute=True),
+        inject=_victim_inject({0}),
+    )
+    j = pool.submit(factory=_clean_factory)
+    assert j.domain == 0
+    rounds = 0
+    while j.state != "backoff":
+        pool.step()
+        rounds += 1
+        assert rounds < 200_000
+    fillers = [
+        pool.submit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+        for _ in range(2)
+    ]
+    with pytest.raises(QueueFull, match="pool queue full"):
+        pool.submit(prep_barrier_bench("scu", 8, sfr=0, iters=2).config)
+    assert pool.try_submit(
+        prep_barrier_bench("scu", 8, sfr=0, iters=2).config
+    ) is None
+    pool.run_until_drained(max_rounds=500_000)
+    assert j.state == "done" and j.domain == 1  # requeued + rerouted
+    assert all(f.state == "done" for f in fillers)
 
 
 # ---------------------------------------------------------------------------
