@@ -18,10 +18,11 @@ samples 16/64/128/256), the engine-throughput benchmark (quiescent,
 contended, fleet-dispatch and compiled-trace sweeps), the sweep-service
 traffic benchmark (continuous batching vs drain baseline on the
 slot-recycling fleet), the resilience sweep (deterministic fault
-injection x recovery mode: retry, degradation, watchdog release) and the
+injection x recovery mode: retry, degradation, watchdog release), the
 fault-domain chaos sweep (domain fault rate x routing policy on the
-multi-fleet pool), then the Tier-2 roofline read-out from the dry-run
-artifacts.  The
+multi-fleet pool) and the checkpoint/restore benchmark (live migration vs
+restart-reroute, preemptive priority scheduling), then the Tier-2
+roofline read-out from the dry-run artifacts.  The
 Table-1/Fig-5/chain/work-queue sweeps and their scaling variants dispatch
 through the batched fleet engine
 (``repro.core.scu.engine.simulate_fleet``); per-config numbers are
@@ -315,6 +316,19 @@ def _run_fault_domains(args):
     # fixed size under --fast and full: every metric is cycle- or
     # round-counted on a seeded deterministic run and hard-gated
     return {"fault_domains": fault_domains.run()}, 0
+
+
+@register_bench(
+    "preemption",
+    "Checkpoint/restore -- live migration + preemptive priority scheduling",
+    ("preemption",),
+)
+def _run_preemption(args):
+    from benchmarks import preemption
+
+    # fixed size under --fast and full: every metric is cycle- or
+    # round-counted on a seeded deterministic run and hard-gated
+    return {"preemption": preemption.run()}, 0
 
 
 @register_bench(

@@ -10,9 +10,11 @@ minimum SFR at 10% overhead, Table-2 app cycles, pipelined-chain and
 work-queue cost, their 16..256-core scaling rows, the sweep-service
 traffic latency/idle/energy-tail metrics (counted in deterministic
 scheduler rounds), the resilience sweep's failure/recovery metrics
-(seeded fault injection, cycle- and round-counted), and the fault-domain
+(seeded fault injection, cycle- and round-counted), the fault-domain
 chaos sweep's routing metrics (reroutes, quarantines, wasted cycles on
-the multi-fleet pool) -- must reproduce
+the multi-fleet pool), and the checkpoint/restore benchmark's migration
+and preemption metrics (wasted cycles, high-priority latency) -- must
+reproduce
 bit-for-bit on any machine (the sweeps dispatch through the batched fleet
 engine, which is bit-exact per config against sequential runs).  A current value more than ``threshold`` above the baseline fails
 the gate (exit 1); wall-clock metrics (engine throughput, jax_barriers
@@ -120,6 +122,19 @@ def extract_metrics(results: Dict) -> Metrics:
                       "reroutes", "quarantines", "rounds",
                       "mean_latency_rounds", "watchdog_trips"):
                 m[f"fault_domains/{rate}/{policy}/{k}"] = _num(c.get(k))
+    # checkpoint/restore benchmark: wasted cycles, rounds and latencies of
+    # seeded deterministic runs; zero baselines (preempt wasted_cycles,
+    # failure_rate) gate any increase absolutely
+    pre = results.get("preemption", {})
+    for mode, c in pre.get("migration", {}).items():
+        for k in ("failure_rate", "total_attempts", "wasted_cycles",
+                  "reroutes", "rounds", "mean_latency_rounds"):
+            m[f"preemption/migration/{mode}/{k}"] = _num(c.get(k))
+    for mode, c in pre.get("schedule", {}).items():
+        for k in ("failure_rate", "wasted_cycles", "rounds",
+                  "mean_latency_rounds", "hi_latency_rounds",
+                  "hi_queue_rounds"):
+            m[f"preemption/schedule/{mode}/{k}"] = _num(c.get(k))
     return m
 
 
@@ -420,6 +435,33 @@ def validate_schema(results: Dict) -> List[str]:
                               "mean_latency_rounds", "watchdog_trips"):
                         need(_is_num(c.get(k)),
                              f"{ctx}.{k}: expected finite number")
+
+    pre = results.get("preemption")
+    if need(isinstance(pre, dict), "preemption: missing or not a dict"):
+        mig = pre.get("migration")
+        if need(isinstance(mig, dict) and mig,
+                "preemption.migration: missing or empty"):
+            for mode, c in mig.items():
+                ctx = f"preemption.migration.{mode}"
+                if not need(isinstance(c, dict), f"{ctx}: not a dict"):
+                    continue
+                for k in ("failure_rate", "failed_jobs", "completed_jobs",
+                          "total_attempts", "wasted_cycles", "reroutes",
+                          "migrations", "rounds", "mean_latency_rounds"):
+                    need(_is_num(c.get(k)),
+                         f"{ctx}.{k}: expected finite number")
+        sched = pre.get("schedule")
+        if need(isinstance(sched, dict) and sched,
+                "preemption.schedule: missing or empty"):
+            for mode, c in sched.items():
+                ctx = f"preemption.schedule.{mode}"
+                if not need(isinstance(c, dict), f"{ctx}: not a dict"):
+                    continue
+                for k in ("failure_rate", "completed_jobs", "preemptions",
+                          "wasted_cycles", "rounds", "mean_latency_rounds",
+                          "hi_latency_rounds", "hi_queue_rounds"):
+                    need(_is_num(c.get(k)),
+                         f"{ctx}.{k}: expected finite number")
     return errors
 
 

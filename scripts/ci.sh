@@ -37,6 +37,13 @@ if ! python scripts/fault_fuzz.py --trials 10 --domain-only; then
     echo "WARN: fault_fuzz --domain-only found an engine-mode divergence" \
          "(see seed above); non-gating, continuing"
 fi
+# Snapshot lane: checkpoint/restore parity -- random compiled workloads
+# suspended at a random round boundary and resumed in a fresh fleet must
+# drain to a bit-identical outcome (tests/test_checkpoint.py pins seeds).
+if ! python scripts/fault_fuzz.py --trials 10 --snapshot; then
+    echo "WARN: fault_fuzz --snapshot found a checkpoint/restore divergence" \
+         "(see seed above); non-gating, continuing"
+fi
 
 if [[ "${1:-}" != "--tests" && "${1:-}" != "--fast" ]]; then
     echo "== benchmark smoke: benchmarks/run.py --fast --json BENCH_tier1.json =="

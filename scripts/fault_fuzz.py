@@ -12,8 +12,16 @@ run to those (the dedicated CI lane).  The in-tree ``tests/test_faults.py``
 suite pins a fixed seed set; this fuzz keeps rolling fresh seeds in CI so
 parity holes surface early without gating merges on an unbounded search.
 
+``--snapshot`` switches to checkpoint/restore parity trials instead: a
+random compiled workload under a random *non-deadlocking* domain plan runs
+uninterrupted on a :class:`SlotFleet` for reference, then again suspended
+at a random round boundary (``SlotFleet.suspend``) and resumed into a
+fresh fleet (``SlotFleet.restore``) -- the drained outcome must be
+bit-identical.  A divergence prints the eval-able plan, the checkpoint
+round and cycle (``tests/test_checkpoint.py`` pins the fixed seed set).
+
     PYTHONPATH=src python scripts/fault_fuzz.py [--trials N] [--seed S]
-                                                [--domain-only]
+                                                [--domain-only | --snapshot]
 
 The base seed is randomized per invocation unless ``--seed`` is given; on
 failure the exact reproduction command (seed + trial) and the minimal
@@ -99,6 +107,74 @@ def run_trial(trial_seed: int, domain_only: bool = False) -> bool:
     return True
 
 
+def run_snapshot_trial(trial_seed: int) -> bool:
+    """One checkpoint/restore parity trial on the slot-recycling fleet.
+
+    Draws a compiled (trace-lowered, hence checkpointable) barrier
+    workload and a non-deadlocking domain-scoped plan (droop and blackout
+    events defer progress but never destroy it), runs it uninterrupted for
+    the reference outcome, then suspends the same workload at a random
+    round boundary and resumes it in a *different* fleet.  Returns True
+    when both outcomes are bit-identical."""
+    from repro.core.scu.engine import SlotFleet
+
+    rng = random.Random(trial_seed)
+    policy = rng.choice(POLICIES)
+    n = rng.choice(CORES)
+    iters = rng.randint(2, 6)
+    sfr = rng.choice((0, 20, 150))
+    plan = FaultPlan.random_domain(
+        trial_seed, n_cores=n, n_banks=2 * n, horizon=500,
+        n_events=rng.randint(1, 4), n_domains=rng.choice((2, 4)),
+    )
+
+    def config():
+        fb = prep_barrier_bench(policy, n, sfr=sfr, iters=iters,
+                                compiled=True)
+        fb.config.max_cycles = MAX_CYCLES
+        fb.config.cluster.faults = plan.clone()
+        return fb.config
+
+    def outcome(member):
+        if member.error is not None:
+            return ("failed", member.cluster.cycle, member.error)
+        return ("done", member.cluster.stats)
+
+    # uninterrupted reference + the run's total round count
+    fleet = SlotFleet(1, n)
+    fleet.admit(config())
+    rounds, fin = 0, []
+    while not fin:
+        fin = fleet.advance()
+        rounds += 1
+    ref = outcome(fin[0])
+    if rounds < 2:
+        return True  # nothing in-flight to suspend
+
+    k = 1 + rng.randrange(rounds - 1)  # a strictly mid-run round boundary
+    fleet = SlotFleet(1, n)
+    slot = fleet.admit(config())
+    for _ in range(k):
+        fleet.advance()
+    ckpt = fleet.suspend(slot)
+    other = SlotFleet(2, n)
+    other.restore(ckpt)
+    fin = []
+    while not fin:
+        fin = other.advance()
+    got = outcome(fin[0])
+
+    if got != ref:
+        print(f"SNAPSHOT PARITY MISMATCH (trial seed {trial_seed}): "
+              f"{policy}@{n}, sfr={sfr}, iters={iters}, "
+              f"suspended at round {k} (cycle {ckpt.cycle})")
+        print(f"  uninterrupted: {ref[:2]}")
+        print(f"  restored:      {got[:2]}")
+        print(f"  plan: {plan!r}")  # eval-able: paste into a pinned test
+        return False
+    return True
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trials", type=int, default=20)
@@ -106,16 +182,26 @@ def main(argv=None) -> int:
                     help="base seed (default: randomized, printed for replay)")
     ap.add_argument("--domain-only", action="store_true",
                     help="draw only domain-scoped plans (the CI domain lane)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="checkpoint/restore parity trials on the slot "
+                    "fleet (the CI snapshot lane)")
     args = ap.parse_args(argv)
+    if args.domain_only and args.snapshot:
+        ap.error("--domain-only and --snapshot are separate lanes")
 
     base = args.seed if args.seed is not None else random.randrange(2**31)
-    lane = " --domain-only" if args.domain_only else ""
+    lane = (" --domain-only" if args.domain_only
+            else " --snapshot" if args.snapshot else "")
     print(f"[fault_fuzz] base seed {base}, {args.trials} trials "
           f"(replay: scripts/fault_fuzz.py --seed {base} "
           f"--trials {args.trials}{lane})")
     failures = 0
     for i in range(args.trials):
-        if not run_trial(base + i, domain_only=args.domain_only):
+        if args.snapshot:
+            ok = run_snapshot_trial(base + i)
+        else:
+            ok = run_trial(base + i, domain_only=args.domain_only)
+        if not ok:
             failures += 1
             print(f"[fault_fuzz] reproduce just this trial: "
                   f"scripts/fault_fuzz.py --seed {base + i} --trials 1{lane}")
@@ -123,8 +209,9 @@ def main(argv=None) -> int:
         print(f"[fault_fuzz] {failures}/{args.trials} trials diverged "
               f"(base seed {base})")
         return 1
-    print(f"[fault_fuzz] OK: {args.trials} randomized trials bit-exact "
-          "across engine modes")
+    what = ("across suspend/restore" if args.snapshot
+            else "across engine modes")
+    print(f"[fault_fuzz] OK: {args.trials} randomized trials bit-exact {what}")
     return 0
 
 

@@ -2398,10 +2398,28 @@ class SlotFleet(_FleetEngine):
         first; queueing policy belongs to the caller (see
         ``repro.serve.fleet_service``)."""
         self.validate(cfg)
-        cl = cfg.cluster
+        slot = self._claim()
+        return self._bind(slot, cfg)
+
+    def _claim(self, slot: Optional[int] = None) -> int:
+        """Take a slot off the free list (the lowest, or a specific one)."""
         if not self._free:
             raise RuntimeError("SlotFleet.admit: no free slot")
-        slot = self._free.pop(0)
+        if slot is None:
+            return self._free.pop(0)
+        try:
+            self._free.remove(slot)
+        except ValueError:
+            raise RuntimeError(
+                f"SlotFleet: slot {slot} is not free"
+            ) from None
+        return slot
+
+    def _bind(self, slot: int, cfg: FleetConfig) -> int:
+        """Scrub ``slot``'s lanes and attach ``cfg`` (the admit body --
+        restore reuses this path verbatim, so a restored member lands on
+        exactly the residue-free lane state a fresh admission gets)."""
+        cl = cfg.cluster
         off = slot * self.slot_cores
         full = slice(off, off + self.slot_cores)
 
@@ -2465,6 +2483,58 @@ class SlotFleet(_FleetEngine):
             self._core_list[i] = None
         self.members[slot] = None
         bisect.insort(self._free, slot)
+
+    # ----------------------------------------------------- checkpoint/restore
+    def snapshot(self, slot: int):
+        """Checkpoint the member in ``slot`` at the current round boundary.
+
+        Non-destructive: the member keeps running.  Returns a
+        :class:`repro.core.scu.checkpoint.MemberCheckpoint`; raises
+        :class:`~repro.core.scu.checkpoint.NotCheckpointable` when the
+        member runs generator-backed programs (callers fall back to
+        restart) and ``ValueError`` on a free or finished slot."""
+        from .checkpoint import capture_cluster
+
+        m = self.members[slot]
+        if m is None:
+            raise ValueError(f"SlotFleet.snapshot: slot {slot} is free")
+        if m.done:
+            raise ValueError(
+                f"SlotFleet.snapshot: slot {slot} already finished"
+            )
+        return capture_cluster(m.cluster)
+
+    def suspend(self, slot: int):
+        """Snapshot the member in ``slot`` and evict it (preemption).
+
+        The slot is scrubbed and returned to the free list; the returned
+        checkpoint resumes the job later via :meth:`restore` -- in this
+        fleet or any other wide enough."""
+        ckpt = self.snapshot(slot)
+        m = self.members[slot]
+        m.done = True  # free() refuses live members; this one is suspended
+        self.free(slot)
+        return ckpt
+
+    def restore(self, ckpt, slot: Optional[int] = None, faults="carry"):
+        """Re-admit a checkpointed member; returns the slot id.
+
+        Runs the exact admission scrub+attach path on the lowest free slot
+        (or a specific free ``slot``), then overwrites the fresh member
+        with the checkpointed scheduler/SCU/TCDM state -- restore into any
+        slot of any fleet is residue-free by construction.  ``faults``
+        forwards to :func:`repro.core.scu.checkpoint.resume_config`:
+        ``"carry"`` resumes the checkpointed :class:`FaultPlan` cursor,
+        ``None`` strips it (live migration to a healthy domain), a plan
+        overrides."""
+        from .checkpoint import apply_cluster_state, resume_config
+
+        cfg = resume_config(ckpt, faults=faults)
+        self.validate(cfg)
+        slot = self._claim(slot)
+        self._bind(slot, cfg)
+        apply_cluster_state(self.members[slot].cluster, ckpt)
+        return slot
 
     # --------------------------------------------------------------- advance
     def advance(self) -> List[_FleetMember]:

@@ -68,6 +68,26 @@ failure semantics are identical to :class:`FleetService`; the reroute
 decision is made when the backoff expires, against the health state of
 that round.
 
+Live migration (reroute + :class:`CheckpointPolicy`)
+----------------------------------------------------
+With ``checkpoint=CheckpointPolicy(interval_rounds=k)`` every running
+member is snapshotted each ``k`` rounds of its attempt (round boundary;
+bit-exact, see :mod:`repro.core.scu.checkpoint`).  A failed attempt that
+has a checkpoint **migrates** instead of restarting: the retry resumes
+from the checkpoint -- on whatever domain the reroute logic picks -- with
+the failed attempt's :class:`~repro.core.scu.faults.FaultPlan` stripped,
+so the sick domain's remaining fault schedule does not follow the job to
+its new home.  Wasted cycles per failure drop from the whole attempt to
+the checkpoint -> failure tail (at most one interval plus the detection
+lag).  Checkpoint-resumed admissions bypass the ``inject`` hook (the
+chaos harness arms *fresh* attempts; a restore continues an old one).  A
+checkpoint that backed one failed resume is dropped as poisoned -- it
+captured already-corrupted state -- and the next retry rebuilds from
+scratch.  Members running generator-backed programs are silently
+non-checkpointable and keep restart-reroute semantics.  Migrations are
+counted in :attr:`FleetPool.migrations` (a subset of ``reroutes`` when
+the target differs from the failing domain).
+
 Fault injection is tied to domains through the optional ``inject`` hook:
 ``inject(domain, config) -> config`` runs at admission for every attempt,
 letting a chaos harness (``benchmarks/fault_domains.py``) arm
@@ -81,8 +101,10 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.core.scu.checkpoint import NotCheckpointable
 from repro.core.scu.engine import FleetConfig, SlotFleet
 from repro.serve.fleet_service import (
+    CheckpointPolicy,
     QueueFull,
     RetryPolicy,
     SweepJob,
@@ -191,7 +213,12 @@ class FleetPool:
         Rolling-outcome window per :class:`DomainHealth`.
     inject:
         Optional ``inject(domain, config) -> config`` hook applied at
-        admission to every attempt (chaos harness entry point).
+        admission to every attempt (chaos harness entry point;
+        checkpoint-restored admissions skip it).
+    checkpoint:
+        Optional :class:`~repro.serve.fleet_service.CheckpointPolicy`;
+        enables periodic snapshots and live migration (see the module
+        docstring).
     """
 
     PLACEMENTS = ("least-loaded", "round-robin")
@@ -208,6 +235,7 @@ class FleetPool:
         breaker: Optional[BreakerPolicy] = None,
         health_window: int = 16,
         inject: Optional[Callable[[int, FleetConfig], FleetConfig]] = None,
+        checkpoint: Optional[CheckpointPolicy] = None,
     ):
         if n_domains < 1:
             raise ValueError(f"n_domains must be >= 1, got {n_domains}")
@@ -230,10 +258,12 @@ class FleetPool:
         self.retry = retry
         self.breaker = breaker
         self.inject = inject
+        self.checkpoint = checkpoint
         self.round = 0
         self.finished: List[SweepJob] = []
         self.reroutes = 0
         self.quarantines = 0
+        self.migrations = 0  # checkpoint-resumed reroutes to a new domain
         self._cooldown_until = [0] * n_domains
         self._probe_streak = [0] * n_domains
         self._by_slot: List[Dict[int, SweepJob]] = [
@@ -289,6 +319,8 @@ class FleetPool:
         domain, advance every occupied fleet, collect completions and
         update domain health/breaker state.  Returns the jobs that went
         terminal this round."""
+        if self.checkpoint is not None:
+            self._checkpoint_pass()
         self._expire_cooldowns()
         self._requeue_backoff()
         for d in range(self.n_domains):
@@ -366,6 +398,76 @@ class FleetPool:
         job.state = "queued"
         self.queues[domain].append(job)
 
+    # ----------------------------------------------------------- checkpoints
+    def _checkpoint_pass(self) -> None:
+        """Periodic snapshots at the round boundary, per domain."""
+        iv = self.checkpoint.interval_rounds
+        for d in range(self.n_domains):
+            fleet = self.fleets[d]
+            for slot, job in sorted(self._by_slot[d].items()):
+                if job.checkpoint_disabled:
+                    continue
+                age = self.round - job.attempt_admitted_round
+                if age <= 0 or age % iv != 0:
+                    continue
+                m = fleet.members[slot]
+                if m.cluster.cycle >= m.max_cycles:
+                    continue  # burned to its cap: timeout imminent
+                try:
+                    job.checkpoint = fleet.snapshot(slot)
+                except NotCheckpointable:
+                    job.checkpoint_disabled = True
+                else:
+                    job.checkpoint_round = self.round
+
+    def suspend_all(self) -> List[SweepJob]:
+        """Checkpoint and evict every running member across all domains
+        (pool restart) -- the per-domain analogue of
+        :meth:`FleetService.suspend_all`.  Suspended jobs requeue on their
+        own domain with ``faults="carry"`` and resume bit-exactly on
+        subsequent :meth:`step` calls; non-checkpointable members restart
+        via their factory or go terminal."""
+        out: List[SweepJob] = []
+        for d in range(self.n_domains):
+            fleet = self.fleets[d]
+            for slot in sorted(self._by_slot[d]):
+                job = self._by_slot[d][slot]
+                try:
+                    job.checkpoint = fleet.suspend(slot)
+                except NotCheckpointable:
+                    job.checkpoint_disabled = True
+                    m = fleet.members[slot]
+                    job.wasted_cycles += m.cluster.cycle
+                    self.health[d].wasted_cycles += m.cluster.cycle
+                    m.done = True
+                    fleet.free(slot)
+                    job.restore_pending = False
+                    factory = job.factory
+                    if job.degraded and job.fallback_factory is not None:
+                        factory = job.fallback_factory
+                    if factory is None:
+                        job.error = (
+                            "suspended: generator-backed program is not "
+                            "checkpointable and the job has no factory to "
+                            "rebuild from"
+                        )
+                        job.state = "failed"
+                        job.slot = None
+                        job.finished_round = self.round
+                        self.health[d].terminal_failures += 1
+                        self.finished.append(job)
+                        continue
+                    job.config = _fresh_traces(factory(job.attempts + 1))
+                else:
+                    job.checkpoint_round = self.round
+                    job.restore_pending = True
+                    job.resume_faults = "carry"
+                job.slot = None
+                self._enqueue(job, d)
+                out.append(job)
+            self._by_slot[d].clear()
+        return out
+
     # ------------------------------------------------------------- admission
     def _admit(self, d: int) -> None:
         if self.states[d] == QUARANTINED:
@@ -375,14 +477,25 @@ class FleetPool:
             if self.states[d] == PROBATION and self._by_slot[d]:
                 return  # probe mode: one job in flight
             job = queue.popleft()
-            cfg = job.config
-            if self.inject is not None:
-                cfg = self.inject(d, cfg)
-                job.config = cfg
-            slot = fleet.admit(cfg)
+            if job.restore_pending and job.checkpoint is not None:
+                # live migration / pool-restart resume: the checkpoint IS
+                # the job state; the inject hook (fresh-attempt chaos)
+                # does not apply
+                slot = fleet.restore(job.checkpoint, faults=job.resume_faults)
+                job.restore_pending = False
+                if job.resume_faults is None:
+                    job.resumed_attempt = True
+            else:
+                cfg = job.config
+                if self.inject is not None:
+                    cfg = self.inject(d, cfg)
+                    job.config = cfg
+                slot = fleet.admit(cfg)
+                job.resumed_attempt = False
             job.slot = slot
             job.state = "running"
             job.admitted_round = self.round
+            job.attempt_admitted_round = self.round
             self._by_slot[d][slot] = job
 
     # ------------------------------------------------------------ completion
@@ -393,19 +506,28 @@ class FleetPool:
         self.fleets[d].free(m.index)
         if m.error is not None:
             watchdog = m.error.startswith("watchdog tripped")
-            job.wasted_cycles += m.cluster.cycle
+            fail_cycle = m.cluster.cycle
             job.fault_log.append({
                 "attempt": job.attempts,
                 "round": self.round,
-                "cycles": m.cluster.cycle,
+                "cycles": fail_cycle,
                 "degraded": job.degraded,
                 "domain": d,
                 "watchdog": watchdog,
                 "error": m.error.splitlines()[0],
             })
-            self.health[d].record_failure(m.cluster.cycle, watchdog)
+            retried = self._maybe_retry(job)
+            # a checkpoint-resume redoes only the checkpoint -> failure
+            # tail; a restart redoes the whole attempt
+            resume_from = (
+                job.checkpoint.cycle
+                if retried and job.restore_pending else 0
+            )
+            waste = fail_cycle - resume_from
+            job.wasted_cycles += waste
+            self.health[d].record_failure(waste, watchdog)
             self._breaker_failure(d)
-            if self._maybe_retry(job):
+            if retried:
                 return []
             job.error = m.error
             job.state = "failed"
@@ -472,23 +594,37 @@ class FleetPool:
                     target = self._place(exclude=job.domain)
                     if target != job.domain:
                         self.reroutes += 1
+                        if job.restore_pending and job.checkpoint is not None:
+                            # checkpoint rides along: live migration
+                            self.migrations += 1
             self._enqueue(job, target)
         self._backoff = still
 
     def _maybe_retry(self, job: SweepJob) -> bool:
         """Identical backoff/degrade schedule to :class:`FleetService`;
-        the reroute decision is deferred to requeue time."""
+        the reroute decision is deferred to requeue time.  Prefers
+        resuming from the job's last checkpoint (faults stripped -- live
+        migration when the reroute picks a new domain); a checkpoint that
+        already backed one failed resume is poisoned and dropped."""
         r = self.retry
         if r is None or job.attempts >= r.max_attempts:
             return False
-        cfg = self._next_config(job)
-        if cfg is None:
-            return False
-        try:
-            self.fleets[0].validate(cfg)
-        except ValueError:
-            return False
-        job.config = cfg
+        if job.resumed_attempt:
+            job.checkpoint = None
+            job.checkpoint_round = None
+        if job.checkpoint is not None:
+            job.restore_pending = True
+            job.resume_faults = None  # the sick domain's plan stays behind
+        else:
+            job.restore_pending = False
+            cfg = self._next_config(job)
+            if cfg is None:
+                return False
+            try:
+                self.fleets[0].validate(cfg)
+            except ValueError:
+                return False
+            job.config = cfg
         job.slot = None
         job.state = "backoff"
         delay = r.backoff_rounds * (r.backoff_factor ** (job.attempts - 1))

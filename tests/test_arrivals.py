@@ -1,0 +1,92 @@
+"""Seedable arrival traces: determinism, distribution shape, validation."""
+
+import pytest
+
+from repro.serve.arrivals import bursty_trace, poisson_trace
+
+
+# ---------------------------------------------------------------------------
+# poisson_trace
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_is_seed_deterministic():
+    a = poisson_trace(0.05, 200, seed=42)
+    assert a == poisson_trace(0.05, 200, seed=42)
+    assert a != poisson_trace(0.05, 200, seed=43)
+
+
+def test_poisson_trace_shape_and_monotonicity():
+    t = poisson_trace(0.02, 150, seed=7)
+    assert len(t) == 150
+    assert all(isinstance(v, int) for v in t)
+    assert all(b >= a >= 0 for a, b in zip(t, t[1:]))
+
+
+def test_poisson_trace_mean_gap_tracks_rate():
+    """Empirical mean gap ~ 1/rate (floored exponential gaps, so the mean
+    sits just under 1/rate; a generous +-30% band keeps this seed-robust)."""
+    rate, n = 0.02, 2000
+    t = poisson_trace(rate, n, seed=3)
+    mean_gap = t[-1] / (n - 1)
+    assert 0.7 / rate < mean_gap < 1.3 / rate
+
+
+def test_poisson_trace_high_rate_degenerates_into_batches():
+    """rate >> 1 floors most gaps to zero: many same-round arrivals."""
+    t = poisson_trace(10.0, 100, seed=5)
+    assert len(set(t)) < len(t)
+
+
+def test_poisson_trace_edge_cases():
+    assert poisson_trace(0.1, 0, seed=0) == []
+    with pytest.raises(ValueError):
+        poisson_trace(0.0, 10, seed=0)
+    with pytest.raises(ValueError):
+        poisson_trace(-1.0, 10, seed=0)
+    with pytest.raises(ValueError):
+        poisson_trace(0.1, -1, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# bursty_trace
+# ---------------------------------------------------------------------------
+
+
+def test_bursty_trace_is_seed_deterministic():
+    a = bursty_trace(4, 8, 50, seed=11, jitter=5)
+    assert a == bursty_trace(4, 8, 50, seed=11, jitter=5)
+    assert a != bursty_trace(4, 8, 50, seed=12, jitter=5)
+
+
+def test_bursty_trace_shape_without_jitter():
+    """jitter=0 is fully deterministic regardless of seed: bursts of
+    identical timestamps exactly gap_rounds apart."""
+    t = bursty_trace(3, 4, 100, seed=0)
+    assert t == [0] * 4 + [100] * 4 + [200] * 4
+    assert t == bursty_trace(3, 4, 100, seed=999)
+
+
+def test_bursty_trace_jitter_stays_in_band_and_sorted():
+    n_bursts, burst, gap, jitter = 5, 6, 40, 7
+    t = bursty_trace(n_bursts, burst, gap, seed=21, jitter=jitter)
+    assert len(t) == n_bursts * burst
+    assert t == sorted(t)
+    # every arrival stays within its burst's jitter window
+    assert all(
+        any(b * gap <= v <= b * gap + jitter for b in range(n_bursts))
+        for v in t
+    )
+
+
+def test_bursty_trace_edge_cases():
+    assert bursty_trace(0, 5, 10, seed=0) == []
+    assert bursty_trace(5, 0, 10, seed=0) == []
+    with pytest.raises(ValueError):
+        bursty_trace(-1, 5, 10, seed=0)
+    with pytest.raises(ValueError):
+        bursty_trace(1, -5, 10, seed=0)
+    with pytest.raises(ValueError):
+        bursty_trace(1, 5, -10, seed=0)
+    with pytest.raises(ValueError):
+        bursty_trace(1, 5, 10, seed=0, jitter=-1)

@@ -48,7 +48,7 @@ def test_schema_requires_every_section(baseline):
         "table1", "table1_scaling", "fig5", "fig5_scaling", "table2",
         "chain", "chain_scaling", "work_queue", "work_queue_scaling",
         "engine_perf", "traffic", "resilience", "fault_domains",
-        "jax_barriers_ok",
+        "preemption", "jax_barriers_ok",
     ):
         broken = {k: v for k, v in baseline.items() if k != key}
         errors = bench_compare.validate_schema(broken)
@@ -211,6 +211,64 @@ def test_fault_domain_baseline_shows_routing_win(baseline):
     for c in clean.values():
         assert c["failure_rate"] == 0.0
         assert c["reroutes"] == 0 and c["quarantines"] == 0
+
+
+def test_schema_catches_preemption_drift(baseline):
+    broken = copy.deepcopy(baseline)
+    del broken["preemption"]["migration"]["migrate"]["wasted_cycles"]
+    assert any(
+        "wasted_cycles" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    del broken["preemption"]["schedule"]["preempt"]["hi_latency_rounds"]
+    assert any(
+        "hi_latency_rounds" in e for e in bench_compare.validate_schema(broken)
+    )
+
+    broken = copy.deepcopy(baseline)
+    broken["preemption"]["schedule"] = {}
+    assert any("schedule" in e for e in bench_compare.validate_schema(broken))
+
+
+def test_preemption_metrics_are_hard_gated(baseline):
+    """Migration wasted cycles and high-priority latency gate like cycle
+    counts; the zero wasted-cycles baseline of the preempting service
+    gates any increase absolutely."""
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["preemption"]["migration"]["migrate"]
+    cell["wasted_cycles"] = cell["wasted_cycles"] * 2
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("migrate/wasted_cycles" in r for r in regressions)
+
+    doctored = copy.deepcopy(baseline)
+    cell = doctored["preemption"]["schedule"]["preempt"]
+    cell["hi_latency_rounds"] = cell["hi_latency_rounds"] * 2
+    cell["wasted_cycles"] = 500  # preemption started burning victim cycles
+    regressions, _ = bench_compare.compare(baseline, doctored)
+    assert any("preempt/hi_latency_rounds" in r for r in regressions)
+    assert any("preempt/wasted_cycles" in r for r in regressions)
+
+
+def test_preemption_baseline_shows_checkpoint_win(baseline):
+    """The committed baseline must carry the measured claims: resuming
+    from a checkpoint wastes strictly fewer cycles than restart-reroute
+    on the same fault script, and the preempting service admits the
+    high-priority job with zero queue rounds and zero wasted victim
+    cycles while cutting its latency vs both fifo and non-preempting
+    priority order."""
+    mig = baseline["preemption"]["migration"]
+    assert mig["migrate"]["failure_rate"] == 0.0
+    assert mig["restart"]["failure_rate"] == 0.0
+    assert mig["migrate"]["migrations"] >= 1
+    assert mig["migrate"]["wasted_cycles"] < mig["restart"]["wasted_cycles"]
+    sched = baseline["preemption"]["schedule"]
+    assert sched["preempt"]["preemptions"] >= 1
+    assert sched["preempt"]["hi_queue_rounds"] == 0
+    assert sched["preempt"]["wasted_cycles"] == 0
+    assert (sched["preempt"]["hi_latency_rounds"]
+            < sched["priority"]["hi_latency_rounds"]
+            <= sched["fifo"]["hi_latency_rounds"])
 
 
 def test_schema_catches_chain_row_drift(baseline):
